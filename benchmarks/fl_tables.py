@@ -1,0 +1,132 @@
+"""Paper-table benchmarks (Tables I-IV) on synthetic stand-in datasets.
+
+Each function mirrors one paper table's experimental design at CPU scale:
+same algorithms, same partition schemes, same compute-budget matching
+(FedAvg E=5 vs FedSR E=1,R=5), reduced rounds/dataset size. The claims
+validated are ORDERINGS and GAPS, not absolute accuracies (synthetic data).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import FLConfig
+from repro.configs.registry import get_config
+from repro.core.executor import ExperimentResult, run_experiment
+
+MLP = get_config("fedsr-mlp")
+CNN = get_config("fedsr-cnn")
+
+
+def _fl(algorithm: str, *, partition: str, rounds: int, seed: int = 0,
+        **kw) -> FLConfig:
+    # compute-budget matching (paper §IV-D): star baselines use E=5;
+    # FedSR/HierFAVG/ring use E=1 with R=5 cluster iterations.
+    star = algorithm in ("fedavg", "fedprox", "moon", "scaffold",
+                         "centralized")
+    return FLConfig(
+        algorithm=algorithm,
+        num_devices=kw.pop("num_devices", 20),
+        num_edges=kw.pop("num_edges", 5),
+        local_epochs=5 if star else 1,
+        ring_rounds=1 if star else 5,
+        rounds=rounds,
+        partition=partition,
+        seed=seed,
+        **kw,
+    )
+
+
+def table1_ring_vs_fedavg(rounds: int = 12) -> List[dict]:
+    """Table I: ring-optimization vs FedAvg, iid and pathological xi=2,
+    10 devices, E=1 for both (the motivation experiment, §III-B)."""
+    rows = []
+    for partition in ("iid", "pathological"):
+        for algo in ("fedavg", "ring"):
+            fl = FLConfig(algorithm=algo, num_devices=10, num_edges=1,
+                          local_epochs=1, ring_rounds=1, rounds=rounds,
+                          partition=partition, xi=2)
+            t0 = time.time()
+            res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
+                                 eval_every=rounds)
+            rows.append({
+                "table": "I", "task": "mnist_like", "partition": partition,
+                "algorithm": algo, "accuracy": res.final_accuracy,
+                "seconds": time.time() - t0,
+            })
+    return rows
+
+
+def table2_accuracy(rounds: int = 12, task: str = "fashionmnist_like",
+                    algorithms: Optional[List[str]] = None) -> List[dict]:
+    """Table II: all algorithms across iid / pathological / dirichlet.
+
+    Default task is the 28x28 stand-in with the paper's MLP (CPU-budget:
+    the CNN/cifar10_like variant costs ~35 s/round on one core — pass
+    task="cifar10_like" for the full-fidelity version)."""
+    algorithms = algorithms or [
+        "centralized", "fedavg", "fedprox", "moon", "scaffold",
+        "hieravg", "ring", "fedsr",
+    ]
+    model = CNN if "cifar" in task else dataclasses.replace(
+        MLP, image_size=28, image_channels=1)
+    rows = []
+    for partition, kw in (
+        ("iid", {}),
+        ("pathological", {"xi": 2}),
+        ("dirichlet", {"alpha": 0.1}),
+    ):
+        for algo in algorithms:
+            fl = _fl(algo, partition=partition, rounds=rounds, **dict(kw))
+            t0 = time.time()
+            res = run_experiment(task=task, model_cfg=model, fl=fl,
+                                 eval_every=rounds)
+            rows.append({
+                "table": "II", "task": task, "partition": partition, **kw,
+                "algorithm": algo, "accuracy": res.final_accuracy,
+                "seconds": time.time() - t0,
+            })
+    return rows
+
+
+def table3_comm_cost(rounds: int = 15, target: float = 0.8) -> List[dict]:
+    """Table III: model transfers (units of M) to reach target accuracy
+    under pathological xi=2 — the communication-efficiency claim."""
+    rows = []
+    for algo in ("fedavg", "fedprox", "hieravg", "ring", "fedsr"):
+        fl = _fl(algo, partition="pathological", rounds=rounds, xi=2)
+        t0 = time.time()
+        res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
+                             eval_every=1)
+        rows.append({
+            "table": "III", "algorithm": algo, "target": target,
+            "transfers_to_target": res.comm_to_accuracy(target),
+            "cloud_transfers_total": res.history[-1].comm["cloud_transfers"],
+            "final_accuracy": res.final_accuracy,
+            "seconds": time.time() - t0,
+        })
+    return rows
+
+
+def table4_scalability(rounds: int = 8) -> List[dict]:
+    """Table IV: K=100 devices, partial participation 0.2/0.4, ring
+    clusters of 4 for FedSR."""
+    rows = []
+    for frac in (0.2, 0.4):
+        for algo in ("fedavg", "fedsr"):
+            fl = FLConfig(
+                algorithm=algo, num_devices=100, num_edges=25,
+                local_epochs=5 if algo == "fedavg" else 1,
+                ring_rounds=1 if algo == "fedavg" else 5,
+                rounds=rounds, partition="pathological", xi=2,
+                participation=frac,
+            )
+            t0 = time.time()
+            res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
+                                 eval_every=rounds)
+            rows.append({
+                "table": "IV", "participation": frac, "algorithm": algo,
+                "accuracy": res.final_accuracy, "seconds": time.time() - t0,
+            })
+    return rows

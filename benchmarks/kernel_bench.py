@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks: jitted reference ops on the host (wall time) +
+Pallas interpret-mode correctness spot checks. On TPU the Pallas path would
+replace the reference; interpret-mode timings are NOT hardware numbers and
+are excluded — the roofline report covers projected TPU performance."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn: Callable, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6     # us
+
+
+def bench_attention() -> Tuple[str, float, str]:
+    from repro.kernels.flash_attention.ref import attention_reference
+    rng = np.random.default_rng(0)
+    b, s, h, kv, hd = 1, 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kv, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kv, s, hd)), jnp.float32)
+    fn = jax.jit(lambda q, k, v: attention_reference(q, k, v, causal=True))
+    us = _time(fn, q, k, v)
+    flops = 4 * b * h * s * s * hd
+    return "attention_ref_512", us, f"{flops/(us*1e-6)/1e9:.1f}GFLOP/s"
+
+
+def bench_ssd() -> Tuple[str, float, str]:
+    from repro.kernels.ssd_scan.ref import ssd_reference
+    rng = np.random.default_rng(0)
+    b, l, h, p, n = 1, 512, 8, 64, 32
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(b, l, h)), jnp.float32)) + 0.01
+    a = -jnp.abs(jnp.asarray(rng.normal(size=(h,)), jnp.float32)) - 0.1
+    bm = jnp.asarray(rng.normal(size=(b, l, 1, n)) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, l, 1, n)) * 0.3, jnp.float32)
+    fn = jax.jit(lambda *xs: ssd_reference(*xs, chunk=128))
+    us = _time(fn, x, dt, a, bm, cm)
+    return "ssd_ref_512", us, "chunked-dual"
+
+
+def bench_fused_sgd() -> Tuple[str, float, str]:
+    """Fused (1 pass) vs unfused (3 passes) momentum update, jitted on CPU."""
+    n = 1 << 20
+    rng = np.random.default_rng(0)
+    p, g, m = (jnp.asarray(rng.normal(size=n), jnp.float32) for _ in range(3))
+
+    @jax.jit
+    def unfused(p, g, m):
+        m = 0.5 * m + g
+        return p - 0.01 * m, m
+
+    us = _time(unfused, p, g, m)
+    bytes_moved = 5 * 4 * n        # read p,g,m + write p,m
+    return "sgd_update_1M", us, f"{bytes_moved/(us*1e-6)/1e9:.1f}GB/s-effective"
+
+
+def bench_decode_attention() -> Tuple[str, float, str]:
+    from repro.kernels.decode_attention.ref import decode_attention_reference
+    rng = np.random.default_rng(0)
+    b, kv, g, t, hd = 4, 2, 4, 4096, 64
+    q = jnp.asarray(rng.normal(size=(b, kv, g, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kv, t, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kv, t, hd)), jnp.float32)
+    lengths = jnp.full((b,), t, jnp.int32)
+    fn = jax.jit(decode_attention_reference)
+    us = _time(fn, q, k, v, lengths)
+    bytes_ = 2 * b * kv * t * hd * 4
+    return "decode_attn_4k", us, f"{bytes_/(us*1e-6)/1e9:.1f}GB/s-effective"
+
+
+ALL = [bench_attention, bench_ssd, bench_fused_sgd, bench_decode_attention]

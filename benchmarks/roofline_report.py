@@ -1,0 +1,84 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def primary_step(rec: dict) -> tuple[str, dict] | None:
+    for name in ("train_step", "prefill_step", "serve_step"):
+        if name in rec.get("steps", {}):
+            return name, rec["steps"][name]
+    return None
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def roofline_table(recs: List[dict], mesh: str = "16x16") -> str:
+    rows = []
+    header = (
+        "| arch | shape | step | compute | memory | collective | dominant "
+        "| useful FLOP ratio | step est |"
+    )
+    rows.append(header)
+    rows.append("|---" * 9 + "|")
+    for rec in recs:
+        if rec["mesh"] != mesh or rec["status"] != "ok":
+            continue
+        ps = primary_step(rec)
+        if not ps:
+            continue
+        name, step = ps
+        r = step["roofline"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {name} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {fmt_s(r['step_time_s'])} |"
+        )
+    return "\n".join(rows)
+
+
+def dominant_summary(recs: List[dict], mesh: str = "16x16") -> Dict[str, list]:
+    out: Dict[str, list] = {}
+    for rec in recs:
+        if rec["mesh"] != mesh or rec["status"] != "ok":
+            continue
+        ps = primary_step(rec)
+        if not ps:
+            continue
+        _, step = ps
+        out.setdefault(step["roofline"]["dominant"], []).append(
+            (rec["arch"], rec["shape"]))
+    return out
+
+
+def main() -> None:
+    recs = load_records()
+    for mesh in ("16x16", "2x16x16"):
+        n_ok = sum(1 for r in recs if r["mesh"] == mesh and r["status"] == "ok")
+        print(f"\n== mesh {mesh}: {n_ok} combos OK ==")
+        print(roofline_table(recs, mesh))
+    print("\nDominant-term distribution (single pod):")
+    for k, v in dominant_summary(recs).items():
+        print(f"  {k}: {len(v)} pairs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Benchmark driver — one function per paper table + kernel micro-benches +
+the roofline report. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--rounds N] [--quick] [--full]
+  PYTHONPATH=src python -m benchmarks.run --only table1,kernels
+
+FL rows: us_per_call = wall time per FL round; derived = final accuracy (or
+transfers-to-target for Table III). Kernel rows: us_per_call = per-call
+time of the jitted reference op on this host. Roofline rows: us_per_call =
+projected TPU v5e step time from the dry-run; derived = dominant term.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def run_fl_tables(rounds: int, only: set) -> None:
+    from benchmarks import fl_tables
+
+    if "table1" in only:
+        for r in fl_tables.table1_ring_vs_fedavg(rounds=rounds):
+            _emit(
+                f"table1/{r['task']}/{r['partition']}/{r['algorithm']}",
+                r["seconds"] / rounds * 1e6,
+                f"acc={r['accuracy']:.4f}",
+            )
+    if "table2" in only:
+        for r in fl_tables.table2_accuracy(rounds=rounds):
+            _emit(
+                f"table2/{r['task']}/{r['partition']}/{r['algorithm']}",
+                r["seconds"] / rounds * 1e6,
+                f"acc={r['accuracy']:.4f}",
+            )
+    if "table3" in only:
+        for r in fl_tables.table3_comm_cost(rounds=max(rounds, 12)):
+            _emit(
+                f"table3/comm/{r['algorithm']}",
+                r["seconds"] / max(rounds, 12) * 1e6,
+                f"transfers_to_{r['target']:.0%}={r['transfers_to_target']}"
+                f";cloud={r['cloud_transfers_total']}"
+                f";acc={r['final_accuracy']:.4f}",
+            )
+    if "table4" in only:
+        for r in fl_tables.table4_scalability(rounds=max(rounds // 2, 4)):
+            _emit(
+                f"table4/scale100/frac{r['participation']}/{r['algorithm']}",
+                r["seconds"] / max(rounds // 2, 4) * 1e6,
+                f"acc={r['accuracy']:.4f}",
+            )
+
+
+def run_kernels() -> None:
+    from benchmarks.kernel_bench import ALL
+
+    for bench in ALL:
+        name, us, derived = bench()
+        _emit(f"kernel/{name}", us, derived)
+
+
+def run_roofline() -> None:
+    from benchmarks.roofline_report import load_records, primary_step
+
+    recs = load_records()
+    if not recs:
+        print("# roofline: no dry-run records found "
+              "(run: python -m repro.launch.dryrun)", file=sys.stderr)
+        return
+    for rec in recs:
+        if rec.get("status") != "ok" or rec["mesh"] != "16x16":
+            continue
+        ps = primary_step(rec)
+        if not ps:
+            continue
+        name, step = ps
+        r = step["roofline"]
+        _emit(
+            f"roofline/{rec['arch']}/{rec['shape']}/{name}",
+            r["step_time_s"] * 1e6,
+            f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}",
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10,
+                    help="FL rounds per benchmark run")
+    ap.add_argument("--only", default="table1,table2,table3,table4,kernels,roofline",
+                    help="comma-separated subset")
+    ap.add_argument("--quick", action="store_true",
+                    help="tables 1+3 + kernels + roofline only, fewer rounds")
+    args = ap.parse_args()
+
+    only = set(args.only.split(","))
+    rounds = args.rounds
+    if args.quick:
+        only &= {"table1", "table3", "kernels", "roofline"}
+        rounds = min(rounds, 6)
+
+    print("name,us_per_call,derived")
+    if "kernels" in only:
+        run_kernels()
+    if "roofline" in only:
+        run_roofline()
+    if only & {"table1", "table2", "table3", "table4"}:
+        run_fl_tables(rounds, only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: FedSR vs FedAvg on a non-IID synthetic image task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs ~1 minute on CPU. Demonstrates the paper's two claims:
+(1) FedSR tolerates pathological label skew far better than FedAvg;
+(2) FedSR's cloud only talks to M edge servers, not K devices.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.configs.base import FLConfig
+from repro.core.executor import run_experiment
+
+
+def main() -> None:
+    cfg = get_config("fedsr-mlp")
+    print("== FedSR quickstart: 20 devices, 5 edge servers, "
+          "pathological non-IID (xi=2) ==")
+    for algo, local_e, ring_r in [("fedavg", 5, 1), ("fedsr", 1, 5)]:
+        fl = FLConfig(
+            algorithm=algo, num_devices=20, num_edges=5, rounds=10,
+            partition="pathological", xi=2,
+            local_epochs=local_e, ring_rounds=ring_r,
+        )
+        res = run_experiment(task="mnist_like", model_cfg=cfg, fl=fl,
+                             eval_every=5, quiet=False)
+        comm = res.history[-1].comm
+        print(f"--> {algo:8s} final acc {res.final_accuracy:.4f} | "
+              f"cloud transfers {comm['cloud_transfers']} | "
+              f"P2P transfers {comm['p2p_transfers']}\n")
+
+
+if __name__ == "__main__":
+    main()

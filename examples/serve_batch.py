@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + cached decode on a reduced arch.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch yi-9b
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

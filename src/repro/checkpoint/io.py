@@ -1,0 +1,57 @@
+"""Msgpack pytree checkpointing (no orbax offline)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+Pytree = Any
+
+_SENTINEL = "__nd__"
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    return {
+        _SENTINEL: True,
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _encode(tree):
+    if isinstance(tree, dict):
+        return {str(k): _encode(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": [_encode(v) for v in tree],
+                "__tuple__": isinstance(tree, tuple)}
+    return _pack_leaf(tree)
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and obj.get(_SENTINEL):
+        arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+        return jnp.asarray(arr.reshape(obj["shape"]))
+    if isinstance(obj, dict) and "__seq__" in obj:
+        seq = [_decode(v) for v in obj["__seq__"]]
+        return tuple(seq) if obj["__tuple__"] else seq
+    if isinstance(obj, dict):
+        return {k: _decode(v) for k, v in obj.items()}
+    raise ValueError(f"cannot decode {type(obj)}")
+
+
+def save(path: str, tree: Pytree) -> None:
+    tree = jax.device_get(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(_encode(tree), use_bin_type=True))
+
+
+def restore(path: str) -> Pytree:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))

@@ -1,0 +1,182 @@
+"""Config dataclasses — the single source of truth consumed by models,
+sharding rules, the FL core, the launcher and the dry-run."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio | cnn | mlp
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0               # 0 -> d_model // num_heads
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1              # MoE FFN on layers where (l % moe_every == moe_offset)
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_grouped_dispatch: bool = False   # §Perf: per-batch-row capacity so
+                                         # expert compute shards over "data"
+    rolling_cache: bool = False          # §Perf: window-sized ring-buffer KV
+                                         # cache for sliding-window decode
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    ssd_intra_dtype: str = "float32"  # §Perf: "bfloat16" halves the bytes of
+                                      # the (nc,Q,Q,H) intra-chunk tensors
+                                      # (cumsum stays f32, flash-attn style)
+    # --- hybrid (Jamba): attention on layers where (l % attn_every == attn_offset)
+    attn_every: int = 0             # 0 -> attention on every layer (pure transformer)
+    attn_offset: int = 0
+    # --- attention options ---
+    sliding_window: int = 0         # 0 = full causal; >0 = window size
+    attn_block: int = 0             # §Perf: >0 = blockwise-causal attention
+                                    # (skips upper-triangle blocks — the
+                                    # XLA-level analogue of the Pallas flash
+                                    # kernel, ~2x flops/bytes on prefill)
+    rope_theta: float = 10_000.0
+    # --- inputs ---
+    input_mode: str = "tokens"      # tokens | embeds (vlm/audio frontends stubbed)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    scan_layers: bool = True        # False -> unrolled python loop (used by
+                                    # the differential cost analysis, which
+                                    # needs loop bodies visible to XLA cost
+                                    # counting)
+    # --- small models for the paper's own experiments ---
+    image_size: int = 28
+    image_channels: int = 1
+    num_classes: int = 10
+    mlp_hidden: Tuple[int, ...] = (200, 200)
+    cnn_channels: Tuple[int, ...] = (32, 64, 64)
+    source: str = ""                # citation for the config
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def attn_on_layer(self, layer: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.attn_every <= 0:
+            return True
+        return layer % self.attn_every == self.attn_offset
+
+    def moe_on_layer(self, layer: int) -> bool:
+        if self.num_experts <= 0:
+            return False
+        return layer % max(self.moe_every, 1) == self.moe_offset
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode over 500k context is sub-quadratic / windowed."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+    @property
+    def data_axis(self) -> str:
+        return "data"
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axis_names
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    """Hyper-parameters of Algorithm 1 and of all baselines (paper §IV-C/D)."""
+    algorithm: str = "fedsr"         # fedsr | fedavg | fedprox | moon | hieravg | ring | centralized
+    num_devices: int = 20            # K
+    num_edges: int = 5               # M (= number of ring clusters)
+    local_epochs: int = 1            # E
+    ring_rounds: int = 5             # R (laps of the ring per global round)
+    rounds: int = 50                 # global rounds T
+    participation: float = 1.0       # device sample fraction per round (Table IV)
+    partition: str = "iid"           # iid | pathological | dirichlet
+    xi: int = 2                      # pathological shards-per-device
+    alpha: float = 0.3               # dirichlet concentration
+    batch_size: int = 32
+    init_lr: float = 0.01
+    final_lr: float = 1e-5
+    momentum: float = 0.5
+    mu: float = 0.01                 # FedProx proximal / MOON contrastive coef
+    moon_tau: float = 0.5            # MOON temperature
+    seed: int = 0
+    reshuffle_ring: bool = True      # paper: edge server randomly re-rings each round
+
+    @property
+    def devices_per_edge(self) -> int:
+        assert self.num_devices % self.num_edges == 0
+        return self.num_devices // self.num_edges
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Large-architecture runtime knobs (train_4k & dry-run)."""
+    optimizer: str = "sgd"           # sgd (faithful FedSR client opt) | adamw
+    learning_rate: float = 0.01
+    momentum: float = 0.5
+    weight_decay: float = 0.0
+    remat: str = "none"              # none | full | selective
+    ring_mode: str = "pipelined"     # pipelined: Q incremental chains in
+                                     #   flight, ring hop = collective-permute
+                                     #   (the recorded baseline);
+                                     # serial: ONE chain, lax.scan over ring
+                                     #   positions inside the step — literal
+                                     #   Alg. 1 semantics, full pod per visit
+    cloud_sync_every: int = 5        # R: ring laps between cloud aggregations
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    fused_sgd: bool = False
+    hop_momentum: bool = True        # baseline: momentum travels with the
+                                     # model on the ring hop. §Perf variant:
+                                     # False = momentum stays device-local
+                                     # (paper Alg. 1 keeps optimizer state on
+                                     # the device) — halves ring traffic.

@@ -1,0 +1,12 @@
+# FedSR — the paper's primary contribution: ring-optimization (incremental
+# subgradient over a device ring) + semi-decentralized star-ring hierarchy.
+from repro.core.algorithms import ALGORITHMS, make_algorithm
+from repro.core.comm import CommMeter
+from repro.core.executor import ExperimentResult, RoundRecord, run_experiment
+from repro.core.local import LocalTrainer
+from repro.core.ring import ring_optimization
+
+__all__ = [
+    "ALGORITHMS", "CommMeter", "ExperimentResult", "LocalTrainer",
+    "RoundRecord", "make_algorithm", "ring_optimization", "run_experiment",
+]

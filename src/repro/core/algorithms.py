@@ -1,0 +1,244 @@
+"""All FL algorithms compared in the paper (§IV-B), one round each.
+
+Every algorithm exposes ``run_round(w_glob, round_idx, lr, rng, meter,
+state) -> (w_glob, state)`` over a shared roster of clients, so the
+executor and benchmarks treat them uniformly. ``state`` carries algorithm-
+private memory (MOON's previous local models).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.comm import CommMeter
+from repro.core.local import LocalTrainer
+from repro.core.ring import ring_optimization
+from repro.core.topology import assign_edges, clusters_of, sample_ring
+from repro.data.pipeline import ClientData
+from repro.utils.tree import tree_weighted_sum
+
+Pytree = Any
+
+
+class _Base:
+    variant = "plain"
+
+    def __init__(self, trainer: LocalTrainer, clients: List[ClientData], fl: FLConfig):
+        self.trainer = trainer
+        self.clients = clients
+        self.fl = fl
+        self.edges = assign_edges(fl.num_devices, fl.num_edges)
+
+    def _sample(self, rng: np.random.Generator) -> List[int]:
+        k = self.fl.num_devices
+        n = max(1, int(round(k * self.fl.participation)))
+        return sorted(rng.choice(k, size=n, replace=False).tolist())
+
+    def _weights(self, ids: List[int]) -> np.ndarray:
+        sizes = np.asarray([len(self.clients[i]) for i in ids], np.float64)
+        return sizes / sizes.sum()
+
+
+class FedAvg(_Base):
+    """McMahan et al. 2017 — the star baseline (paper Fig. 1)."""
+
+    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+        ids = self._sample(rng)
+        locals_, weights = [], self._weights(ids)
+        for i in ids:
+            meter.record("cloud_down")
+            w = self.trainer.train(
+                w_glob, self.clients[i], lr=lr,
+                epochs=self.fl.local_epochs, rng=rng, variant=self.variant,
+                **self._extra(w_glob, i, state),
+            )
+            locals_.append(w)
+            meter.record("cloud_up")
+            self._post(i, w, state)
+        return tree_weighted_sum(locals_, weights.tolist()), state
+
+    def _extra(self, w_glob, i, state) -> Dict:
+        return {}
+
+    def _post(self, i, w, state) -> None:
+        pass
+
+
+class FedProx(FedAvg):
+    """Li et al. 2020 — proximal term mu/2 ||w - w_glob||^2."""
+    variant = "prox"
+
+    def _extra(self, w_glob, i, state):
+        return {"anchor": w_glob}
+
+
+class Moon(FedAvg):
+    """Li et al. 2021 — model-contrastive loss. state["prev"][i] holds the
+    previous local model of client i (initialized to the global model)."""
+    variant = "moon"
+
+    def _extra(self, w_glob, i, state):
+        prev = state.setdefault("prev", {}).get(i, w_glob)
+        return {"w_glob": w_glob, "w_prev": prev}
+
+    def _post(self, i, w, state):
+        state.setdefault("prev", {})[i] = w
+
+
+class HierFAVG(_Base):
+    """Liu et al. 2020 — hierarchical FedAvg: R edge-level FedAvg iterations
+    per cloud round (matched compute budget with FedSR: same R)."""
+
+    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+        edge_models, edge_weights = [], []
+        for edge_devices in self.edges:
+            ids = sample_ring(edge_devices, rng,
+                              participation=self.fl.participation,
+                              reshuffle=False)
+            w_edge = w_glob
+            meter.record("cloud_down")
+            for _ in range(self.fl.ring_rounds):        # R edge iterations
+                locals_ = []
+                w = self._weights(ids)
+                for i in ids:
+                    meter.record("edge_down")
+                    locals_.append(self.trainer.train(
+                        w_edge, self.clients[i], lr=lr,
+                        epochs=self.fl.local_epochs, rng=rng))
+                    meter.record("edge_up")
+                w_edge = tree_weighted_sum(locals_, w.tolist())
+            edge_models.append(w_edge)
+            edge_weights.append(sum(len(self.clients[i]) for i in ids))
+            meter.record("cloud_up")
+        total = float(sum(edge_weights))
+        return tree_weighted_sum(edge_models, [w / total for w in edge_weights]), state
+
+
+class RingOptimization(_Base):
+    """Paper §III-B standalone baseline: ONE global ring over all sampled
+    devices, R laps per round; no cloud aggregation inside the ring."""
+
+    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+        ids = self._sample(rng)
+        ring_ids = list(ids)
+        if self.fl.reshuffle_ring:
+            rng.shuffle(ring_ids)
+        meter.record("cloud_down")                      # seed the first device
+        w = ring_optimization(
+            self.trainer, w_glob, [self.clients[i] for i in ring_ids],
+            lr=lr, laps=self.fl.ring_rounds,
+            local_epochs=self.fl.local_epochs, rng=rng, meter=meter,
+        )
+        meter.record("cloud_up")                        # readout
+        return w, state
+
+
+class FedSR(_Base):
+    """Algorithm 1 — semi-decentralized star-ring.
+
+    Each edge server rings its sampled devices (clusters of
+    ``devices_per_edge``; with partial participation, clusters of the same
+    size are formed from the sampled pool, Table IV style), runs
+    ring-optimization for R laps, and the cloud aggregates the M edge models
+    weighted by |D_m|/|D| (eq. 11)."""
+
+    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+        if self.fl.participation >= 1.0:
+            rings = [
+                sample_ring(e, rng, reshuffle=self.fl.reshuffle_ring)
+                for e in self.edges
+            ]
+        else:
+            ids = self._sample(rng)
+            rings = clusters_of(ids, self.fl.devices_per_edge, rng)
+        edge_models, sizes = [], []
+        for ring_ids in rings:
+            meter.record("cloud_down")                  # w_glob -> edge
+            w = ring_optimization(
+                self.trainer, w_glob, [self.clients[i] for i in ring_ids],
+                lr=lr, laps=self.fl.ring_rounds,
+                local_epochs=self.fl.local_epochs, rng=rng, meter=meter,
+            )
+            meter.record("cloud_up")                    # edge model -> cloud
+            edge_models.append(w)
+            sizes.append(sum(len(self.clients[i]) for i in ring_ids))
+        total = float(sum(sizes))
+        return tree_weighted_sum(edge_models, [s / total for s in sizes]), state
+
+
+class Scaffold(_Base):
+    """Karimireddy et al. 2020 — stochastic controlled averaging. The paper
+    cites SCAFFOLD [11] as the canonical variance-reduction answer to client
+    drift; included as an extra baseline beyond the paper's own table.
+
+    state["c"] = server control variate; state["ci"][i] = client i's.
+    Option II update for c_i: c_i+ = c_i - c + (w_glob - w_i)/(K_i * lr).
+    """
+
+    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+        from repro.utils.tree import tree_scale, tree_sub, tree_zeros_like
+
+        c = state.setdefault("c", tree_zeros_like(w_glob))
+        ci_map = state.setdefault("ci", {})
+        ids = self._sample(rng)
+        weights = self._weights(ids)
+        locals_, delta_cs = [], []
+        for i in ids:
+            ci = ci_map.get(i, tree_zeros_like(w_glob))
+            meter.record("cloud_down", 2)            # model + c
+            w = self.trainer.train(
+                w_glob, self.clients[i], lr=lr,
+                epochs=self.fl.local_epochs, rng=rng, variant="scaffold",
+                c_glob=c, c_local=ci,
+            )
+            steps = max(self.trainer.last_steps, 1)
+            ci_new = jax.tree.map(
+                lambda cio, co, wg, wi: cio - co + (wg - wi) / (steps * lr),
+                ci, c, w_glob, w,
+            )
+            delta_cs.append(tree_sub(ci_new, ci))
+            ci_map[i] = ci_new
+            locals_.append(w)
+            meter.record("cloud_up", 2)              # model + delta c
+        new_w = tree_weighted_sum(locals_, weights.tolist())
+        # c += (participants/K) * mean(delta_c)
+        mean_dc = tree_weighted_sum(
+            delta_cs, [1.0 / len(delta_cs)] * len(delta_cs))
+        frac = len(ids) / self.fl.num_devices
+        state["c"] = jax.tree.map(lambda a, b: a + frac * b, c, mean_dc)
+        return new_w, state
+
+
+class Centralized(_Base):
+    """Upper-bound reference: pooled-data SGD (paper's 'Centralized' rows)."""
+
+    def __init__(self, trainer, clients, fl):
+        super().__init__(trainer, clients, fl)
+        images = np.concatenate([c.images for c in clients])
+        labels = np.concatenate([c.labels for c in clients])
+        self.pool = ClientData(-1, images, labels)
+
+    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+        w = self.trainer.train(w_glob, self.pool, lr=lr,
+                               epochs=self.fl.local_epochs, rng=rng)
+        return w, state
+
+
+ALGORITHMS = {
+    "fedavg": FedAvg,
+    "fedprox": FedProx,
+    "moon": Moon,
+    "hieravg": HierFAVG,
+    "ring": RingOptimization,
+    "fedsr": FedSR,
+    "scaffold": Scaffold,
+    "centralized": Centralized,
+}
+
+
+def make_algorithm(name: str, trainer: LocalTrainer,
+                   clients: List[ClientData], fl: FLConfig):
+    return ALGORITHMS[name](trainer, clients, fl)

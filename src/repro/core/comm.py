@@ -1,0 +1,46 @@
+"""Communication accounting (paper Table III).
+
+All quantities are counted in units of **M** — one full model transfer —
+exactly as the paper reports them, with byte totals derived from the param
+count. Channels are tracked separately so the semi-decentralized claim
+(cloud sees M edge models, not K device models) is directly observable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class CommMeter:
+    model_bytes: int = 0
+    cloud_up: int = 0       # edge/device -> cloud
+    cloud_down: int = 0     # cloud -> edge/device
+    edge_up: int = 0        # device -> edge server
+    edge_down: int = 0      # edge server -> device
+    p2p: int = 0            # device -> device (ring hop)
+
+    def record(self, channel: str, count: int = 1) -> None:
+        setattr(self, channel, getattr(self, channel) + count)
+
+    @property
+    def total_transfers(self) -> int:
+        return (self.cloud_up + self.cloud_down + self.edge_up
+                + self.edge_down + self.p2p)
+
+    @property
+    def cloud_transfers(self) -> int:
+        return self.cloud_up + self.cloud_down
+
+    @property
+    def total_bytes(self) -> int:
+        return self.total_transfers * self.model_bytes
+
+    def snapshot(self) -> Dict[str, int]:
+        return {
+            "total_transfers": self.total_transfers,
+            "cloud_transfers": self.cloud_transfers,
+            "p2p_transfers": self.p2p,
+            "edge_transfers": self.edge_up + self.edge_down,
+            "total_bytes": self.total_bytes,
+        }

@@ -1,0 +1,157 @@
+"""FL experiment executor: dataset -> partition -> T rounds -> history.
+
+This is the engine behind every paper table (benchmarks/) and the FL
+integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.algorithms import make_algorithm
+from repro.core.comm import CommMeter
+from repro.core.local import LocalTrainer
+from repro.data.pipeline import make_clients
+from repro.data.synthetic import Dataset, make_task
+from repro.models.small import classifier_accuracy, init_small_model
+from repro.optim.schedules import cosine_decay
+from repro.utils.tree import tree_bytes
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    accuracy: float
+    comm: Dict[str, int]
+    lr: float
+    seconds: float
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    algorithm: str
+    task: str
+    partition: str
+    history: List[RoundRecord]
+
+    @property
+    def final_accuracy(self) -> float:
+        return self.history[-1].accuracy if self.history else float("nan")
+
+    def rounds_to_accuracy(self, target: float) -> Optional[int]:
+        for rec in self.history:
+            if rec.accuracy >= target:
+                return rec.round
+        return None
+
+    def comm_to_accuracy(self, target: float) -> Optional[int]:
+        """Total model transfers when target accuracy is first hit (Table III)."""
+        for rec in self.history:
+            if rec.accuracy >= target:
+                return rec.comm["total_transfers"]
+        return None
+
+
+def run_experiment(
+    *,
+    task: str,
+    model_cfg: ModelConfig,
+    fl: FLConfig,
+    eval_every: int = 1,
+    train: Optional[Dataset] = None,
+    test: Optional[Dataset] = None,
+    quiet: bool = True,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
+    stop_after: Optional[int] = None,   # simulate interruption after round N
+) -> ExperimentResult:
+    if train is None or test is None:
+        train, test = make_task(task, seed=fl.seed)
+    rng = np.random.default_rng(fl.seed)
+    clients = make_clients(
+        train, scheme=fl.partition, num_devices=fl.num_devices,
+        rng=rng, xi=fl.xi, alpha=fl.alpha,
+    )
+    trainer = LocalTrainer(model_cfg, fl)
+    w_glob = init_small_model(jax.random.PRNGKey(fl.seed), model_cfg)
+    algo = make_algorithm(fl.algorithm, trainer, clients, fl)
+    meter = CommMeter(model_bytes=tree_bytes(w_glob))
+    lr_fn = cosine_decay(fl.init_lr, fl.final_lr, fl.rounds)
+    state: Dict = {}
+    start_round = 0
+
+    if resume and checkpoint_dir:
+        ck = _restore_checkpoint(checkpoint_dir)
+        if ck is not None:
+            w_glob = ck["w_glob"]
+            start_round = int(ck["round"])
+            rng.bit_generator.state = ck["rng_state"]
+            for k, v in ck["comm"].items():
+                setattr(meter, k, int(v))
+
+    test_images = jnp.asarray(test.images)
+    test_labels = jnp.asarray(test.labels)
+    acc_fn = jax.jit(lambda p: classifier_accuracy(p, test_images, test_labels, model_cfg))
+
+    history: List[RoundRecord] = []
+    for t in range(start_round, fl.rounds):
+        t0 = time.time()
+        lr = float(lr_fn(t))
+        w_glob, state = algo.run_round(w_glob, t, lr, rng, meter, state)
+        if (t + 1) % eval_every == 0 or t == fl.rounds - 1:
+            acc = float(acc_fn(w_glob))
+            history.append(RoundRecord(
+                round=t + 1, accuracy=acc, comm=meter.snapshot(),
+                lr=lr, seconds=time.time() - t0,
+            ))
+            if not quiet:
+                print(f"  [{fl.algorithm:>12}] round {t+1:>3} "
+                      f"acc={acc:.4f} lr={lr:.5f} "
+                      f"transfers={meter.total_transfers}")
+        if checkpoint_dir and checkpoint_every and (t + 1) % checkpoint_every == 0:
+            _save_checkpoint(checkpoint_dir, w_glob, t + 1, rng, meter)
+        if stop_after is not None and (t + 1) >= stop_after:
+            break
+    return ExperimentResult(fl.algorithm, task, fl.partition, history)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume (exact: model + round + numpy RNG + comm counters)
+
+
+def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter):
+    import json as _json
+    import os as _os
+
+    from repro.checkpoint.io import save as _save
+
+    _os.makedirs(ckdir, exist_ok=True)
+    _save(f"{ckdir}/model.msgpack", w_glob)
+    comm = {f: int(getattr(meter, f)) for f in
+            ("model_bytes", "cloud_up", "cloud_down", "edge_up",
+             "edge_down", "p2p")}
+    with open(f"{ckdir}/state.json", "w") as f:
+        _json.dump({"round": round_, "rng_state": rng.bit_generator.state,
+                    "comm": comm}, f)
+
+
+def _restore_checkpoint(ckdir: str):
+    import json as _json
+    import os as _os
+
+    from repro.checkpoint.io import restore as _restore
+
+    if not _os.path.exists(f"{ckdir}/state.json"):
+        return None
+    with open(f"{ckdir}/state.json") as f:
+        meta = _json.load(f)
+    return {"w_glob": _restore(f"{ckdir}/model.msgpack"), **meta}

@@ -1,0 +1,128 @@
+"""Shared local-training engine for every FL algorithm.
+
+One jitted SGD step per loss variant (plain / prox / moon); all algorithms
+reuse these, so accuracy differences between algorithms come from the
+*aggregation schedule*, never from divergent local implementations. Momentum
+is reset at the start of each client visit (the model hops between devices;
+optimizer state does not travel with it).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.models.small import classifier_loss, small_model_features
+from repro.utils.tree import tree_sq_norm, tree_sub
+
+Pytree = Any
+
+
+def _sgd_momentum_step(loss_fn, params, mom, batch, lr, momentum, *loss_args):
+    grads = jax.grad(loss_fn)(params, batch, *loss_args)
+    mom = jax.tree.map(lambda m, g: momentum * m + g, mom, grads)
+    params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+    return params, mom
+
+
+class LocalTrainer:
+    """Builds and caches the jitted local steps for one (model, FL) config."""
+
+    def __init__(self, cfg: ModelConfig, fl: FLConfig):
+        self.cfg = cfg
+        self.fl = fl
+
+        def plain_loss(params, batch):
+            return classifier_loss(params, batch, cfg)
+
+        def prox_loss(params, batch, anchor):
+            # FedProx: + mu/2 ||w - w_glob||^2
+            prox = 0.5 * fl.mu * tree_sq_norm(tree_sub(params, anchor))
+            return classifier_loss(params, batch, cfg) + prox
+
+        def moon_loss(params, batch, w_glob, w_prev):
+            # MOON: model-contrastive loss against global (positive) and
+            # previous-local (negative) representations.
+            z = small_model_features(params, batch["images"], cfg)
+            z_g = jax.lax.stop_gradient(
+                small_model_features(w_glob, batch["images"], cfg))
+            z_p = jax.lax.stop_gradient(
+                small_model_features(w_prev, batch["images"], cfg))
+
+            def cos(a, b):
+                a = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-8)
+                b = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-8)
+                return jnp.sum(a * b, axis=-1)
+
+            pos = cos(z, z_g) / fl.moon_tau
+            neg = cos(z, z_p) / fl.moon_tau
+            con = -jnp.mean(pos - jnp.logaddexp(pos, neg))
+            return classifier_loss(params, batch, cfg) + fl.mu * con
+
+        mom = fl.momentum
+
+        @jax.jit
+        def plain_step(params, m, batch, lr):
+            return _sgd_momentum_step(plain_loss, params, m, batch, lr, mom)
+
+        @jax.jit
+        def prox_step(params, m, batch, lr, anchor):
+            return _sgd_momentum_step(prox_loss, params, m, batch, lr, mom, anchor)
+
+        @jax.jit
+        def moon_step(params, m, batch, lr, w_glob, w_prev):
+            return _sgd_momentum_step(
+                moon_loss, params, m, batch, lr, mom, w_glob, w_prev)
+
+        @jax.jit
+        def scaffold_step(params, m, batch, lr, c_glob, c_local):
+            # SCAFFOLD (Karimireddy et al. 2020): drift-corrected gradient
+            # g + c - c_i (momentum-free, as in the paper's Algorithm 1)
+            grads = jax.grad(plain_loss)(params, batch)
+            corr = jax.tree.map(lambda g, c, ci: g + c - ci,
+                                grads, c_glob, c_local)
+            params = jax.tree.map(lambda p, d: p - lr * d, params, corr)
+            return params, m
+
+        self._plain, self._prox, self._moon = plain_step, prox_step, moon_step
+        self._scaffold = scaffold_step
+
+    # ------------------------------------------------------------------
+    def train(
+        self,
+        params: Pytree,
+        client,
+        *,
+        lr: float,
+        epochs: int,
+        rng: np.random.Generator,
+        variant: str = "plain",
+        anchor: Optional[Pytree] = None,
+        w_glob: Optional[Pytree] = None,
+        w_prev: Optional[Pytree] = None,
+        c_glob: Optional[Pytree] = None,
+        c_local: Optional[Pytree] = None,
+    ) -> Pytree:
+        mom = jax.tree.map(jnp.zeros_like, params)
+        lr = jnp.asarray(lr, jnp.float32)
+        self.last_steps = 0
+        for _ in range(epochs):
+            for batch in client.epoch_batches(self.fl.batch_size, rng):
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                if variant == "plain":
+                    params, mom = self._plain(params, mom, batch, lr)
+                elif variant == "prox":
+                    params, mom = self._prox(params, mom, batch, lr, anchor)
+                elif variant == "moon":
+                    params, mom = self._moon(params, mom, batch, lr, w_glob, w_prev)
+                elif variant == "scaffold":
+                    params, mom = self._scaffold(params, mom, batch, lr,
+                                                 c_glob, c_local)
+                else:
+                    raise ValueError(variant)
+                self.last_steps += 1
+        return params

@@ -1,0 +1,39 @@
+"""ring-optimization (paper §III-B, eq. 6-7) — the incremental subgradient
+pass over a ring of clients. This is both a standalone baseline (Table I) and
+the inner loop of FedSR's ring clusters (Algorithm 1).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import numpy as np
+
+from repro.core.comm import CommMeter
+from repro.core.local import LocalTrainer
+
+Pytree = Any
+
+
+def ring_optimization(
+    trainer: LocalTrainer,
+    w: Pytree,
+    ring: Sequence,                 # ordered ClientData of this ring
+    *,
+    lr: float,
+    laps: int,                      # R in Algorithm 1
+    local_epochs: int,              # E
+    rng: np.random.Generator,
+    meter: CommMeter | None = None,
+) -> Pytree:
+    """Faithful Algorithm 1 inner loop: the model hops device->device,
+    each visit = ``local_epochs`` SGD epochs on that device's private shard.
+    Returns the last device's weights (eq. 7: w_{t+1} = z_t^{P_K})."""
+    for _ in range(laps):
+        for i, client in enumerate(ring):
+            w = trainer.train(w, client, lr=lr, epochs=local_epochs, rng=rng)
+            if meter is not None and (i < len(ring) - 1):
+                meter.record("p2p")     # hop to the next device
+        # closing the lap: last device sends back to the first (next lap)
+        if meter is not None and laps > 1:
+            meter.record("p2p")
+    return w

@@ -1,0 +1,14 @@
+from repro.data.partition import (
+    dirichlet_partition,
+    iid_partition,
+    partition,
+    pathological_partition,
+)
+from repro.data.pipeline import ClientData, client_weights, make_clients
+from repro.data.synthetic import Dataset, make_image_dataset, make_task, make_token_stream
+
+__all__ = [
+    "ClientData", "Dataset", "client_weights", "dirichlet_partition",
+    "iid_partition", "make_clients", "make_image_dataset", "make_task",
+    "make_token_stream", "partition", "pathological_partition",
+]

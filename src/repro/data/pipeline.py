@@ -1,0 +1,60 @@
+"""Per-client data pipeline for the FL simulator."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List
+
+import numpy as np
+
+from repro.data.partition import partition
+from repro.data.synthetic import Dataset
+
+
+@dataclasses.dataclass
+class ClientData:
+    """One FL device's private shard."""
+    client_id: int
+    images: np.ndarray
+    labels: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+    def epoch_batches(
+        self, batch_size: int, rng: np.random.Generator
+    ) -> Iterator[dict]:
+        """One shuffled epoch of full batches (wrap-around padding so every
+        batch has a static shape — keeps the jitted train step cache warm)."""
+        n = len(self)
+        num_batches = max(1, int(np.ceil(n / batch_size)))
+        idx = rng.permutation(n)
+        if num_batches * batch_size > n:
+            extra = rng.integers(0, n, size=num_batches * batch_size - n)
+            idx = np.concatenate([idx, extra])
+        for b in range(num_batches):
+            sl = idx[b * batch_size : (b + 1) * batch_size]
+            yield {"images": self.images[sl], "labels": self.labels[sl]}
+
+
+def make_clients(
+    train: Dataset,
+    *,
+    scheme: str,
+    num_devices: int,
+    rng: np.random.Generator,
+    xi: int = 2,
+    alpha: float = 0.3,
+) -> List[ClientData]:
+    parts = partition(
+        train.labels, scheme=scheme, k=num_devices, rng=rng, xi=xi, alpha=alpha
+    )
+    return [
+        ClientData(d, train.images[p], train.labels[p])
+        for d, p in enumerate(parts)
+    ]
+
+
+def client_weights(clients: List[ClientData]) -> np.ndarray:
+    """|D_i| / |D| weights used by every aggregation rule in the paper."""
+    sizes = np.asarray([len(c) for c in clients], np.float64)
+    return sizes / sizes.sum()

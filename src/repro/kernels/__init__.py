@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the framework's compute hot spots. Each kernel
+# directory ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+# ops.py (jit'd public wrapper), ref.py (pure-jnp oracle checked in tests):
+#   flash_attention/  blockwise causal GQA attention (train / prefill)
+#   decode_attention/ flash-decoding over long KV caches (serve_step)
+#   ssd_scan/         Mamba2 SSD chunked scan (sequential-chunk grid + VMEM state)
+#   fused_sgd/        fused momentum-SGD update (the FL ring-hop inner update)

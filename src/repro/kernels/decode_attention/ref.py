@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-query decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_reference(
+    q: jax.Array,          # (B, KV, G, hd)
+    k: jax.Array,          # (B, KV, T, hd)
+    v: jax.Array,          # (B, KV, T, hd)
+    lengths: jax.Array,    # (B,) int32
+    *,
+    window: int = 0,
+) -> jax.Array:
+    hd = q.shape[-1]
+    t = k.shape[2]
+    s = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    cols = jnp.arange(t)[None, :]
+    valid = cols < lengths[:, None]
+    if window > 0:
+        valid &= cols >= jnp.maximum(lengths[:, None] - window, 0)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)

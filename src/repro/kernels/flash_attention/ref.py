@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: full-materialization causal GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,          # (B, H, Sq, hd)
+    k: jax.Array,          # (B, KV, T, hd)
+    v: jax.Array,          # (B, KV, T, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    b, h, sq, hd = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, kv, g, sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) / (hd ** 0.5)
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(t)[None, :]
+    mask = jnp.ones((sq, t), bool)
+    if causal:
+        mask &= rows >= cols
+    if window > 0:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return out.reshape(b, h, sq, hd).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.fused_sgd.ops import fused_sgd_update
+
+__all__ = ["fused_sgd_update"]

@@ -1,0 +1,67 @@
+"""Fused momentum-SGD update — Pallas TPU kernel.
+
+The FL inner loop (ring hop) applies `m = mu*m + g; p = p - lr*d` to every
+parameter after every batch. Unfused this is 3 HBM-bound passes (read p/g/m,
+write m, write p); the fused kernel does one read of (p, g, m) and one write
+of (p, m) per VMEM tile — the minimal memory traffic for the update, which
+is exactly the dominant roofline term of the FL client step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# one VMEM tile: 8 sublanes x 128 lanes is the float32 native tile; we use a
+# larger multiple to amortize grid overhead. 64k f32 elements = 256 KiB/input.
+BLOCK = 65_536
+
+
+def _fused_sgd_kernel(p_ref, g_ref, m_ref, lr_ref, p_out_ref, m_out_ref, *,
+                      momentum: float, nesterov: bool):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    lr = lr_ref[0]
+    m_new = momentum * m + g
+    d = g + momentum * m_new if nesterov else m_new
+    p_out_ref[...] = p - lr * d
+    m_out_ref[...] = m_new
+
+
+def fused_sgd_flat(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    lr: jax.Array,
+    *,
+    momentum: float,
+    nesterov: bool = False,
+    block: int = BLOCK,
+    interpret: bool = False,
+):
+    """p, g, m: flat (N,) arrays with N % block == 0. lr: (1,) array."""
+    assert p.ndim == 1 and p.shape == g.shape == m.shape
+    n = p.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    kernel = functools.partial(
+        _fused_sgd_kernel, momentum=momentum, nesterov=nesterov
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            spec, spec, spec,
+            pl.BlockSpec((1,), lambda i: (0,)),     # lr scalar, same for every tile
+        ],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+        ],
+        interpret=interpret,
+    )(p, g, m, lr)

@@ -1,0 +1,43 @@
+"""Jit'd public wrapper: arbitrary-shape params -> padded flat tiles."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_sgd.kernel import BLOCK, fused_sgd_flat
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("momentum", "nesterov", "block", "interpret")
+)
+def fused_sgd_update(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    *,
+    lr,
+    momentum: float,
+    nesterov: bool = False,
+    block: int = BLOCK,
+    interpret: bool | None = None,
+):
+    """Returns (new_p, new_m) for one parameter tensor of any shape."""
+    if interpret is None:
+        interpret = _default_interpret()
+    shape = p.shape
+    n = p.size
+    pad = (-n) % block
+    flat = lambda x: jnp.pad(x.reshape(-1), (0, pad))
+    lr_arr = jnp.asarray(lr, p.dtype).reshape(1)
+    p_new, m_new = fused_sgd_flat(
+        flat(p), flat(g), flat(m), lr_arr,
+        momentum=momentum, nesterov=nesterov, block=block, interpret=interpret,
+    )
+    unflat = lambda x: x[:n].reshape(shape)
+    return unflat(p_new), unflat(m_new)

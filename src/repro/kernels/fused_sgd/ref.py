@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused momentum-SGD update."""
+from __future__ import annotations
+
+import jax
+
+
+def sgd_reference(p, g, m, lr, *, momentum: float, nesterov: bool = False):
+    m_new = momentum * m + g
+    d = g + momentum * m_new if nesterov else m_new
+    return p - lr * d, m_new

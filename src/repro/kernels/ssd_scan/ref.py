@@ -1,0 +1,125 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) chunked scan.
+
+Computes, for each head independently,
+
+    y_i = sum_{j <= i} C_i^T ( prod_{j < r <= i} exp(dt_r A) ) B_j x_j dt_j
+
+i.e. a linear recurrence  S_i = exp(dt_i A) S_{i-1} + dt_i B_i x_i^T,
+y_i = C_i^T S_i, evaluated in the chunked dual form of arXiv:2405.21060:
+quadratic attention-like matmuls inside chunks (MXU-friendly) + a scan over
+chunk states. This file is the correctness oracle for the Pallas kernel in
+``kernel.py`` and the reference path used by the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ssd_reference(
+    x: jax.Array,       # (B, L, H, P)  inputs per head
+    dt: jax.Array,      # (B, L, H)     positive step sizes
+    a: jax.Array,       # (H,)          negative decay rates (A = -exp(A_log))
+    b_mat: jax.Array,   # (B, L, G, N)  input projections (G groups, GQA-style)
+    c_mat: jax.Array,   # (B, L, G, N)  output projections
+    chunk: int = 128,
+    intra_dtype=jnp.float32,   # §Perf: bf16 halves intra-chunk tensor bytes
+) -> jax.Array:
+    """Returns y: (B, L, H, P). Sequence length must be divisible by chunk."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    if l % chunk != 0:
+        # pad the tail chunk; padded steps use dt=0 (identity decay, no input)
+        pad = chunk - l % chunk
+        y = ssd_reference(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            a,
+            jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            chunk,
+            intra_dtype,
+        )
+        return y[:, :l]
+    nc, q = l // chunk, chunk
+    rep = h // g
+
+    f32 = jnp.float32
+    x_ = x.reshape(bsz, nc, q, h, p).astype(f32)
+    dt_ = dt.reshape(bsz, nc, q, h).astype(f32)
+    b_ = b_mat.reshape(bsz, nc, q, g, n).astype(f32)
+    c_ = c_mat.reshape(bsz, nc, q, g, n).astype(f32)
+
+    da = dt_ * a.astype(f32)                      # (b,nc,q,h), negative
+    cs = jnp.cumsum(da, axis=2)                   # within-chunk cumulative decay
+
+    # --- intra-chunk (dual quadratic form) --------------------------------
+    # decay(i,j) = exp(cs_i - cs_j) for i >= j
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]          # (b,nc,qi,qj,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(mask[None, None, :, :, None], seg, NEG_INF)
+    decay = jnp.exp(seg).astype(intra_dtype)
+
+    # scores_{i,j,h} = C_i . B_j  with head groups expanded
+    cb = jnp.einsum("bcign,bcjgn->bcijg", c_, b_).astype(intra_dtype)
+    cb = jnp.repeat(cb, rep, axis=-1)                          # (b,nc,qi,qj,h)
+    att = cb * decay * dt_[:, :, None, :, :].astype(intra_dtype)
+    y_intra = jnp.einsum(
+        "bcijh,bcjhp->bcihp", att, x_.astype(intra_dtype)
+    ).astype(f32)
+
+    # --- chunk summary states --------------------------------------------
+    # state_c = sum_j exp(cs_last - cs_j) dt_j B_j x_j^T : (b,nc,h,n,p)
+    last = cs[:, :, -1:, :]                                    # (b,nc,1,h)
+    w = jnp.exp(last - cs) * dt_                               # (b,nc,q,h)
+    b_exp = jnp.repeat(b_, rep, axis=3)                        # (b,nc,q,h,n)
+    state = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w, b_exp, x_)
+
+    # --- inter-chunk recurrence  S_{c} = exp(sum da_c) S_{c-1} + state_c ---
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                     # (b,nc,h)
+
+    def scan_fn(s_prev, inp):
+        dec, st = inp                                          # (b,h), (b,h,n,p)
+        s_new = dec[:, :, None, None] * s_prev + st
+        return s_new, s_prev                                   # emit state BEFORE chunk
+
+    s0 = jnp.zeros((bsz, h, n, p), f32)
+    _, s_before = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(state, 1, 0)),
+    )
+    s_before = jnp.moveaxis(s_before, 0, 1)                    # (b,nc,h,n,p)
+
+    # --- inter-chunk contribution  y_i += exp(cs_i) C_i . S_before --------
+    c_exp = jnp.repeat(c_, rep, axis=3)                        # (b,nc,q,h,n)
+    y_inter = jnp.einsum(
+        "bcqh,bcqhn,bchnp->bcqhp", jnp.exp(cs), c_exp, s_before
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(
+    state: jax.Array,   # (B, H, N, P) running SSM state
+    x_t: jax.Array,     # (B, H, P)
+    dt_t: jax.Array,    # (B, H)
+    a: jax.Array,       # (H,)
+    b_t: jax.Array,     # (B, G, N)
+    c_t: jax.Array,     # (B, G, N)
+):
+    """Single-token recurrence for serve_step. Returns (y_t, new_state)."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    rep = h // g
+    f32 = jnp.float32
+    decay = jnp.exp(dt_t.astype(f32) * a.astype(f32))          # (B,H)
+    b_exp = jnp.repeat(b_t.astype(f32), rep, axis=1)           # (B,H,N)
+    c_exp = jnp.repeat(c_t.astype(f32), rep, axis=1)
+    outer = jnp.einsum("bh,bhn,bhp->bhnp", dt_t.astype(f32), b_exp, x_t.astype(f32))
+    new_state = decay[:, :, None, None] * state.astype(f32) + outer
+    y = jnp.einsum("bhn,bhnp->bhp", c_exp, new_state)
+    return y.astype(x_t.dtype), new_state.astype(state.dtype)

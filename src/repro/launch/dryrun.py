@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: .lower().compile() for every (arch x shape x mesh),
+# recording memory analysis, cost analysis, and the collective schedule.
+# The 512 placeholder host devices above MUST be set before any jax import.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs.registry import ARCH_IDS, get_config          # noqa: E402
+from repro.configs.shapes import SHAPES                          # noqa: E402
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.launch.roofline import (                              # noqa: E402
+    build_roofline, parse_collectives,
+)
+from repro.launch.steps import adapt_config, lower_for           # noqa: E402
+from repro.models.transformer import num_repeats                 # noqa: E402
+
+LARGE_ARCHS = [a for a in ARCH_IDS if not a.startswith("fedsr-")]
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        try:
+            out[field] = int(getattr(mem, field))
+        except Exception:
+            pass
+    return out
+
+
+def _differential_costs(cfg, shape, mesh, reps: int):
+    """Exact scan-body correction via 1-repeat / 2-repeat lowerings
+    (see roofline.extrapolate_cost). Returns per-step-name dicts of
+    corrected {"flops","bytes","collective_bytes"} or None on failure."""
+    from repro.models.transformer import block_pattern
+
+    period = len(block_pattern(cfg))
+    out = {}
+    try:
+        small = {
+            r: lower_for(
+                dataclasses.replace(cfg, num_layers=r * period,
+                                    scan_layers=False), shape, mesh)
+            for r in (1, 2)
+        }
+        for name in small[1]:
+            costs, colls = {}, {}
+            for r in (1, 2):
+                comp = small[r][name].compile()
+                costs[r] = comp.cost_analysis() or {}
+                colls[r] = parse_collectives(comp.as_text()).total_bytes
+                del comp
+            from repro.launch.roofline import extrapolate_cost
+            out[name] = {
+                "flops": extrapolate_cost(
+                    float(costs[1].get("flops", 0.0)),
+                    float(costs[2].get("flops", 0.0)), reps),
+                "bytes": extrapolate_cost(
+                    float(costs[1].get("bytes accessed", 0.0)),
+                    float(costs[2].get("bytes accessed", 0.0)), reps),
+                "collective_bytes": extrapolate_cost(
+                    float(colls[1]), float(colls[2]), reps),
+            }
+        return out
+    except Exception:   # noqa: BLE001 — differential pass is best-effort
+        return None
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+            hlo_dir: str | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "steps": {},
+    }
+    t0 = time.time()
+    try:
+        lowered = lower_for(cfg, shape, mesh)
+        acfg = adapt_config(cfg, shape)
+        diff = _differential_costs(acfg, shape, mesh, num_repeats(acfg))
+        for name, low in lowered.items():
+            t1 = time.time()
+            compiled = low.compile()
+            hlo = compiled.as_text()
+            trip = num_repeats(acfg)
+            coll = parse_collectives(hlo, scan_trip_count=trip)
+            cost = dict(compiled.cost_analysis() or {})
+            corrected = (diff or {}).get(name)
+            if corrected:
+                cost["flops"] = corrected["flops"]
+                cost["bytes accessed"] = corrected["bytes"]
+                collective_total = corrected["collective_bytes"]
+            else:
+                collective_total = coll.total_bytes
+            mem = _mem_dict(compiled.memory_analysis())
+            roof = build_roofline(
+                arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+                cost=cost, collective_bytes=collective_total, cfg=acfg,
+            )
+            rec["steps"][name] = {
+                "compile_s": round(time.time() - t1, 1),
+                "memory": mem,
+                "cost_flops_reported": float(cost.get("flops", 0.0)),
+                "cost_bytes_reported": float(cost.get("bytes accessed", 0.0)),
+                "differential_correction": bool(corrected),
+                "collective_bytes": collective_total,
+                "collective_bytes_hlo_parse": coll.total_bytes,
+                "collective_bytes_by_kind": coll.bytes_by_kind,
+                "collective_count_by_kind": coll.count_by_kind,
+                "roofline": dataclasses.asdict(roof) | {
+                    "dominant": roof.dominant,
+                    "useful_ratio": roof.useful_ratio,
+                    "step_time_s": roof.step_time_s,
+                },
+                "hlo_lines": hlo.count("\n"),
+            }
+            if hlo_dir:
+                os.makedirs(hlo_dir, exist_ok=True)
+                with open(os.path.join(
+                        hlo_dir, f"{arch}_{shape_name}_{mesh_name}_{name}.txt"
+                ), "w") as f:
+                    f.write(hlo)
+            del compiled, hlo
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    os.makedirs(outdir, exist_ok=True)
+    fname = f"{arch}_{shape_name}_{mesh_name}.json"
+    with open(os.path.join(outdir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"].upper()
+    print(f"[{status}] {arch} x {shape_name} x {mesh_name} "
+          f"({rec['total_s']}s)", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="FedSR multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--hlo-dir", default=None,
+                    help="optionally dump partitioned HLO text here")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = LARGE_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                path = os.path.join(args.out, f"{arch}_{shape}_{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") == "ok":
+                            print(f"[SKIP] {arch} x {shape} x {mesh_name}")
+                            continue
+                rec = run_one(arch, shape, multi, args.out, args.hlo_dir)
+                failures += rec["status"] != "ok"
+    print(f"dry-run sweep complete, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

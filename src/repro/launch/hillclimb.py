@@ -1,0 +1,106 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# §Perf hillclimb driver: lower one (arch x shape) with config/train-config
+# variants and report the roofline deltas (hypothesis -> change -> measure).
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.configs.base import TrainConfig                      # noqa: E402
+from repro.configs.registry import get_config                   # noqa: E402
+from repro.configs.shapes import SHAPES                         # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.roofline import build_roofline, extrapolate_cost, parse_collectives  # noqa: E402
+from repro.launch.steps import adapt_config, lower_for          # noqa: E402
+from repro.models.transformer import block_pattern, num_repeats  # noqa: E402
+
+
+def measure(arch: str, shape_name: str, tag: str,
+            cfg_overrides: dict | None = None,
+            tcfg_overrides: dict | None = None,
+            outdir: str = "experiments/perf") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    tcfg = TrainConfig(param_dtype="bfloat16", **(tcfg_overrides or {}))
+    cfg = adapt_config(cfg, shape)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    reps = num_repeats(cfg)
+    period = len(block_pattern(cfg))
+
+    t0 = time.time()
+    # differential 1-repeat/2-repeat unrolled lowerings (exact scan costs)
+    rec = {"arch": arch, "shape": shape_name, "tag": tag,
+           "cfg_overrides": cfg_overrides or {},
+           "tcfg_overrides": tcfg_overrides or {}, "steps": {}}
+    small = {
+        r: lower_for(dataclasses.replace(cfg, num_layers=r * period,
+                                         scan_layers=False),
+                     shape, mesh, tcfg=tcfg)
+        for r in (1, 2)
+    }
+    # full-model compile proves the variant lowers at scale
+    full = lower_for(cfg, shape, mesh, tcfg=tcfg)
+    for name in full:
+        compiled = full[name].compile()
+        mem = compiled.memory_analysis()
+        costs, colls = {}, {}
+        for r in (1, 2):
+            comp = small[r][name].compile()
+            costs[r] = comp.cost_analysis() or {}
+            colls[r] = parse_collectives(comp.as_text()).total_bytes
+            del comp
+        cost = {
+            "flops": extrapolate_cost(float(costs[1].get("flops", 0)),
+                                      float(costs[2].get("flops", 0)), reps),
+            "bytes accessed": extrapolate_cost(
+                float(costs[1].get("bytes accessed", 0)),
+                float(costs[2].get("bytes accessed", 0)), reps),
+        }
+        coll = extrapolate_cost(float(colls[1]), float(colls[2]), reps)
+        roof = build_roofline(arch=arch, shape=shape, mesh_name="16x16",
+                              chips=256, cost=cost, collective_bytes=coll,
+                              cfg=cfg)
+        rec["steps"][name] = {
+            "roofline": dataclasses.asdict(roof) | {
+                "dominant": roof.dominant,
+                "useful_ratio": roof.useful_ratio,
+                "step_time_s": roof.step_time_s,
+            },
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        }
+        del compiled
+    rec["total_s"] = round(time.time() - t0, 1)
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, f"{arch}_{shape_name}_{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    for name, s in rec["steps"].items():
+        r = s["roofline"]
+        print(f"[{tag}] {arch} x {shape_name} {name}: "
+              f"compute={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+              f"coll={r['collective_s']:.4f}s dom={r['dominant']} "
+              f"useful={r['useful_ratio']:.2f}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--cfg", default="{}", help="JSON ModelConfig overrides")
+    ap.add_argument("--tcfg", default="{}", help="JSON TrainConfig overrides")
+    args = ap.parse_args()
+    measure(args.arch, args.shape, args.tag,
+            json.loads(args.cfg), json.loads(args.tcfg))
+
+
+if __name__ == "__main__":
+    main()

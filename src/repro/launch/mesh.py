@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Production target: TPU v5e pods, 256 chips/pod.
+  single pod : (16, 16)    axes ("data", "model")
+  two pods   : (2, 16, 16) axes ("pod", "data", "model")
+
+FedSR mapping: "model" = tensor parallelism inside one FL participant;
+"data" = the 16 ring positions of one edge cluster; "pod" = the edge tier
+(cloud aggregation = cross-pod collective).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever fits the current host (tests / examples): 1 device -> (1, 1)."""
+    n = len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((n // 2, 2), ("data", "model"))
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,45 @@
+"""Rebuild the roofline blocks in existing dry-run JSONs from stored cost
+numbers (no re-lowering) — used after changing roofline analytics."""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import sys
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+from repro.launch.roofline import build_roofline
+from repro.launch.steps import adapt_config
+
+
+def main(dryrun_dir: str = "experiments/dryrun") -> None:
+    n = 0
+    for path in sorted(glob.glob(f"{dryrun_dir}/*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        cfg = adapt_config(get_config(rec["arch"]), SHAPES[rec["shape"]])
+        chips = 512 if rec["mesh"] == "2x16x16" else 256
+        for name, step in rec["steps"].items():
+            roof = build_roofline(
+                arch=rec["arch"], shape=SHAPES[rec["shape"]],
+                mesh_name=rec["mesh"], chips=chips,
+                cost={"flops": step["cost_flops_reported"],
+                      "bytes accessed": step["cost_bytes_reported"]},
+                collective_bytes=step["collective_bytes"], cfg=cfg,
+            )
+            step["roofline"] = dataclasses.asdict(roof) | {
+                "dominant": roof.dominant,
+                "useful_ratio": roof.useful_ratio,
+                "step_time_s": roof.step_time_s,
+            }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"rebuilt rooflines in {n} records")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

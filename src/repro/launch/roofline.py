@@ -1,0 +1,268 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+  compute    = HLO_FLOPs_total   / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_total   / (chips * 819e9  B/s HBM)
+  collective = collective_bytes  / (chips * 50e9   B/s/link ICI)
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed) and the
+partitioned HLO text for collective operand bytes. cost_analysis on a
+partitioned module reports PER-DEVICE numbers; we cross-check against the
+analytic MODEL_FLOPS (6*N_active*tokens) and record which interpretation
+held. Collectives inside while/scan bodies appear once in the text but run
+once per layer-stack iteration — we multiply by the scan trip count
+(heuristic: computation name contains "while"/"body"/"scan"/"cond"),
+recorded as an approximation in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_result(line: str) -> int:
+    """Sum array sizes in the result type of an HLO instruction line."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    # result type is the prefix of the RHS before the op name
+    rhs = lhs[1]
+    total = 0
+    # take text before the first opening paren (op operands)
+    head = rhs.split("(", 1)[0]
+    for m in _SHAPE_RE.finditer(head):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, scan_trip_count: int = 1) -> CollectiveStats:
+    bytes_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    multiplier = 1
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers look like:  %name (args) -> type {   or  body {
+        if stripped.endswith("{") and "=" not in stripped:
+            name = stripped.split("(")[0].strip().lstrip("%")
+            in_loop = any(t in name for t in ("while", "body", "scan", "region"))
+            multiplier = scan_trip_count if in_loop else 1
+            continue
+        for kind in _COLLECTIVES:
+            # match op invocation, e.g. "= bf16[...] all-gather(" or "-start("
+            if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+                b = _bytes_of_result(stripped)
+                bytes_by_kind[kind] += b * multiplier
+                count_by_kind[kind] += multiplier
+                break
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+def model_flops(cfg, shape, *, include_backward: bool) -> float:
+    """Analytic MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (fwd)."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analytic_step_flops(cfg, shape) -> float:
+    """MODEL_FLOPS + analytic attention/SSD flops — used ONLY to disambiguate
+    cost_analysis' per-device-vs-total reporting (attention dominates decode
+    steps, so 6ND alone misclassifies them)."""
+    from repro.models.transformer import block_pattern, num_repeats
+
+    base = model_flops(cfg, shape, include_backward=(shape.kind == "train"))
+    b = shape.global_batch
+    s = shape.seq_len
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    reps = num_repeats(cfg)
+    mult = 3.0 if shape.kind == "train" else 1.0     # fwd+bwd vs fwd
+    attn = 0.0
+    for mixer, _ in block_pattern(cfg):
+        if mixer == "attn":
+            if shape.kind == "decode":
+                ctx = min(s, cfg.sliding_window) if cfg.sliding_window else s
+                attn += 4.0 * b * ctx * h * hd * reps
+            else:
+                ctx = min(s, cfg.sliding_window) if cfg.sliding_window else s
+                attn += 2.0 * b * s * ctx * h * hd * reps * mult
+        elif mixer == "ssm":
+            nheads = (cfg.ssm_expand * cfg.d_model) // cfg.ssm_headdim
+            n = cfg.ssm_state
+            p = cfg.ssm_headdim
+            if shape.kind == "decode":
+                attn += 4.0 * b * nheads * n * p * reps
+            else:
+                q = cfg.ssm_chunk
+                # intra-chunk quadratic + state outer products
+                attn += (2.0 * b * s * q * nheads * (p + n)
+                         + 4.0 * b * s * nheads * n * p) * reps * mult
+    return base + attn
+
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count — MoE counts top-k experts only."""
+    from repro.models.transformer import block_pattern, num_repeats
+    from repro.models.mamba2 import mamba_dims
+
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    reps = num_repeats(cfg)
+    for mixer, ffn in block_pattern(cfg):
+        layer = 0.0
+        if mixer == "attn":
+            layer += d * cfg.num_heads * hd * 2          # wq, wo
+            layer += d * cfg.num_kv_heads * hd * 2       # wk, wv
+        elif mixer == "ssm":
+            dims = mamba_dims(cfg)
+            layer += d * dims["in_proj"] + dims["d_inner"] * d
+            layer += cfg.ssm_conv * dims["conv_channels"]
+        if ffn == "dense":
+            layer += 3 * d * cfg.d_ff
+        elif ffn == "moe":
+            layer += d * cfg.num_experts                  # router
+            layer += cfg.experts_per_token * 3 * d * cfg.d_ff
+        total += layer * reps
+    return total
+
+
+def total_params(cfg) -> float:
+    from repro.models.transformer import block_pattern, num_repeats
+    from repro.models.mamba2 import mamba_dims
+
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    reps = num_repeats(cfg)
+    for mixer, ffn in block_pattern(cfg):
+        layer = 0.0
+        if mixer == "attn":
+            layer += d * cfg.num_heads * hd * 2
+            layer += d * cfg.num_kv_heads * hd * 2
+        elif mixer == "ssm":
+            dims = mamba_dims(cfg)
+            layer += d * dims["in_proj"] + dims["d_inner"] * d
+            layer += cfg.ssm_conv * dims["conv_channels"]
+        if ffn == "dense":
+            layer += 3 * d * cfg.d_ff
+        elif ffn == "moe":
+            layer += d * cfg.num_experts
+            layer += cfg.num_experts * 3 * d * cfg.d_ff
+        total += layer * reps
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # total across chips (after interpretation)
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    flops_per_device_reported: float
+    interpretation: str          # "per-device" | "total"
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        # collective_bytes are parsed from the PARTITIONED HLO, so they are
+        # already per-device shard sizes: global = bytes * chips, and the
+        # assignment formula global/(chips*link_bw) reduces to bytes/link_bw.
+        self.collective_s = self.collective_bytes / ICI_BW
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def extrapolate_cost(c1: float, c2: float, reps: int) -> float:
+    """Differential scan-body correction: XLA cost analysis counts a while
+    body ONCE regardless of trip count, so we lower 1-repeat and 2-repeat
+    variants of the same model; (c2 - c1) is the exact per-repeat cost and
+    c1 + (reps-1)*(c2-c1) the exact full-model cost (costs are affine in
+    the repeat count)."""
+    per_rep = max(c2 - c1, 0.0)
+    return c1 + (reps - 1) * per_rep
+
+
+def build_roofline(
+    *, arch: str, shape, mesh_name: str, chips: int,
+    cost: Dict[str, float], collective_bytes: float, cfg,
+) -> Roofline:
+    reported = float(cost.get("flops", 0.0))
+    mflops = model_flops(cfg, shape, include_backward=(shape.kind == "train"))
+    # CALIBRATED: compiled.cost_analysis() on an SPMD-partitioned module
+    # reports PER-DEVICE numbers — verified against a known 4096^3 matmul on
+    # the 256-device host mesh (reported/total == 1/256 exactly; see
+    # EXPERIMENTS.md §Roofline methodology).
+    hlo_flops, interp = reported * chips, "per-device"
+    reported_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo_bytes = reported_bytes * chips
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes, model_flops=mflops,
+        flops_per_device_reported=reported, interpretation=interp,
+    ).finalize()

@@ -1,0 +1,363 @@
+"""jit-able distributed steps + abstract input specs (dry-run & real runs).
+
+FedSR-on-pod mapping (DESIGN.md §3): the FL client stack is a LEADING
+parameter dimension — (ring,) on a single pod, (edge, ring) across pods —
+sharded over ("data") / ("pod", "data"). Every ring position holds its own
+replica (sharded over "model"), trains on its own client's shard, and the
+ring hop is a roll along the stacked client axis, which XLA lowers to a
+collective-permute over the "data" axis: the paper's device->device model
+transfer, on ICI. Cloud aggregation (eq. 11) is a weighted mean over the
+client stack — an all-reduce crossing the pod axis: the paper's cloud
+uplink, on DCI. This is ``ring_mode="pipelined"`` (Q incremental chains in
+flight); the serial Alg. 1 semantics are validated separately in the FL
+simulator (repro/core).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models.transformer import (
+    cache_specs,
+    decode_step,
+    forward,
+    lm_loss,
+    model_specs,
+)
+from repro.nn.module import abstract_params
+from repro.sharding.rules import cache_pspec, param_pspecs
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# FL client stack geometry
+
+
+def fl_stack(mesh: Mesh) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """((stack sizes), (mesh axes)) of the client-replica stack."""
+    if "pod" in mesh.axis_names:
+        return (mesh.shape["pod"], mesh.shape["data"]), ("pod", "data")
+    return (mesh.shape["data"],), ("data",)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# shape adaptation (long_500k sliding-window policy, DESIGN.md §4)
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    if (
+        shape.name == "long_500k"
+        and not cfg.supports_long_context
+    ):
+        # dense/moe/audio full-attention archs run long_500k under an
+        # explicit sliding-window variant (recorded in EXPERIMENTS.md)
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+
+
+def _token_dtype(cfg: ModelConfig):
+    return jnp.int32 if cfg.input_mode == "tokens" else jnp.bfloat16
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    stack, stack_axes = fl_stack(mesh)
+    n_clients = math.prod(stack)
+    assert shape.global_batch % n_clients == 0
+    b = shape.global_batch // n_clients
+    s = shape.seq_len
+    if cfg.input_mode == "tokens":
+        inp = jax.ShapeDtypeStruct(stack + (b, s), jnp.int32)
+        inp_spec = P(*stack_axes, None, None)
+    else:
+        inp = jax.ShapeDtypeStruct(stack + (b, s, cfg.d_model), jnp.bfloat16)
+        inp_spec = P(*stack_axes, None, None, None)
+    lbl = jax.ShapeDtypeStruct(stack + (b, s), jnp.int32)
+    lbl_spec = P(*stack_axes, None, None)
+    return (
+        {"inputs": inp, "labels": lbl},
+        {"inputs": inp_spec, "labels": lbl_spec},
+    )
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
+    stack, stack_axes = fl_stack(mesh)
+    if tcfg.ring_mode == "serial":
+        stack, stack_axes = (), ()       # one logical model, no client stack
+    specs = model_specs(cfg)
+    dtype = jnp.dtype(tcfg.param_dtype)
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(stack + s.shape, dtype),
+        specs, is_leaf=lambda x: hasattr(x, "axes"),
+    )
+    pspecs = param_pspecs(specs, mesh, leading=stack_axes)
+    state = {"params": params, "mom": params, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_spec = {"params": pspecs, "mom": pspecs, "step": P()}
+    return state, state_spec
+
+
+def serve_param_specs(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16):
+    specs = model_specs(cfg)
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs, is_leaf=lambda x: hasattr(x, "axes"),
+    )
+    return params, param_pspecs(specs, mesh)
+
+
+def serve_cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    baxes = batch_axes(mesh)
+
+    def one_spec(path_kind, leaf):
+        return cache_pspec(leaf.shape, mesh, kind=path_kind, batch_axes=baxes)
+
+    pspecs = {}
+    for pos, entry in cache.items():
+        e = {}
+        if "attn" in entry:
+            e["attn"] = {
+                "k": _attn_cache_spec(entry["attn"]["k"].shape, mesh, baxes),
+                "v": _attn_cache_spec(entry["attn"]["v"].shape, mesh, baxes),
+            }
+        if "ssm" in entry:
+            e["ssm"] = {
+                "conv": cache_pspec(entry["ssm"]["conv"].shape, mesh,
+                                    kind="ssm_conv", batch_axes=baxes),
+                "ssm": cache_pspec(entry["ssm"]["ssm"].shape, mesh,
+                                   kind="ssm_state", batch_axes=baxes),
+            }
+        pspecs[pos] = e
+    return cache, pspecs
+
+
+def _attn_cache_spec(shape, mesh: Mesh, baxes) -> P:
+    """(reps, B, S, KV, hd): batch over data axes when divisible; otherwise
+    (long_500k) shard the SEQUENCE over the data axes. KV heads over "model"
+    when divisible, else sequence over "model" too."""
+    reps, b, s, kv, hd = shape
+    model = mesh.shape["model"]
+    bsz = math.prod(mesh.shape[a] for a in baxes)
+    kv_ok = kv % model == 0
+    if b % bsz == 0 and b >= bsz:
+        if kv_ok:
+            return P(None, baxes, None, "model", None)
+        return P(None, baxes, "model", None, None)
+    # batch too small: sequence-shard over the data axes (flash-decoding)
+    if kv_ok:
+        return P(None, None, baxes, "model", None)
+    return P(None, None, baxes + ("model",), None, None)
+
+
+# ---------------------------------------------------------------------------
+# steps
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
+    """FedSR train step + cloud sync step (ring_mode: pipelined | serial)."""
+    stack, stack_axes = fl_stack(mesh)
+    nstack = len(stack)
+    remat = tcfg.remat != "none"
+
+    def client_update(params, mom, batch, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, batch, cfg, remat=remat)
+        )(params)
+        mom = jax.tree.map(lambda m, g: tcfg.momentum * m + g.astype(m.dtype),
+                           mom, grads)
+        params = jax.tree.map(
+            lambda p, m: (p - lr * m).astype(p.dtype), params, mom)
+        return params, mom, loss
+
+    if tcfg.ring_mode == "serial":
+        return _make_serial_train_step(cfg, tcfg, mesh, client_update)
+
+    upd = client_update
+    for _ in range(nstack):
+        upd = jax.vmap(upd, in_axes=(0, 0, 0, None))
+
+    def train_step(state, batch):
+        lr = jnp.asarray(tcfg.learning_rate, jnp.float32)
+        params, mom, losses = upd(state["params"], state["mom"], batch, lr)
+        # ring hop: the model moves to the next ring position —
+        # collective-permute along the "data" axis. Momentum hops with it in
+        # the baseline; with hop_momentum=False it stays device-local
+        # (paper Alg. 1 keeps optimizer state on the device).
+        ring_axis = nstack - 1
+        params = jax.tree.map(lambda x: jnp.roll(x, 1, axis=ring_axis), params)
+        if tcfg.hop_momentum:
+            mom = jax.tree.map(lambda x: jnp.roll(x, 1, axis=ring_axis), mom)
+        new_state = {"params": params, "mom": mom, "step": state["step"] + 1}
+        return new_state, jnp.mean(losses)
+
+    def cloud_sync(state):
+        # eq. 11: cloud aggregates the edge/ring models (uniform shards ->
+        # plain mean); momentum restarts after aggregation (fresh visit).
+        axes = tuple(range(nstack))
+
+        def agg(x):
+            m = jnp.mean(x, axis=axes, keepdims=True)
+            return jnp.broadcast_to(m, x.shape)
+
+        params = jax.tree.map(agg, state["params"])
+        mom = jax.tree.map(jnp.zeros_like, state["mom"])
+        return {"params": params, "mom": mom, "step": state["step"]}
+
+    return train_step, cloud_sync
+
+
+def _vocab_axis(cfg: ModelConfig, mesh: Mesh):
+    return "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+
+
+def _make_serial_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                            client_update):
+    """Literal Algorithm 1 inner loop on the pod: ONE logical model,
+    lax.scan over the ring positions — each visit trains on that client's
+    shard with the full pod (time-multiplexed ring; the hop costs activation
+    movement, not parameter movement). Cloud sync = identity within a pod
+    (single chain), cross-pod mean on the multi-pod mesh."""
+    stack, _ = fl_stack(mesh)
+    n_clients = math.prod(stack)
+
+    def train_step(state, batch):
+        lr = jnp.asarray(tcfg.learning_rate, jnp.float32)
+        flat = jax.tree.map(
+            lambda x: x.reshape((n_clients,) + x.shape[len(stack):]), batch)
+
+        def visit(carry, client_batch):
+            params, mom = carry
+            params, mom, loss = client_update(params, mom, client_batch, lr)
+            return (params, mom), loss
+
+        (params, mom), losses = jax.lax.scan(
+            visit, (state["params"], state["mom"]), flat)
+        new_state = {"params": params, "mom": mom, "step": state["step"] + 1}
+        return new_state, jnp.mean(losses)
+
+    def cloud_sync(state):
+        return state    # single chain per pod; cross-pod handled by caller
+
+    return train_step, cloud_sync
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    def prefill_step(params, inputs):
+        logits, _ = forward(params, inputs, cfg)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = decode_step(params, tokens, cache, pos, cfg)
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers (shared by dryrun.py and launch drivers)
+
+
+def _ns(tree: Pytree, mesh: Mesh) -> Pytree:
+    """PartitionSpec tree -> NamedSharding tree (no context mesh needed)."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_train(cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeConfig,
+                mesh: Mesh):
+    cfg = adapt_config(cfg, shape)
+    train_step, cloud_sync = make_train_step(cfg, tcfg, mesh)
+    state, state_spec = abstract_train_state(cfg, tcfg, mesh)
+    batch, batch_spec = train_batch_specs(cfg, shape, mesh)
+    state_s, batch_s = _ns(state_spec, mesh), _ns(batch_spec, mesh)
+    lowered = jax.jit(
+        train_step,
+        in_shardings=(state_s, batch_s),
+        out_shardings=(state_s, _ns(P(), mesh)),
+    ).lower(state, batch)
+    sync_lowered = jax.jit(
+        cloud_sync, in_shardings=(state_s,), out_shardings=state_s,
+    ).lower(state)
+    return lowered, sync_lowered
+
+
+def lower_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    cfg = adapt_config(cfg, shape)
+    step = make_prefill_step(cfg, mesh)
+    params, pspecs = serve_param_specs(cfg, mesh)
+    baxes = batch_axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        in_spec = P(baxes, None)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        in_spec = P(baxes, None, None)
+    lowered = jax.jit(
+        step,
+        in_shardings=(_ns(pspecs, mesh), _ns(in_spec, mesh)),
+        out_shardings=_ns(P(baxes, None, _vocab_axis(cfg, mesh)), mesh),
+    ).lower(params, inputs)
+    return lowered
+
+
+def lower_serve(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    cfg = adapt_config(cfg, shape)
+    step = make_serve_step(cfg, mesh)
+    params, pspecs = serve_param_specs(cfg, mesh)
+    cache, cache_pspecs = serve_cache_specs(cfg, shape, mesh)
+    baxes = batch_axes(mesh)
+    b = shape.global_batch
+    bsz = math.prod(mesh.shape[a] for a in baxes)
+    tok_axis = baxes if (b % bsz == 0 and b >= bsz) else None
+    if cfg.input_mode == "tokens":
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_spec = P(tok_axis, None)
+    else:
+        tokens = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+        tok_spec = P(tok_axis, None, None)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(
+        step,
+        in_shardings=(_ns(pspecs, mesh), _ns(cache_pspecs, mesh),
+                      _ns(tok_spec, mesh), _ns(P(), mesh)),
+        out_shardings=(_ns(P(tok_axis, None, _vocab_axis(cfg, mesh)), mesh),
+                       _ns(cache_pspecs, mesh)),
+    ).lower(params, cache, tokens, pos)
+    return lowered
+
+
+def lower_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              tcfg: Optional[TrainConfig] = None):
+    """Dispatch on the shape kind. Returns dict of name -> Lowered."""
+    tcfg = tcfg or TrainConfig(param_dtype="bfloat16")
+    if shape.kind == "train":
+        lowered, sync = lower_train(cfg, tcfg, shape, mesh)
+        return {"train_step": lowered, "cloud_sync": sync}
+    if shape.kind == "prefill":
+        return {"prefill_step": lower_prefill(cfg, shape, mesh)}
+    return {"serve_step": lower_serve(cfg, shape, mesh)}

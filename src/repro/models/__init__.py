@@ -1,0 +1,3 @@
+from repro.models.registry import init_for, loss_for, specs_for
+
+__all__ = ["init_for", "loss_for", "specs_for"]

@@ -1,0 +1,291 @@
+"""Shared transformer primitives: RMSNorm, RoPE, GQA attention (full /
+sliding-window / decode-with-cache), SwiGLU FFN, embeddings.
+
+All functions are pure; parameters come in as dict pytrees built from
+``ParamSpec`` trees (see ``repro.nn.module``). A leading ``stack`` dimension
+(logical axis "layers") is added by the model builders so layer stacks can be
+``lax.scan``-ned — essential to keep HLO size sane for 48-layer dry-runs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.module import ParamSpec
+
+# ---------------------------------------------------------------------------
+# norm
+
+
+def rmsnorm_spec(d: int, stack: Tuple[int, ...] = ()) -> ParamSpec:
+    return ParamSpec(stack + (d,), ("layers",) * len(stack) + ("embed",), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def attention_specs(cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    lax_ = ("layers",) * len(stack)
+    return {
+        "wq": ParamSpec(stack + (d, h, hd), lax_ + ("embed", "q_heads", None), init="fan_in"),
+        "wk": ParamSpec(stack + (d, kv, hd), lax_ + ("embed", "kv_heads", None), init="fan_in"),
+        "wv": ParamSpec(stack + (d, kv, hd), lax_ + ("embed", "kv_heads", None), init="fan_in"),
+        "wo": ParamSpec(stack + (h, hd, d), lax_ + ("q_heads", None, "embed"), init="fan_in"),
+        "norm": rmsnorm_spec(d, stack),
+    }
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,S,H,hd) k: (B,T,KV,hd) -> scores (B, KV, H//KV, S, T)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    q = q.reshape(b, s, kv, h // kv, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", q, k)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B,KV,G,S,T) v: (B,T,KV,hd) -> (B,S,H,hd)."""
+    b, kv, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, kv * g, out.shape[-1])
+
+
+def causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    sliding_window: int = 0,
+) -> jax.Array:
+    """Reference full-sequence causal GQA attention (train / prefill).
+
+    q: (B,S,H,hd), k/v: (B,S,KV,hd). The Pallas flash kernel
+    (`repro.kernels.flash_attention`) implements the same contract and is
+    checked against this function in tests.
+    """
+    s = q.shape[1]
+    hd = q.shape[-1]
+    scores = _gqa_scores(q, k).astype(jnp.float32) / jnp.sqrt(hd).astype(jnp.float32)
+    pos = jnp.arange(s)
+    mask = pos[:, None] >= pos[None, :]
+    if sliding_window > 0:
+        mask &= pos[:, None] - pos[None, :] < sliding_window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v)
+
+
+def causal_attention_blockwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block: int,
+    sliding_window: int = 0,
+) -> jax.Array:
+    """Blockwise-causal attention: computes only key blocks at-or-below each
+    query block (and inside the sliding window), skipping the upper triangle
+    structurally — the XLA-level analogue of the Pallas flash kernel
+    (§Perf optimization; exact same math as ``causal_attention``)."""
+    b, s, h, hd = q.shape
+    if s % block != 0 or s <= block:
+        return causal_attention(q, k, v, sliding_window=sliding_window)
+    nb = s // block
+    outs = []
+    for i in range(nb):
+        row0 = i * block
+        if sliding_window > 0:
+            lo = max(0, (row0 - sliding_window + 1) // block * block)
+        else:
+            lo = 0
+        hi = row0 + block
+        qi = q[:, row0:hi]
+        ki = k[:, lo:hi]
+        vi = v[:, lo:hi]
+        scores = _gqa_scores(qi, ki).astype(jnp.float32) / jnp.sqrt(hd).astype(
+            jnp.float32
+        )
+        rows = row0 + jnp.arange(block)[:, None]
+        cols = lo + jnp.arange(hi - lo)[None, :]
+        mask = rows >= cols
+        if sliding_window > 0:
+            mask &= rows - cols < sliding_window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        outs.append(_gqa_out(probs, vi))
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    sliding_window: int = 0,
+) -> jax.Array:
+    """One-token GQA attention over a cache.
+
+    q: (B,1,H,hd), k/v_cache: (B,T,KV,hd), pos: () index of current token
+    (the cache already contains the current token at position ``pos``).
+    For ``sliding_window > 0`` only the trailing window is attended —
+    this is the long_500k path for dense archs (see DESIGN.md §4).
+    """
+    hd = q.shape[-1]
+    t = k_cache.shape[1]
+    if sliding_window > 0 and sliding_window < t:
+        start = jnp.clip(pos - sliding_window + 1, 0, t - sliding_window)
+        k_cache = jax.lax.dynamic_slice_in_dim(k_cache, start, sliding_window, axis=1)
+        v_cache = jax.lax.dynamic_slice_in_dim(v_cache, start, sliding_window, axis=1)
+        valid = jnp.arange(sliding_window) <= (pos - start)
+    else:
+        valid = jnp.arange(t) <= pos
+    scores = _gqa_scores(q, k_cache).astype(jnp.float32) / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    # cast back to the activation dtype (the cache may be wider, e.g. f32)
+    return _gqa_out(probs, v_cache).astype(q.dtype)
+
+
+def attention_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    decode_pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Pre-norm attention residual block. Returns (x + attn, updated cache)."""
+    h = rmsnorm(x, params["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, params["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, params["wv"].astype(h.dtype))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if cfg.attn_block > 0:
+            attn = causal_attention_blockwise(
+                q, k, v, block=cfg.attn_block,
+                sliding_window=cfg.sliding_window,
+            )
+        else:
+            attn = causal_attention(q, k, v, sliding_window=cfg.sliding_window)
+        new_cache = None
+    else:
+        assert decode_pos is not None
+        rolling = cfg.rolling_cache and cfg.sliding_window > 0
+        if rolling:
+            # §Perf: ring-buffer cache of window size — softmax is
+            # permutation-invariant and keys carry absolute RoPE phases, so
+            # slot order inside the buffer is irrelevant.
+            width = cache["k"].shape[1]
+            insert_at = jnp.mod(decode_pos, width)
+            attend_pos = jnp.minimum(decode_pos, width - 1)
+            window = 0                     # whole buffer is the window
+        else:
+            insert_at = decode_pos
+            attend_pos = decode_pos
+            window = cfg.sliding_window
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), insert_at, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), insert_at, axis=1
+        )
+        attn = decode_attention(
+            q, k_cache, v_cache, attend_pos, sliding_window=window
+        )
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    out = jnp.einsum("bshk,hkd->bsd", attn, params["wo"].astype(attn.dtype))
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense (SwiGLU) FFN
+
+
+def ffn_specs(cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lax_ = ("layers",) * len(stack)
+    return {
+        "w_gate": ParamSpec(stack + (d, f), lax_ + ("embed", "mlp"), init="fan_in"),
+        "w_up": ParamSpec(stack + (d, f), lax_ + ("embed", "mlp"), init="fan_in"),
+        "w_down": ParamSpec(stack + (f, d), lax_ + ("mlp", "embed"), init="fan_in"),
+        "norm": rmsnorm_spec(d, stack),
+    }
+
+
+def ffn_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rmsnorm(x, params["norm"], cfg.norm_eps)
+    gate = jnp.einsum("bsd,df->bsf", h, params["w_gate"].astype(h.dtype))
+    up = jnp.einsum("bsd,df->bsf", h, params["w_up"].astype(h.dtype))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up,
+                     params["w_down"].astype(h.dtype))
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+
+
+def embedding_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.input_mode == "tokens":
+        specs["embed"] = ParamSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="embed"
+        )
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="fan_in"
+        )
+    return specs
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+
+
+def unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))

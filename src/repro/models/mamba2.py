@@ -1,0 +1,131 @@
+"""Mamba2 (SSD) mixer block — arXiv:2405.21060.
+
+Layer = RMSNorm -> in_proj -> causal depthwise conv (x,B,C channels) ->
+SSD scan -> gated RMSNorm -> out_proj, residual. Train/prefill uses the
+chunked dual form (``kernels/ssd_scan``); decode uses the O(1) recurrence
+with a (conv, ssm) state cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd_scan.ref import ssd_decode_step, ssd_reference
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.nn.module import ParamSpec
+
+NGROUPS = 1  # B/C projection groups (GQA-analogue); 1 per Mamba2 defaults
+
+
+def mamba_dims(cfg: ModelConfig) -> dict:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_channels = d_inner + 2 * NGROUPS * cfg.ssm_state
+    return dict(
+        d_inner=d_inner,
+        nheads=nheads,
+        conv_channels=conv_channels,
+        in_proj=2 * d_inner + 2 * NGROUPS * cfg.ssm_state + nheads,
+    )
+
+
+def mamba_specs(cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    dims = mamba_dims(cfg)
+    d = cfg.d_model
+    lax_ = ("layers",) * len(stack)
+    return {
+        "in_proj": ParamSpec(stack + (d, dims["in_proj"]), lax_ + ("embed", "mlp"), init="fan_in"),
+        "conv_w": ParamSpec(stack + (cfg.ssm_conv, dims["conv_channels"]), lax_ + (None, "mlp"), init="fan_in"),
+        "conv_b": ParamSpec(stack + (dims["conv_channels"],), lax_ + ("mlp",), init="zeros"),
+        "a_log": ParamSpec(stack + (dims["nheads"],), lax_ + ("heads_ssm",), init="zeros"),
+        "d_skip": ParamSpec(stack + (dims["nheads"],), lax_ + ("heads_ssm",), init="ones"),
+        "dt_bias": ParamSpec(stack + (dims["nheads"],), lax_ + ("heads_ssm",), init="zeros"),
+        "gate_norm": ParamSpec(stack + (dims["d_inner"],), lax_ + ("mlp",), init="ones"),
+        "out_proj": ParamSpec(stack + (dims["d_inner"], d), lax_ + ("mlp", "embed"), init="fan_in"),
+        "norm": rmsnorm_spec(d, stack),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, ...]:
+    dims = mamba_dims(cfg)
+    di, gn = dims["d_inner"], NGROUPS * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * gn]
+    dt = zxbcdt[..., 2 * di + 2 * gn :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the sequence dim. xbc: (B,L,C), w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Pre-norm Mamba2 residual block. cache=None -> full-sequence SSD;
+    cache={"conv": (B,W-1,C), "ssm": (B,H,N,P)} -> single-token decode."""
+    dims = mamba_dims(cfg)
+    bsz, l, _ = x.shape
+    h = rmsnorm(x, params["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bld,dk->blk", h, params["in_proj"].astype(h.dtype))
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+
+    if cache is None:
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        new_cache = None
+        x_ssm = xbc[..., : dims["d_inner"]]
+        bc = xbc[..., dims["d_inner"] :]
+        b_mat = bc[..., : NGROUPS * cfg.ssm_state].reshape(bsz, l, NGROUPS, cfg.ssm_state)
+        c_mat = bc[..., NGROUPS * cfg.ssm_state :].reshape(bsz, l, NGROUPS, cfg.ssm_state)
+        x_heads = x_ssm.reshape(bsz, l, dims["nheads"], cfg.ssm_headdim)
+        y = ssd_reference(x_heads, dt, a, b_mat, c_mat, chunk=cfg.ssm_chunk,
+                          intra_dtype=jnp.dtype(cfg.ssd_intra_dtype))
+        y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * x_heads.astype(jnp.float32)
+    else:
+        # --- decode: rolling conv state + O(1) SSM recurrence -------------
+        width = cfg.ssm_conv
+        conv_state = cache["conv"]                       # (B, W-1, C)
+        window = jnp.concatenate([conv_state, xbc.astype(conv_state.dtype)], axis=1)
+        conv_out = jnp.einsum(
+            "bwc,wc->bc", window.astype(jnp.float32), params["conv_w"].astype(jnp.float32)
+        )
+        xbc_t = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+        new_conv = window[:, 1:, :]                      # drop the oldest column
+        x_t = xbc_t[..., : dims["d_inner"]].reshape(bsz, dims["nheads"], cfg.ssm_headdim)
+        bc = xbc_t[..., dims["d_inner"] :]
+        b_t = bc[..., : NGROUPS * cfg.ssm_state].reshape(bsz, NGROUPS, cfg.ssm_state)
+        c_t = bc[..., NGROUPS * cfg.ssm_state :].reshape(bsz, NGROUPS, cfg.ssm_state)
+        y_t, new_ssm = ssd_decode_step(cache["ssm"], x_t, dt[:, 0, :], a, b_t, c_t)
+        y = y_t[:, None] + params["d_skip"].astype(jnp.float32)[None, None, :, None] * x_t[:, None].astype(jnp.float32)
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+
+    y = y.reshape(bsz, l, dims["d_inner"]).astype(x.dtype)
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    gated = rmsnorm(gated, params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bld,dk->blk", gated, params["out_proj"].astype(x.dtype))
+    return x + out, new_cache
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    dims = mamba_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, dims["conv_channels"]), dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, dims["nheads"], cfg.ssm_state, cfg.ssm_headdim), dtype
+        ),
+    }

@@ -1,0 +1,144 @@
+"""Token-choice top-k Mixture-of-Experts FFN with capacity-based dispatch.
+
+Baseline dispatch is scatter/gather into an (experts, capacity, d_model)
+buffer — XLA SPMD turns this into expert-parallel communication when the
+"experts" logical axis is sharded on the mesh "model" axis. The §Perf
+hillclimb replaces the XLA-chosen collective schedule with an explicit
+shard_map all_to_all (see EXPERIMENTS.md).
+
+FLOP accounting note: only top-k experts are computed per token
+(active-parameter FLOPs), so the roofline MODEL_FLOPS uses 6·N_active·D.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.nn.module import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    lax_ = ("layers",) * len(stack)
+    return {
+        "w_router": ParamSpec(stack + (d, e), lax_ + ("embed", None), init="fan_in"),
+        "w_gate": ParamSpec(stack + (e, d, f), lax_ + ("experts", "embed", "mlp"), init="fan_in"),
+        "w_up": ParamSpec(stack + (e, d, f), lax_ + ("experts", "embed", "mlp"), init="fan_in"),
+        "w_down": ParamSpec(stack + (e, f, d), lax_ + ("experts", "mlp", "embed"), init="fan_in"),
+        "norm": rmsnorm_spec(d, stack),
+    }
+
+
+def router_topk(
+    logits: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits (N, E) -> (weights (N,k), indices (N,k), probs (N,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, idx, probs
+
+
+def load_balance_loss(probs: jax.Array, idx: jax.Array, num_experts: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e (encourages uniform load)."""
+    one_hot = jax.nn.one_hot(idx, num_experts, dtype=jnp.float32)  # (N,k,E)
+    f = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)                 # fraction routed
+    p = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def moe_block(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm MoE residual block. Returns (x + out, aux_loss).
+
+    Two dispatch layouts:
+    * baseline (paper-era default): one GLOBAL capacity pool — simple, but
+      the (E, C, D) buffer has no batch dim, so under pjit the expert
+      compute replicates across the "data" mesh axis (measured in §Perf:
+      ~16x wasted expert FLOPs + a large dispatch all-reduce);
+    * ``cfg.moe_grouped_dispatch``: per-batch-row capacity — the buffer is
+      (B, E, C_row, D) and shards over "data" with the activations.
+    """
+    if cfg.moe_grouped_dispatch:
+        return _moe_block_grouped(params, x, cfg)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    h = rmsnorm(x, params["norm"], cfg.norm_eps)
+    flat = h.reshape(b * s, d)
+    n = b * s
+
+    logits = jnp.einsum("nd,de->ne", flat, params["w_router"].astype(flat.dtype))
+    weights, idx, probs = router_topk(logits, k)
+    aux = load_balance_loss(probs, idx, e) * cfg.router_aux_coef
+
+    # capacity per expert (global, slots of the dispatch buffer)
+    capacity = max(int(cfg.capacity_factor * n * k / e), 8)
+
+    # position of each (token, slot) inside its expert queue
+    one_hot = jax.nn.one_hot(idx.reshape(-1), e, dtype=jnp.float32)      # (n*k, E)
+    pos = jnp.cumsum(one_hot, axis=0) * one_hot                          # 1-based
+    pos_in_expert = (jnp.sum(pos, axis=-1) - 1.0).astype(jnp.int32)      # (n*k,)
+    keep = (pos_in_expert < capacity) & (pos_in_expert >= 0)
+    slot = jnp.clip(pos_in_expert, 0, capacity - 1)
+
+    # scatter tokens into (E, C, D)
+    tok = jnp.repeat(jnp.arange(n), k)
+    src = flat[tok] * keep[:, None].astype(flat.dtype)
+    buf = jnp.zeros((e, capacity, d), flat.dtype)
+    buf = buf.at[idx.reshape(-1), slot].add(src)
+
+    # expert SwiGLU
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(buf.dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(buf.dtype))
+    out_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                         params["w_down"].astype(buf.dtype))
+
+    # gather back and combine over the k slots
+    gathered = out_buf[idx.reshape(-1), slot] * keep[:, None].astype(buf.dtype)
+    gathered = gathered.reshape(n, k, d)
+    combined = jnp.einsum("nkd,nk->nd", gathered, weights.astype(buf.dtype))
+    return x + combined.reshape(b, s, d), aux
+
+
+def _moe_block_grouped(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-batch-row capacity dispatch (see moe_block docstring)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    h = rmsnorm(x, params["norm"], cfg.norm_eps)
+    capacity = max(int(cfg.capacity_factor * s * k / e), 4)
+    w_router = params["w_router"]
+    w_gate, w_up, w_down = params["w_gate"], params["w_up"], params["w_down"]
+
+    def row(flat):                                   # flat: (s, d)
+        logits = jnp.einsum("nd,de->ne", flat, w_router.astype(flat.dtype))
+        weights, idx, probs = router_topk(logits, k)
+        aux = load_balance_loss(probs, idx, e) * cfg.router_aux_coef
+        one_hot = jax.nn.one_hot(idx.reshape(-1), e, dtype=jnp.float32)
+        pos = jnp.cumsum(one_hot, axis=0) * one_hot
+        pos_in_expert = (jnp.sum(pos, axis=-1) - 1.0).astype(jnp.int32)
+        keep = (pos_in_expert < capacity) & (pos_in_expert >= 0)
+        slot = jnp.clip(pos_in_expert, 0, capacity - 1)
+        tok = jnp.repeat(jnp.arange(s), k)
+        src = flat[tok] * keep[:, None].astype(flat.dtype)
+        buf = jnp.zeros((e, capacity, d), flat.dtype)
+        buf = buf.at[idx.reshape(-1), slot].add(src)
+
+        gate = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype))
+        up = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+        out_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                             w_down.astype(buf.dtype))
+        gathered = out_buf[idx.reshape(-1), slot] * keep[:, None].astype(buf.dtype)
+        combined = jnp.einsum("nkd,nk->nd",
+                              gathered.reshape(s, k, d),
+                              weights.astype(buf.dtype))
+        return combined, aux
+
+    combined, aux = jax.vmap(row)(h)
+    return x + combined, jnp.mean(aux)

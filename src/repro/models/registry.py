@@ -1,0 +1,35 @@
+"""Model registry: family -> (specs, init, apply/loss) dispatch."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig
+
+Pytree = Any
+
+LARGE_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+SMALL_FAMILIES = ("cnn", "mlp")
+
+
+def specs_for(cfg: ModelConfig):
+    if cfg.family in SMALL_FAMILIES:
+        from repro.models.small import small_model_specs
+        return small_model_specs(cfg)
+    from repro.models.transformer import model_specs
+    return model_specs(cfg)
+
+
+def init_for(rng: jax.Array, cfg: ModelConfig) -> Pytree:
+    from repro.nn.module import init_params
+    return init_params(rng, specs_for(cfg))
+
+
+def loss_for(cfg: ModelConfig):
+    """Returns loss(params, batch, cfg) for the config's family."""
+    if cfg.family in SMALL_FAMILIES:
+        from repro.models.small import classifier_loss
+        return classifier_loss
+    from repro.models.transformer import lm_loss
+    return lm_loss

@@ -1,0 +1,142 @@
+"""The paper's own experiment models (§IV-C).
+
+* MLP — two hidden layers (200, 200) + classifier; 199,210 params at
+  28x28x1/10 classes, exactly the paper's count for MNIST.
+* CNN — three 3x3 conv layers (32, 64, 64) with 2x2 maxpool after the first
+  two, then two FC layers (hidden 64); ~1.2e5 params, matching the paper's
+  "3 CNN layers and two MLP layers, 128420 parameters" up to rounding of the
+  undocumented exact layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.module import ParamSpec, init_params
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def mlp_specs(cfg: ModelConfig) -> dict:
+    d_in = cfg.image_size * cfg.image_size * cfg.image_channels
+    dims = (d_in,) + tuple(cfg.mlp_hidden) + (cfg.num_classes,)
+    specs = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs[f"w{i}"] = ParamSpec((a, b), (None, None), init="fan_in")
+        specs[f"b{i}"] = ParamSpec((b,), (None,), init="zeros")
+    return specs
+
+
+def mlp_apply(params: Pytree, images: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = images.reshape(images.shape[0], -1)
+    n = len(cfg.mlp_hidden)
+    for i in range(n + 1):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# CNN
+
+
+def cnn_specs(cfg: ModelConfig) -> dict:
+    chans = (cfg.image_channels,) + tuple(cfg.cnn_channels)
+    specs = {}
+    for i, (cin, cout) in enumerate(zip(chans[:-1], chans[1:])):
+        specs[f"conv{i}_w"] = ParamSpec((3, 3, cin, cout), (None,) * 4, init="fan_in")
+        specs[f"conv{i}_b"] = ParamSpec((cout,), (None,), init="zeros")
+    # spatial size after two 2x2 pools (ceil division for odd sizes)
+    s = cfg.image_size
+    for _ in range(2):
+        s = (s + 1) // 2
+    feat = s * s * cfg.cnn_channels[-1]
+    specs["fc0_w"] = ParamSpec((feat, 64), (None, None), init="fan_in")
+    specs["fc0_b"] = ParamSpec((64,), (None,), init="zeros")
+    specs["fc1_w"] = ParamSpec((64, cfg.num_classes), (None, None), init="fan_in")
+    specs["fc1_b"] = ParamSpec((cfg.num_classes,), (None,), init="zeros")
+    return specs
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "SAME"
+    )
+
+
+def cnn_apply(params: Pytree, images: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = images  # NHWC
+    for i in range(len(cfg.cnn_channels)):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + params[f"conv{i}_b"]
+        x = jax.nn.relu(x)
+        if i < 2:
+            x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc0_w"] + params["fc0_b"])
+    return x @ params["fc1_w"] + params["fc1_b"]
+
+
+# ---------------------------------------------------------------------------
+# shared classifier loss
+
+
+def small_model_specs(cfg: ModelConfig) -> dict:
+    return {"cnn": cnn_specs, "mlp": mlp_specs}[cfg.family](cfg)
+
+
+def small_model_apply(params: Pytree, images: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return {"cnn": cnn_apply, "mlp": mlp_apply}[cfg.family](params, images, cfg)
+
+
+def init_small_model(rng: jax.Array, cfg: ModelConfig) -> Pytree:
+    return init_params(rng, small_model_specs(cfg))
+
+
+def small_model_features(
+    params: Pytree, images: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Penultimate-layer representation (used by MOON's contrastive loss)."""
+    if cfg.family == "mlp":
+        x = images.reshape(images.shape[0], -1)
+        n = len(cfg.mlp_hidden)
+        for i in range(n):
+            x = jax.nn.relu(x @ params[f"w{i}"] + params[f"b{i}"])
+        return x
+    x = images
+    for i in range(len(cfg.cnn_channels)):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}_w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + params[f"conv{i}_b"]
+        x = jax.nn.relu(x)
+        if i < 2:
+            x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(x @ params["fc0_w"] + params["fc0_b"])
+
+
+def classifier_loss(
+    params: Pytree, batch: Dict[str, jax.Array], cfg: ModelConfig
+) -> jax.Array:
+    logits = small_model_apply(params, batch["images"], cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - label_logit)
+
+
+def classifier_accuracy(
+    params: Pytree, images: jax.Array, labels: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    logits = small_model_apply(params, images, cfg)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,13 @@
+from repro.nn.module import (
+    ParamSpec,
+    abstract_params,
+    axes_tree,
+    init_params,
+    param_bytes,
+    param_count,
+)
+
+__all__ = [
+    "ParamSpec", "abstract_params", "axes_tree", "init_params",
+    "param_bytes", "param_count",
+]

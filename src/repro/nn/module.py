@@ -1,0 +1,97 @@
+"""Minimal functional module system (no flax).
+
+A model is described by a *spec tree*: a nested dict whose leaves are
+:class:`ParamSpec` (shape + logical axis names + initializer). From one spec
+tree we derive
+
+* ``init_params``      — materialized parameter pytree,
+* ``axes_tree``        — parallel pytree of logical-axis tuples (consumed by
+                         ``repro.sharding.rules`` to build PartitionSpecs),
+* ``abstract_params``  — ShapeDtypeStruct pytree for AOT lowering (dry-run).
+
+Logical axis names used across the model zoo:
+  "embed"   d_model            → sharded on mesh "model" for 2D-sharded matmuls
+  "vocab"   vocabulary         → "model"
+  "q_heads" query heads        → "model"
+  "kv_heads" KV heads          → "model" when divisible, else replicated
+  "mlp"     FFN hidden         → "model"
+  "experts" MoE expert index   → "model" (expert parallelism)
+  "layers"  scanned layer stack→ never sharded (leading scan dim)
+  None      replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | embed | fan_in
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(rng: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return spec.scale * jax.random.normal(rng, spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return jax.random.normal(rng, spec.shape, spec.dtype) * 0.02 * spec.scale
+    if spec.init == "fan_in":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return std * jax.random.normal(rng, spec.shape, spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(rng: jax.Array, spec_tree: Pytree) -> Pytree:
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(k, s) for k, s in zip(rngs, leaves)]
+    )
+
+
+def axes_tree(spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def abstract_params(spec_tree: Pytree, dtype=None) -> Pytree:
+    """ShapeDtypeStruct stand-ins — no device allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        spec_tree,
+        is_leaf=_is_spec,
+    )
+
+
+def param_count(spec_tree: Pytree) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    )
+
+
+def param_bytes(spec_tree: Pytree, dtype=jnp.float32) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    return param_count(spec_tree) * itemsize

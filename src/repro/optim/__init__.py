@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import constant, cosine_decay, robbins_monro, warmup_cosine
+from repro.optim.sgd import SGD
+
+__all__ = ["AdamW", "SGD", "constant", "cosine_decay", "robbins_monro",
+           "warmup_cosine"]

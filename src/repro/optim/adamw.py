@@ -1,0 +1,40 @@
+"""AdamW — used by the large-architecture training runtime (train_4k shape)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params: Pytree) -> Pytree:
+        return {
+            "mu": jax.tree.map(jnp.zeros_like, params),
+            "nu": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Pytree, state: Pytree, params: Pytree, lr):
+        count = state["count"] + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def step(p, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            return p - lr * (upd + self.weight_decay * p)
+
+        new_params = jax.tree.map(step, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": count}

@@ -1,0 +1,10 @@
+from repro.sharding.rules import (
+    RULES,
+    cache_pspec,
+    param_pspecs,
+    shardings_from_pspecs,
+    spec_for,
+)
+
+__all__ = ["RULES", "cache_pspec", "param_pspecs", "shardings_from_pspecs",
+           "spec_for"]

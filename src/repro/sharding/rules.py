@@ -1,0 +1,139 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+Baseline layout (recorded as such in EXPERIMENTS.md §Perf):
+* tensor parallelism on mesh axis "model" for heads / FFN / experts / vocab;
+* the FL client stack (edge x ring-position) on ("pod", "data") — each ring
+  position holds its own full replica, sharded over "model";
+* anything that does not divide its mesh axis is replicated (logged), e.g.
+  yi-9b's 4 KV heads on a 16-way model axis.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.module import ParamSpec, axes_tree
+
+Pytree = Any
+
+# logical name -> preferred mesh axis
+RULES = {
+    "embed": None,          # residual dim replicated (Megatron TP baseline)
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "heads_ssm": "model",
+    "layers": None,         # scan stack dim
+    None: None,
+}
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return mesh.shape[name]
+
+
+def spec_for(
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    mesh: Mesh,
+    *,
+    leading: Tuple[Optional[str], ...] = (),
+    rules: dict | None = None,
+    log: Optional[List[str]] = None,
+) -> P:
+    """PartitionSpec for one param: ``leading`` mesh axes are prepended
+    (the FL client stack), then logical rules apply with divisibility
+    fallback to replication."""
+    rules = rules or RULES
+    entries: List[Optional[str]] = list(leading)
+    used = {a for e in leading if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    for dim, logical in zip(shape[len(leading):], axes):
+        mesh_axis = rules.get(logical)
+        if mesh_axis is not None and mesh_axis in used:
+            # one mesh axis can shard at most one dim per tensor: the first
+            # logical axis wins (e.g. "experts" beats "mlp" in expert FFNs)
+            mesh_axis = None
+        if mesh_axis is not None and dim % _axis_size(mesh, mesh_axis) != 0:
+            if log is not None:
+                log.append(
+                    f"replicated {logical}={dim} (not divisible by "
+                    f"{mesh_axis}={_axis_size(mesh, mesh_axis)})"
+                )
+            mesh_axis = None
+        if mesh_axis is not None:
+            used.add(mesh_axis)
+        entries.append(mesh_axis)
+    return P(*entries)
+
+
+def param_pspecs(
+    spec_tree: Pytree,
+    mesh: Mesh,
+    *,
+    leading: Tuple[Optional[str], ...] = (),
+    rules: dict | None = None,
+    log: Optional[List[str]] = None,
+) -> Pytree:
+    """PartitionSpec tree parallel to the ParamSpec tree. ``leading`` adds
+    FL-stack mesh axes for stacked client replicas."""
+
+    def one(s: ParamSpec) -> P:
+        full_shape = tuple([0] * len(leading)) + s.shape
+        return spec_for(full_shape, s.axes, mesh, leading=leading,
+                        rules=rules, log=log)
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def shardings_from_pspecs(pspec_tree: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def cache_pspec(
+    cache_shape: Tuple[int, ...],
+    mesh: Mesh,
+    *,
+    kind: str,
+    batch_axes: Tuple[str, ...],
+) -> P:
+    """Sharding for a KV/SSM cache leaf (reps, B, ...) .
+
+    kind="attn": (reps, B, S, KV, hd) — B over batch_axes when divisible;
+      KV over "model" when divisible, else S over "model" (yi-9b style
+      fallback: sequence-shard the cache instead of replicating it).
+    kind="ssm_conv"/"ssm_state": small per-step states — heads over "model".
+    """
+    if kind == "attn":
+        reps, b, s, kv, hd = cache_shape
+        model = mesh.shape["model"]
+        batch_size = 1
+        for a in batch_axes:
+            batch_size *= mesh.shape[a]
+        b_axis = batch_axes if b % batch_size == 0 and b >= batch_size else None
+        if kv % model == 0:
+            return P(None, b_axis, None, "model", None)
+        if s % model == 0:
+            return P(None, b_axis, "model", None, None)
+        return P(None, b_axis, None, None, None)
+    if kind == "ssm_conv":
+        # (reps, B, W-1, C): channels over model
+        reps, b, w, c = cache_shape
+        caxis = "model" if c % mesh.shape["model"] == 0 else None
+        return P(None, None, None, caxis)
+    if kind == "ssm_state":
+        # (reps, B, H, N, Pdim): heads over model
+        reps, b, h, n, pdim = cache_shape
+        haxis = "model" if h % mesh.shape["model"] == 0 else None
+        return P(None, None, haxis, None, None)
+    raise ValueError(kind)

@@ -1,0 +1,21 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_axpy,
+    tree_bytes,
+    tree_cast,
+    tree_count_params,
+    tree_dot,
+    tree_isfinite,
+    tree_norm,
+    tree_scale,
+    tree_sq_norm,
+    tree_sub,
+    tree_weighted_sum,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "tree_add", "tree_axpy", "tree_bytes", "tree_cast", "tree_count_params",
+    "tree_dot", "tree_isfinite", "tree_norm", "tree_scale", "tree_sq_norm",
+    "tree_sub", "tree_weighted_sum", "tree_zeros_like",
+]

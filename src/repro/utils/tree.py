@@ -1,0 +1,79 @@
+"""Pytree arithmetic used throughout the FL core and optimizers.
+
+Every FL algorithm in the paper manipulates whole parameter pytrees
+(ring hop, weighted cloud aggregation, proximal terms); these helpers keep
+that code readable and jit-friendly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_weighted_sum(trees: Sequence[Pytree], weights: Sequence[float]) -> Pytree:
+    """sum_i w_i * tree_i — the cloud aggregation (paper eq. 11)."""
+    assert len(trees) == len(weights) and trees
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda o, x, w=w: o + w * x, out, t)
+    return out
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves) if leaves else jnp.asarray(0.0)
+
+
+def tree_sq_norm(a: Pytree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x: jnp.sum(jnp.square(x)), a))
+    return sum(leaves) if leaves else jnp.asarray(0.0)
+
+
+def tree_norm(a: Pytree):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_count_params(a: Pytree) -> int:
+    return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a: Pytree) -> int:
+    return sum(int(math.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_isfinite(a: Pytree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x: jnp.all(jnp.isfinite(x)), a))
+    out = jnp.asarray(True)
+    for l in leaves:
+        out = jnp.logical_and(out, l)
+    return out

@@ -1,0 +1,90 @@
+"""Property tests (hypothesis) for the non-IID partitioners — the invariants
+every FL run depends on: partitions are disjoint, cover the dataset, leave no
+device empty, and pathological partitions bound per-device class diversity.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (
+    dirichlet_partition,
+    iid_partition,
+    pathological_partition,
+)
+
+
+def _labels(n, num_classes, seed):
+    return np.random.default_rng(seed).integers(0, num_classes, size=n)
+
+
+@st.composite
+def partition_case(draw):
+    num_classes = draw(st.integers(2, 10))
+    k = draw(st.integers(2, 12))
+    n = draw(st.integers(max(4 * k, 40), 400))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return n, num_classes, k, seed
+
+
+def _check_disjoint_cover(parts, n):
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n, "partition must cover every sample exactly once"
+    assert len(np.unique(allidx)) == n, "partitions must be disjoint"
+    assert all(len(p) > 0 for p in parts), "no device may be empty"
+
+
+@given(partition_case())
+@settings(max_examples=25, deadline=None)
+def test_iid_partition_invariants(case):
+    n, c, k, seed = case
+    labels = _labels(n, c, seed)
+    parts = iid_partition(labels, k, np.random.default_rng(seed))
+    _check_disjoint_cover(parts, n)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1, "iid split must be equal-sized"
+
+
+@given(partition_case(), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_pathological_partition_invariants(case, xi):
+    n, c, k, seed = case
+    labels = _labels(n, c, seed)
+    parts = pathological_partition(labels, k, xi, np.random.default_rng(seed))
+    _check_disjoint_cover(parts, n)
+    # each device draws xi contiguous shards of the label-sorted order, so a
+    # device sees more than xi classes only by crossing class boundaries —
+    # and there are at most (c - 1) boundaries in total across ALL shards.
+    excess = sum(max(len(np.unique(labels[p])) - xi, 0) for p in parts)
+    assert excess <= c - 1
+
+
+@given(partition_case(), st.floats(0.05, 5.0))
+@settings(max_examples=25, deadline=None)
+def test_dirichlet_partition_invariants(case, alpha):
+    n, c, k, seed = case
+    labels = _labels(n, c, seed)
+    parts = dirichlet_partition(labels, k, alpha, np.random.default_rng(seed))
+    _check_disjoint_cover(parts, n)
+
+
+def test_pathological_is_label_skewed():
+    labels = np.repeat(np.arange(10), 100)
+    parts = pathological_partition(labels, 20, 2, np.random.default_rng(0))
+    classes_per_device = [len(np.unique(labels[p])) for p in parts]
+    # xi=2: most devices should see very few classes — the paper's Fig. 8(b)
+    assert np.median(classes_per_device) <= 3
+
+
+def test_dirichlet_alpha_controls_skew():
+    labels = np.repeat(np.arange(10), 200)
+    rng = np.random.default_rng(0)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 10, alpha, rng)
+        fracs = []
+        for p in parts:
+            counts = np.bincount(labels[p], minlength=10) / len(p)
+            fracs.append(counts.max())
+        return np.mean(fracs)
+
+    assert skew(0.1) > skew(100.0), "small alpha must be more label-skewed"

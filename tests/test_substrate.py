@@ -1,0 +1,166 @@
+"""Substrate tests: tree math (hypothesis), optimizers, schedules,
+checkpointing, synthetic data, comm meter."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.io import restore, save
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import cosine_decay, warmup_cosine
+from repro.optim.sgd import SGD
+from repro.utils.tree import (
+    tree_add, tree_bytes, tree_count_params, tree_dot, tree_norm,
+    tree_scale, tree_sub, tree_weighted_sum,
+)
+
+
+def _tree(seed, shape=(7, 3)):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=shape), jnp.float32),
+        "b": {"c": jnp.asarray(rng.normal(size=(5,)), jnp.float32)},
+    }
+
+
+@given(st.integers(0, 1000), st.integers(0, 1000),
+       st.floats(-3, 3, allow_nan=False, allow_subnormal=False).filter(
+           lambda a: a == 0.0 or abs(a) > 1e-6))
+@settings(max_examples=20, deadline=None)
+def test_tree_algebra(s1, s2, alpha):
+    x, y = _tree(s1), _tree(s2)
+    # (x + y) - y == x
+    back = tree_sub(tree_add(x, y), y)
+    np.testing.assert_allclose(np.asarray(back["a"]), np.asarray(x["a"]),
+                               atol=1e-5)
+    # scale linearity: ||alpha x|| == |alpha| ||x||
+    np.testing.assert_allclose(
+        float(tree_norm(tree_scale(x, alpha))),
+        abs(alpha) * float(tree_norm(x)), rtol=1e-5,
+    )
+
+
+def test_tree_weighted_sum_is_convex_combination():
+    x, y = _tree(0), _tree(1)
+    out = tree_weighted_sum([x, y], [0.3, 0.7])
+    expect = 0.3 * np.asarray(x["a"]) + 0.7 * np.asarray(y["a"])
+    np.testing.assert_allclose(np.asarray(out["a"]), expect, atol=1e-6)
+
+
+def test_tree_counts():
+    x = _tree(0)
+    assert tree_count_params(x) == 21 + 5
+    assert tree_bytes(x) == (21 + 5) * 4
+
+
+def test_sgd_momentum_matches_manual():
+    sgd = SGD(momentum=0.9)
+    p = {"w": jnp.ones(4)}
+    g = {"w": jnp.full(4, 2.0)}
+    s = sgd.init(p)
+    p1, s1 = sgd.update(g, s, p, 0.1)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 1.0 - 0.1 * 2.0)
+    p2, s2 = sgd.update(g, s1, p1, 0.1)
+    # m2 = 0.9*2 + 2 = 3.8 -> p2 = p1 - 0.38
+    np.testing.assert_allclose(np.asarray(p2["w"]), 0.8 - 0.38, rtol=1e-6)
+
+
+def test_sgd_fused_matches_unfused():
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=300), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=300), jnp.float32)}
+    ref, fused = SGD(momentum=0.5), SGD(momentum=0.5, fused=True)
+    s0 = ref.init(p)
+    p_ref, s_ref = ref.update(g, s0, p, 0.05)
+    p_fus, s_fus = fused.update(g, s0, p, 0.05)
+    np.testing.assert_allclose(np.asarray(p_ref["w"]), np.asarray(p_fus["w"]),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_adamw_decreases_quadratic():
+    opt = AdamW(weight_decay=0.0)
+    p = {"w": jnp.full(3, 5.0)}
+    s = opt.init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, s = opt.update(g, s, p, 0.1)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.5
+
+
+def test_cosine_decay_endpoints():
+    lr = cosine_decay(0.01, 1e-5, 500)
+    np.testing.assert_allclose(float(lr(0)), 0.01, rtol=1e-5)
+    np.testing.assert_allclose(float(lr(500)), 1e-5, rtol=1e-3)
+    assert float(lr(250)) == pytest.approx((0.01 + 1e-5) / 2, rel=1e-3)
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0, rel=1e-5)
+    assert float(lr(100)) < 0.01
+
+
+def test_checkpoint_roundtrip():
+    tree = {
+        "params": _tree(3),
+        "step": jnp.asarray(17, jnp.int32),
+        "nested": [jnp.arange(4), (jnp.ones((2, 2)),)],
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.msgpack")
+        save(path, tree)
+        back = restore(path)
+    np.testing.assert_allclose(np.asarray(back["params"]["a"]),
+                               np.asarray(tree["params"]["a"]))
+    assert int(back["step"]) == 17
+    assert isinstance(back["nested"], list)
+    assert isinstance(back["nested"][1], tuple)
+    np.testing.assert_allclose(np.asarray(back["nested"][1][0]), 1.0)
+
+
+def test_synthetic_dataset_is_learnable_and_deterministic():
+    from repro.data.synthetic import make_task
+    tr1, te1 = make_task("mnist_like", train_per_class=20, test_per_class=5,
+                         seed=1)
+    tr2, _ = make_task("mnist_like", train_per_class=20, test_per_class=5,
+                       seed=1)
+    np.testing.assert_array_equal(tr1.images, tr2.images)
+    assert tr1.images.shape == (200, 28, 28, 1)
+    # nearest-class-mean classifier must beat chance by a wide margin:
+    # the class structure the FL experiments rely on actually exists
+    means = np.stack([tr1.images[tr1.labels == c].mean(0) for c in range(10)])
+    d = ((te1.images[:, None] - means[None]) ** 2).sum((2, 3, 4))
+    acc = (d.argmin(1) == te1.labels).mean()
+    assert acc > 0.5, f"synthetic classes not separable (acc={acc})"
+
+
+def test_token_stream_has_bigram_structure():
+    from repro.data.synthetic import make_token_stream
+    toks = make_token_stream(vocab_size=64, num_tokens=20_000, seed=0)
+    # successors of each token concentrate on few values
+    from collections import Counter, defaultdict
+    succ = defaultdict(Counter)
+    for a, b in zip(toks[:-1], toks[1:]):
+        succ[int(a)][int(b)] += 1
+    top4_mass = np.mean([
+        sum(w for _, w in c.most_common(4)) / sum(c.values())
+        for c in succ.values() if sum(c.values()) >= 20
+    ])
+    assert top4_mass > 0.6, f"stream not bigram-structured ({top4_mass})"
+
+
+def test_comm_meter():
+    from repro.core.comm import CommMeter
+    m = CommMeter(model_bytes=10)
+    m.record("cloud_up", 3)
+    m.record("p2p", 5)
+    assert m.total_transfers == 8
+    assert m.cloud_transfers == 3
+    assert m.total_bytes == 80
+    snap = m.snapshot()
+    assert snap["p2p_transfers"] == 5

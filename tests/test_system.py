@@ -1,0 +1,62 @@
+"""End-to-end behaviour tests for the FedSR system (replaces scaffold)."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import FLConfig, TrainConfig
+
+
+def test_fl_experiment_end_to_end():
+    """One full FL experiment: partition -> rounds -> eval -> comm history."""
+    from repro.core.executor import run_experiment
+    fl = FLConfig(algorithm="fedsr", num_devices=8, num_edges=2, rounds=3,
+                  partition="dirichlet", alpha=0.3, ring_rounds=2)
+    res = run_experiment(task="mnist_like", model_cfg=get_config("fedsr-mlp"),
+                         fl=fl, eval_every=1)
+    assert len(res.history) == 3
+    assert 0.0 <= res.final_accuracy <= 1.0
+    assert res.history[-1].comm["cloud_transfers"] == 3 * 2 * 2  # 2M per round
+    # accuracy should move above chance within 3 rounds on the easy task
+    assert res.final_accuracy > 0.15
+
+
+def test_large_arch_fedsr_runtime_learns():
+    """The datacenter FedSR runtime (stacked clients + ring + cloud sync)
+    reduces LM loss on a tiny dense config."""
+    import dataclasses
+    from repro.launch.train import lm_100m_config, train_loop
+    from repro.utils.logging import MetricLogger
+
+    cfg = dataclasses.replace(
+        lm_100m_config(), num_layers=2, d_model=128, d_ff=512, num_heads=4,
+        num_kv_heads=4, vocab_size=256, name="test-lm")
+    tcfg = TrainConfig(param_dtype="float32", learning_rate=0.5,
+                       momentum=0.5, cloud_sync_every=5)
+    out = train_loop(cfg, tcfg, steps=25, batch_per_client=8, seq_len=64,
+                     log=MetricLogger(quiet=True))
+    assert out["final_loss"] < out["first_loss"]
+
+
+def test_serving_generates_tokens():
+    from repro.launch.serve import prefill_and_decode
+    from repro.models.transformer import init_model
+
+    cfg = get_smoke_config("yi-9b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, size=(2, 8)),
+        jnp.int32)
+    toks, stats = prefill_and_decode(cfg, params, prompts, max_len=24,
+                                     new_tokens=16)
+    assert toks.shape == (2, 24)
+    assert stats["decode_tok_s"] > 0
+    # greedy decode is deterministic
+    toks2, _ = prefill_and_decode(cfg, params, prompts, max_len=24,
+                                  new_tokens=16)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks2))
