@@ -87,6 +87,34 @@ def run_roofline() -> None:
         )
 
 
+def run_smoke() -> None:
+    """Seconds-fast CI path (--smoke): exercises every entrypoint wiring —
+    one kernel micro-bench, the engine A/B at reduced size, and one tiny FL
+    round per engine — so the benchmark drivers can't silently rot. Invoked
+    from tier-1 (tests/test_benchmarks_smoke.py)."""
+    from benchmarks.kernel_bench import bench_fl_engines, bench_fused_sgd
+
+    name, us, derived = bench_fused_sgd()
+    _emit(f"kernel/{name}", us, derived)
+    name, us, derived = bench_fl_engines(num_devices=8, iters=1)
+    _emit(f"kernel/{name}", us, derived)
+
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.executor import run_experiment
+    from repro.data.synthetic import make_task
+
+    train, test = make_task("mnist_like", train_per_class=16,
+                            test_per_class=4, seed=0)
+    for engine in ("sequential", "batched"):
+        fl = FLConfig(algorithm="fedavg", num_devices=4, num_edges=2,
+                      rounds=1, local_epochs=1, batch_size=16, engine=engine)
+        res = run_experiment(task="mnist_like", model_cfg=get_config("fedsr-mlp"),
+                             fl=fl, train=train, test=test)
+        _emit(f"smoke/fedavg_round/{engine}",
+              res.history[-1].seconds * 1e6, f"acc={res.final_accuracy:.3f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=10,
@@ -95,6 +123,8 @@ def main() -> None:
                     help="comma-separated subset")
     ap.add_argument("--quick", action="store_true",
                     help="tables 1+3 + kernels + roofline only, fewer rounds")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-fast wiring check (used by tier-1 tests)")
     args = ap.parse_args()
 
     only = set(args.only.split(","))
@@ -104,6 +134,9 @@ def main() -> None:
         rounds = min(rounds, 6)
 
     print("name,us_per_call,derived")
+    if args.smoke:
+        run_smoke()
+        return
     if "kernels" in only:
         run_kernels()
     if "roofline" in only:

@@ -150,6 +150,16 @@ class FLConfig:
     moon_tau: float = 0.5            # MOON temperature
     seed: int = 0
     reshuffle_ring: bool = True      # paper: edge server randomly re-rings each round
+    engine: str = "sequential"       # sequential: python loop over single-client
+                                     #   jitted steps (the reference semantics);
+                                     # batched: all concurrent client visits of a
+                                     #   round run as ONE vmap-compiled scan over
+                                     #   padded, mask-validated batch stacks
+                                     #   (same math, one dispatch per round)
+    use_fused_sgd: bool = False      # opt-in: apply the momentum update as one
+                                     # fused Pallas pass over the raveled
+                                     # parameter vector instead of per-leaf
+                                     # tree.map ops (plain/prox/moon variants)
 
     @property
     def devices_per_edge(self) -> int:

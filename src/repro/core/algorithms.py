@@ -4,6 +4,17 @@ Every algorithm exposes ``run_round(w_glob, round_idx, lr, rng, meter,
 state) -> (w_glob, state)`` over a shared roster of clients, so the
 executor and benchmarks treat them uniformly. ``state`` carries algorithm-
 private memory (MOON's previous local models).
+
+``FLConfig.engine`` selects how a round executes:
+
+* ``sequential`` — the reference python loop, one ``LocalTrainer.train``
+  call per client visit.
+* ``batched`` — every set of *concurrent* visits runs as one
+  ``LocalTrainer.train_many`` call: star algorithms batch their whole
+  cohort; FedSR/HierFAVG/Ring batch their independent rings/edges and step
+  them hop-by-hop in lockstep. Data plans are pre-drawn in the sequential
+  engine's visit order (see ``plan_epoch_indices``), so both engines
+  consume an identical RNG stream and produce matching rounds.
 """
 from __future__ import annotations
 
@@ -17,8 +28,13 @@ from repro.core.comm import CommMeter
 from repro.core.local import LocalTrainer
 from repro.core.ring import ring_optimization
 from repro.core.topology import assign_edges, clusters_of, sample_ring
-from repro.data.pipeline import ClientData
-from repro.utils.tree import tree_weighted_sum
+from repro.data.pipeline import (
+    ClientData, plan_epoch_indices, stack_client_batches, stack_plans,
+)
+from repro.utils.tree import (
+    tree_broadcast, tree_stack, tree_unstack, tree_weighted_sum,
+    tree_weighted_sum_stacked,
+)
 
 Pytree = Any
 
@@ -27,6 +43,10 @@ class _Base:
     variant = "plain"
 
     def __init__(self, trainer: LocalTrainer, clients: List[ClientData], fl: FLConfig):
+        if fl.engine not in ("sequential", "batched"):
+            raise ValueError(
+                f"unknown FLConfig.engine {fl.engine!r}; "
+                "expected 'sequential' or 'batched'")
         self.trainer = trainer
         self.clients = clients
         self.fl = fl
@@ -41,13 +61,52 @@ class _Base:
         sizes = np.asarray([len(self.clients[i]) for i in ids], np.float64)
         return sizes / sizes.sum()
 
+    # -- shared batched ring runner (FedSR clusters / the global ring) ------
+    def _run_rings_batched(self, w_glob, rings: List[List[int]], lr, rng,
+                           meter: Optional[CommMeter]) -> List[Pytree]:
+        """Advance all rings concurrently: hop j of every ring is one
+        ``train_many`` call over the stacked ring models. Plans are drawn
+        ring-by-ring first — the sequential visit order — so the RNG stream
+        matches ``ring_optimization`` exactly. Rings shorter than the longest
+        get all-invalid steps past their end (model carried unchanged)."""
+        fl = self.fl
+        plans = {}
+        for r, ring in enumerate(rings):
+            for lap in range(fl.ring_rounds):
+                for j, i in enumerate(ring):
+                    plans[r, lap, j] = plan_epoch_indices(
+                        self.clients[i], fl.batch_size, fl.local_epochs, rng)
+        models = tree_broadcast(w_glob, len(rings))
+        hops = max(len(r) for r in rings)
+        for lap in range(fl.ring_rounds):
+            for j in range(hops):
+                hop_clients = [
+                    self.clients[ring[j] if j < len(ring) else ring[0]]
+                    for ring in rings
+                ]
+                hop_plans = [
+                    plans[r, lap, j] if j < len(ring) else None
+                    for r, ring in enumerate(rings)
+                ]
+                batches, valid = stack_plans(hop_clients, hop_plans)
+                models = self.trainer.train_many(models, batches, valid, lr=lr)
+        if meter is not None:
+            for ring in rings:
+                meter.record("p2p", fl.ring_rounds * (len(ring) - 1)
+                             + (fl.ring_rounds if fl.ring_rounds > 1 else 0))
+        return tree_unstack(models, len(rings))
+
 
 class FedAvg(_Base):
     """McMahan et al. 2017 — the star baseline (paper Fig. 1)."""
 
     def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
         ids = self._sample(rng)
-        locals_, weights = [], self._weights(ids)
+        weights = self._weights(ids)
+        if self.fl.engine == "batched":
+            return self._run_round_batched(
+                w_glob, ids, weights, lr, rng, meter, state)
+        locals_ = []
         for i in ids:
             meter.record("cloud_down")
             w = self.trainer.train(
@@ -60,7 +119,24 @@ class FedAvg(_Base):
             self._post(i, w, state)
         return tree_weighted_sum(locals_, weights.tolist()), state
 
+    def _run_round_batched(self, w_glob, ids, weights, lr, rng, meter, state):
+        batches, valid = stack_client_batches(
+            [self.clients[i] for i in ids], self.fl.batch_size,
+            self.fl.local_epochs, rng)
+        meter.record("cloud_down", len(ids))
+        out = self.trainer.train_many(
+            w_glob, batches, valid, lr=lr, broadcast=True,
+            variant=self.variant, **self._batched_extra(w_glob, ids, state))
+        meter.record("cloud_up", len(ids))
+        if type(self)._post is not FedAvg._post:    # only MOON keeps locals
+            for i, w in zip(ids, tree_unstack(out, len(ids))):
+                self._post(i, w, state)
+        return tree_weighted_sum_stacked(out, weights), state
+
     def _extra(self, w_glob, i, state) -> Dict:
+        return {}
+
+    def _batched_extra(self, w_glob, ids, state) -> Dict:
         return {}
 
     def _post(self, i, w, state) -> None:
@@ -74,6 +150,9 @@ class FedProx(FedAvg):
     def _extra(self, w_glob, i, state):
         return {"anchor": w_glob}
 
+    def _batched_extra(self, w_glob, ids, state):
+        return {"anchor": tree_broadcast(w_glob, len(ids))}
+
 
 class Moon(FedAvg):
     """Li et al. 2021 — model-contrastive loss. state["prev"][i] holds the
@@ -84,6 +163,11 @@ class Moon(FedAvg):
         prev = state.setdefault("prev", {}).get(i, w_glob)
         return {"w_glob": w_glob, "w_prev": prev}
 
+    def _batched_extra(self, w_glob, ids, state):
+        prev = state.setdefault("prev", {})
+        return {"w_glob": tree_broadcast(w_glob, len(ids)),
+                "w_prev": tree_stack([prev.get(i, w_glob) for i in ids])}
+
     def _post(self, i, w, state):
         state.setdefault("prev", {})[i] = w
 
@@ -93,6 +177,8 @@ class HierFAVG(_Base):
     per cloud round (matched compute budget with FedSR: same R)."""
 
     def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+        if self.fl.engine == "batched":
+            return self._run_round_batched(w_glob, lr, rng, meter), state
         edge_models, edge_weights = [], []
         for edge_devices in self.edges:
             ids = sample_ring(edge_devices, rng,
@@ -116,6 +202,45 @@ class HierFAVG(_Base):
         total = float(sum(edge_weights))
         return tree_weighted_sum(edge_models, [w / total for w in edge_weights]), state
 
+    def _run_round_batched(self, w_glob, lr, rng, meter: CommMeter):
+        """All edges iterate in lockstep: iteration r trains every (edge,
+        device) pair in one ``train_many`` call, then aggregates per edge.
+        Sampling + plans are drawn edge-by-edge (the sequential order)."""
+        fl = self.fl
+        edge_ids, plans = [], {}
+        for e, edge_devices in enumerate(self.edges):
+            ids = sample_ring(edge_devices, rng,
+                              participation=fl.participation, reshuffle=False)
+            edge_ids.append(ids)
+            for r in range(fl.ring_rounds):
+                for i in ids:
+                    plans[e, r, i] = plan_epoch_indices(
+                        self.clients[i], fl.batch_size, fl.local_epochs, rng)
+        pairs = [(e, i) for e, ids in enumerate(edge_ids) for i in ids]
+        per_edge_w = [self._weights(ids) for ids in edge_ids]
+        edge_models = [w_glob] * len(self.edges)
+        for r in range(fl.ring_rounds):
+            params = tree_stack([edge_models[e] for e, _ in pairs])
+            batches, valid = stack_plans(
+                [self.clients[i] for _, i in pairs],
+                [plans[e, r, i] for e, i in pairs])
+            locals_ = tree_unstack(
+                self.trainer.train_many(params, batches, valid, lr=lr),
+                len(pairs))
+            off, edge_models = 0, []
+            for ids, w in zip(edge_ids, per_edge_w):
+                edge_models.append(tree_weighted_sum(
+                    locals_[off:off + len(ids)], w.tolist()))
+                off += len(ids)
+        sizes = [sum(len(self.clients[i]) for i in ids) for ids in edge_ids]
+        for ids in edge_ids:
+            meter.record("cloud_down")
+            meter.record("edge_down", fl.ring_rounds * len(ids))
+            meter.record("edge_up", fl.ring_rounds * len(ids))
+            meter.record("cloud_up")
+        total = float(sum(sizes))
+        return tree_weighted_sum(edge_models, [s / total for s in sizes])
+
 
 class RingOptimization(_Base):
     """Paper §III-B standalone baseline: ONE global ring over all sampled
@@ -127,11 +252,14 @@ class RingOptimization(_Base):
         if self.fl.reshuffle_ring:
             rng.shuffle(ring_ids)
         meter.record("cloud_down")                      # seed the first device
-        w = ring_optimization(
-            self.trainer, w_glob, [self.clients[i] for i in ring_ids],
-            lr=lr, laps=self.fl.ring_rounds,
-            local_epochs=self.fl.local_epochs, rng=rng, meter=meter,
-        )
+        if self.fl.engine == "batched":
+            w = self._run_rings_batched(w_glob, [ring_ids], lr, rng, meter)[0]
+        else:
+            w = ring_optimization(
+                self.trainer, w_glob, [self.clients[i] for i in ring_ids],
+                lr=lr, laps=self.fl.ring_rounds,
+                local_epochs=self.fl.local_epochs, rng=rng, meter=meter,
+            )
         meter.record("cloud_up")                        # readout
         return w, state
 
@@ -154,6 +282,14 @@ class FedSR(_Base):
         else:
             ids = self._sample(rng)
             rings = clusters_of(ids, self.fl.devices_per_edge, rng)
+        if self.fl.engine == "batched":
+            meter.record("cloud_down", len(rings))      # w_glob -> edges
+            edge_models = self._run_rings_batched(w_glob, rings, lr, rng, meter)
+            meter.record("cloud_up", len(rings))        # edge models -> cloud
+            sizes = [sum(len(self.clients[i]) for i in r) for r in rings]
+            total = float(sum(sizes))
+            return tree_weighted_sum(
+                edge_models, [s / total for s in sizes]), state
         edge_models, sizes = [], []
         for ring_ids in rings:
             meter.record("cloud_down")                  # w_glob -> edge
@@ -179,31 +315,47 @@ class Scaffold(_Base):
     """
 
     def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
-        from repro.utils.tree import tree_scale, tree_sub, tree_zeros_like
+        from repro.utils.tree import tree_sub, tree_zeros_like
 
         c = state.setdefault("c", tree_zeros_like(w_glob))
         ci_map = state.setdefault("ci", {})
         ids = self._sample(rng)
         weights = self._weights(ids)
-        locals_, delta_cs = [], []
-        for i in ids:
-            ci = ci_map.get(i, tree_zeros_like(w_glob))
-            meter.record("cloud_down", 2)            # model + c
-            w = self.trainer.train(
-                w_glob, self.clients[i], lr=lr,
-                epochs=self.fl.local_epochs, rng=rng, variant="scaffold",
-                c_glob=c, c_local=ci,
-            )
-            steps = max(self.trainer.last_steps, 1)
+        cis = [ci_map.get(i, tree_zeros_like(w_glob)) for i in ids]
+        if self.fl.engine == "batched":
+            batches, valid = stack_client_batches(
+                [self.clients[i] for i in ids], self.fl.batch_size,
+                self.fl.local_epochs, rng)
+            meter.record("cloud_down", 2 * len(ids))    # model + c
+            out = self.trainer.train_many(
+                w_glob, batches, valid, lr=lr, broadcast=True,
+                variant="scaffold", c_glob=tree_broadcast(c, len(ids)),
+                c_local=tree_stack(cis))
+            meter.record("cloud_up", 2 * len(ids))      # model + delta c
+            new_w = tree_weighted_sum_stacked(out, weights)
+            locals_ = tree_unstack(out, len(ids))
+            steps = [max(int(s), 1) for s in self.trainer.last_steps_many]
+        else:
+            locals_, steps = [], []
+            for i, ci in zip(ids, cis):
+                meter.record("cloud_down", 2)           # model + c
+                locals_.append(self.trainer.train(
+                    w_glob, self.clients[i], lr=lr,
+                    epochs=self.fl.local_epochs, rng=rng, variant="scaffold",
+                    c_glob=c, c_local=ci,
+                ))
+                steps.append(max(self.trainer.last_steps, 1))
+                meter.record("cloud_up", 2)             # model + delta c
+            new_w = tree_weighted_sum(locals_, weights.tolist())
+        delta_cs = []
+        for i, ci, w, k in zip(ids, cis, locals_, steps):
             ci_new = jax.tree.map(
-                lambda cio, co, wg, wi: cio - co + (wg - wi) / (steps * lr),
+                lambda cio, co, wg, wi, k=float(k):
+                    cio - co + (wg - wi) / (k * lr),
                 ci, c, w_glob, w,
             )
             delta_cs.append(tree_sub(ci_new, ci))
             ci_map[i] = ci_new
-            locals_.append(w)
-            meter.record("cloud_up", 2)              # model + delta c
-        new_w = tree_weighted_sum(locals_, weights.tolist())
         # c += (participants/K) * mean(delta_c)
         mean_dc = tree_weighted_sum(
             delta_cs, [1.0 / len(delta_cs)] * len(delta_cs))

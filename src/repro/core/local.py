@@ -5,15 +5,29 @@ reuse these, so accuracy differences between algorithms come from the
 *aggregation schedule*, never from divergent local implementations. Momentum
 is reset at the start of each client visit (the model hops between devices;
 optimizer state does not travel with it).
+
+Two execution engines share the same losses and update rule:
+
+* sequential — ``train``: a python loop over single-client jitted steps (the
+  reference semantics, one dispatch per batch).
+* batched — ``train_many``: every concurrent client visit of a round runs at
+  once. Model/momentum pytrees are stacked along a leading client axis, the
+  per-client gradient is ``jax.vmap``-ed, and a ``jax.lax.scan`` walks the
+  padded step axis; a (C, S) valid mask turns padded steps into no-ops for
+  the clients that ran out of data, so uneven shard sizes batch cleanly.
+
+The update rule itself is elementwise, so one implementation serves both
+engines — and can optionally run as a single fused Pallas pass over the
+raveled parameter vector (``FLConfig.use_fused_sgd``).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
 from repro.configs.base import FLConfig, ModelConfig
 from repro.models.small import classifier_loss, small_model_features
@@ -22,11 +36,9 @@ from repro.utils.tree import tree_sq_norm, tree_sub
 Pytree = Any
 
 
-def _sgd_momentum_step(loss_fn, params, mom, batch, lr, momentum, *loss_args):
-    grads = jax.grad(loss_fn)(params, batch, *loss_args)
-    mom = jax.tree.map(lambda m, g: momentum * m + g, mom, grads)
-    params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
-    return params, mom
+def _expand_mask(ok, x):
+    """Broadcast a (C,) per-client step mask against a (C, ...) leaf."""
+    return ok.reshape(ok.shape + (1,) * (x.ndim - 1))
 
 
 class LocalTrainer:
@@ -64,32 +76,117 @@ class LocalTrainer:
             return classifier_loss(params, batch, cfg) + fl.mu * con
 
         mom = fl.momentum
+        fused = fl.use_fused_sgd
 
-        @jax.jit
-        def plain_step(params, m, batch, lr):
-            return _sgd_momentum_step(plain_loss, params, m, batch, lr, mom)
+        def apply_update(params, m, grads, lr):
+            """m = mu*m + g; p = p - lr*m. Elementwise, so the same code
+            updates a single client or a client-stacked pytree. Opt-in path:
+            one fused Pallas pass over the raveled parameter vector instead
+            of 2 tree.map passes (the minimal-HBM-traffic update)."""
+            if fused:
+                from repro.kernels.fused_sgd.ops import fused_sgd_update
+                flat_p, unravel = ravel_pytree(params)
+                flat_g, _ = ravel_pytree(grads)
+                flat_m, _ = ravel_pytree(m)
+                p_new, m_new = fused_sgd_update(
+                    flat_p, flat_g, flat_m, lr=lr, momentum=mom)
+                return unravel(p_new), unravel(m_new)
+            m = jax.tree.map(lambda mi, g: mom * mi + g, m, grads)
+            params = jax.tree.map(lambda p, mi: p - lr * mi, params, m)
+            return params, m
 
-        @jax.jit
-        def prox_step(params, m, batch, lr, anchor):
-            return _sgd_momentum_step(prox_loss, params, m, batch, lr, mom, anchor)
-
-        @jax.jit
-        def moon_step(params, m, batch, lr, w_glob, w_prev):
-            return _sgd_momentum_step(
-                moon_loss, params, m, batch, lr, mom, w_glob, w_prev)
-
-        @jax.jit
-        def scaffold_step(params, m, batch, lr, c_glob, c_local):
+        def scaffold_update(params, m, grads, lr, c_glob, c_local):
             # SCAFFOLD (Karimireddy et al. 2020): drift-corrected gradient
             # g + c - c_i (momentum-free, as in the paper's Algorithm 1)
-            grads = jax.grad(plain_loss)(params, batch)
             corr = jax.tree.map(lambda g, c, ci: g + c - ci,
                                 grads, c_glob, c_local)
             params = jax.tree.map(lambda p, d: p - lr * d, params, corr)
             return params, m
 
-        self._plain, self._prox, self._moon = plain_step, prox_step, moon_step
-        self._scaffold = scaffold_step
+        def make_step(loss_fn, update, n_loss_extras):
+            @jax.jit
+            def step(params, m, batch, lr, *extras):
+                grads = jax.grad(loss_fn)(params, batch,
+                                          *extras[:n_loss_extras])
+                return update(params, m, grads, lr, *extras[n_loss_extras:])
+            return step
+
+        self._plain = make_step(plain_loss, apply_update, 0)
+        self._prox = make_step(prox_loss, apply_update, 1)
+        self._moon = make_step(moon_loss, apply_update, 2)
+        self._scaffold = make_step(plain_loss, scaffold_update, 0)
+
+        # -- batched engine: vmap the per-client grad, scan over the padded
+        #    step axis. Extras are loop-invariant client-stacked pytrees; the
+        #    updates above are elementwise, so they apply to the stack as-is.
+        #    Masking is folded into the update arithmetic (ok in {0, 1}):
+        #        m' = m + ok*((mu-1)*m + g)      (== mu*m + g   | m)
+        #        p' = p - (ok*lr)*m'             (== p - lr*m'  | p)
+        #    so an invalid step is a no-op without the extra read/write
+        #    passes a jnp.where select would cost (the scan is memory-bound).
+        def masked_momentum_update(params, m, grads, lr, ok):
+            if fused:
+                # the flat kernel has no per-client lane — fall back to an
+                # explicit select around the fused pass
+                p_new, m_new = apply_update(params, m, grads, lr)
+                ok = ok.astype(bool)
+
+                def keep(new, old):
+                    return jnp.where(_expand_mask(ok, new), new, old)
+                return (jax.tree.map(keep, p_new, params),
+                        jax.tree.map(keep, m_new, m))
+
+            m = jax.tree.map(
+                lambda mi, g: mi + _expand_mask(ok, mi)
+                * ((mom - 1.0) * mi + g), m, grads)
+            params = jax.tree.map(
+                lambda p, mi: p - (_expand_mask(ok, p) * lr) * mi, params, m)
+            return params, m
+
+        def masked_scaffold_update(params, m, grads, lr, c_glob, c_local, ok):
+            corr = jax.tree.map(lambda g, c, ci: g + c - ci,
+                                grads, c_glob, c_local)
+            params = jax.tree.map(
+                lambda p, d: p - (_expand_mask(ok, p) * lr) * d, params, corr)
+            return params, m
+
+        def make_many(loss_fn, update, n_loss_extras, broadcast_params):
+            vgrad = jax.vmap(jax.grad(loss_fn),
+                             in_axes=(0, 0) + (0,) * n_loss_extras)
+
+            @jax.jit
+            def many(params, batches, valid, lr, *extras):
+                # params/extras: (C, ...) pytrees — or one client's tree when
+                # broadcast_params (stacked inside the jit, so the host never
+                # materializes C copies); batches: (C, S, B, ...); valid:
+                # (C, S) bool — False steps leave that client's params and
+                # momentum untouched.
+                if broadcast_params:
+                    C = valid.shape[0]
+                    params = jax.tree.map(
+                        lambda x: jnp.broadcast_to(x[None], (C,) + x.shape),
+                        params)
+                m = jax.tree.map(jnp.zeros_like, params)
+                xs = (jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), batches),
+                      jnp.moveaxis(valid, 0, 1).astype(jnp.float32))
+
+                def body(carry, x):
+                    p, m = carry
+                    batch, ok = x
+                    g = vgrad(p, batch, *extras[:n_loss_extras])
+                    return update(p, m, g, lr, *extras[n_loss_extras:],
+                                  ok), None
+
+                (p, _), _ = jax.lax.scan(body, (params, m), xs)
+                return p
+            return many
+
+        self._many, self._many_bc = ({
+            "plain": make_many(plain_loss, masked_momentum_update, 0, bc),
+            "prox": make_many(prox_loss, masked_momentum_update, 1, bc),
+            "moon": make_many(moon_loss, masked_momentum_update, 2, bc),
+            "scaffold": make_many(plain_loss, masked_scaffold_update, 0, bc),
+        } for bc in (False, True))
 
     # ------------------------------------------------------------------
     def train(
@@ -109,20 +206,59 @@ class LocalTrainer:
     ) -> Pytree:
         mom = jax.tree.map(jnp.zeros_like, params)
         lr = jnp.asarray(lr, jnp.float32)
+        extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
+        step = {"plain": self._plain, "prox": self._prox,
+                "moon": self._moon, "scaffold": self._scaffold}[variant]
         self.last_steps = 0
         for _ in range(epochs):
             for batch in client.epoch_batches(self.fl.batch_size, rng):
                 batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                if variant == "plain":
-                    params, mom = self._plain(params, mom, batch, lr)
-                elif variant == "prox":
-                    params, mom = self._prox(params, mom, batch, lr, anchor)
-                elif variant == "moon":
-                    params, mom = self._moon(params, mom, batch, lr, w_glob, w_prev)
-                elif variant == "scaffold":
-                    params, mom = self._scaffold(params, mom, batch, lr,
-                                                 c_glob, c_local)
-                else:
-                    raise ValueError(variant)
+                params, mom = step(params, mom, batch, lr, *extras)
                 self.last_steps += 1
         return params
+
+    # ------------------------------------------------------------------
+    def train_many(
+        self,
+        params: Pytree,
+        batches: Dict[str, np.ndarray],
+        valid: np.ndarray,
+        *,
+        lr: float,
+        variant: str = "plain",
+        broadcast: bool = False,
+        anchor: Optional[Pytree] = None,
+        w_glob: Optional[Pytree] = None,
+        w_prev: Optional[Pytree] = None,
+        c_glob: Optional[Pytree] = None,
+        c_local: Optional[Pytree] = None,
+    ) -> Pytree:
+        """One local-training visit for a whole cohort in one compiled call.
+
+        ``params`` and every extra are pytrees stacked along a leading client
+        axis C — or, with ``broadcast=True``, ``params`` is a single tree
+        that every client starts from (stacked device-side, the FedAvg-style
+        fast path). ``batches``/``valid`` come from ``stack_client_batches``
+        / ``stack_plans`` ((C, S, B, ...) data + (C, S) valid-step mask).
+        Returns the trained (C, ...) stack; per-client executed step counts
+        are left in ``self.last_steps_many``.
+        """
+        self.last_steps_many = np.asarray(valid).sum(axis=1).astype(int)
+        extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
+        fam = self._many_bc if broadcast else self._many
+        return fam[variant](
+            params,
+            {k: jnp.asarray(v) for k, v in batches.items()},
+            jnp.asarray(valid, bool), jnp.asarray(lr, jnp.float32), *extras)
+
+    @staticmethod
+    def _extras(variant, anchor, w_glob, w_prev, c_glob, c_local) -> tuple:
+        try:
+            return {
+                "plain": (),
+                "prox": (anchor,),
+                "moon": (w_glob, w_prev),
+                "scaffold": (c_glob, c_local),
+            }[variant]
+        except KeyError:
+            raise ValueError(variant) from None

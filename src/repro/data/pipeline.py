@@ -1,13 +1,82 @@
-"""Per-client data pipeline for the FL simulator."""
+"""Per-client data pipeline for the FL simulator.
+
+Two consumers share one batch-plan primitive: the sequential engine iterates
+``epoch_batches`` client by client, and the batched engine pre-draws the same
+plans for a whole cohort and stacks them along a leading client axis
+(``stack_client_batches``). Both draw from the numpy Generator with exactly
+the same calls in the same order, so switching engines never forks the RNG
+stream.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.data.partition import partition
 from repro.data.synthetic import Dataset
+
+
+def plan_epoch_indices(
+    client: "ClientData", batch_size: int, epochs: int,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """(steps, batch_size) sample-index plan for ``epochs`` shuffled epochs.
+
+    Each epoch is a permutation plus wrap-around padding to full batches
+    (static shapes keep the jitted train step cache warm). This makes the
+    identical rng draws ``epoch_batches`` makes, in the identical order.
+    """
+    n = len(client)
+    num_batches = max(1, int(np.ceil(n / batch_size)))
+    rows = []
+    for _ in range(epochs):
+        idx = rng.permutation(n)
+        if num_batches * batch_size > n:
+            extra = rng.integers(0, n, size=num_batches * batch_size - n)
+            idx = np.concatenate([idx, extra])
+        rows.append(idx.reshape(num_batches, batch_size))
+    return np.concatenate(rows, axis=0)
+
+
+def stack_plans(
+    clients: Sequence["ClientData"],
+    plans: Sequence[Optional[np.ndarray]],
+) -> Tuple[dict, np.ndarray]:
+    """Materialize per-client batch plans into client-stacked arrays.
+
+    Returns ``({"images": (C, S, B, ...), "labels": (C, S, B)}, valid)`` with
+    ``S = max steps`` and ``valid`` a (C, S) bool mask. Shorter plans are
+    padded by repeating their first batch; a ``None`` plan yields an all-
+    invalid row (used for ring positions past a shorter ring's end). Padded
+    steps carry real data but are masked to no-ops by the engine.
+    """
+    B = next(p.shape[1] for p in plans if p is not None)
+    real = [p if p is not None else np.zeros((1, B), np.int64) for p in plans]
+    S = max(p.shape[0] for p in real)
+    imgs, labs = [], []
+    valid = np.zeros((len(clients), S), bool)
+    for ci, (c, p) in enumerate(zip(clients, real)):
+        s = p.shape[0]
+        img, lab = c.images[p], c.labels[p]
+        if s < S:
+            img = np.concatenate([img, np.repeat(img[:1], S - s, axis=0)])
+            lab = np.concatenate([lab, np.repeat(lab[:1], S - s, axis=0)])
+        imgs.append(img)
+        labs.append(lab)
+        valid[ci, :s] = plans[ci] is not None
+    return {"images": np.stack(imgs), "labels": np.stack(labs)}, valid
+
+
+def stack_client_batches(
+    clients: Sequence["ClientData"], batch_size: int, epochs: int,
+    rng: np.random.Generator,
+) -> Tuple[dict, np.ndarray]:
+    """Plan + stack one cohort's visits, consuming ``rng`` in the sequential
+    engine's visit order (client by client)."""
+    plans = [plan_epoch_indices(c, batch_size, epochs, rng) for c in clients]
+    return stack_plans(clients, plans)
 
 
 @dataclasses.dataclass
@@ -23,16 +92,8 @@ class ClientData:
     def epoch_batches(
         self, batch_size: int, rng: np.random.Generator
     ) -> Iterator[dict]:
-        """One shuffled epoch of full batches (wrap-around padding so every
-        batch has a static shape — keeps the jitted train step cache warm)."""
-        n = len(self)
-        num_batches = max(1, int(np.ceil(n / batch_size)))
-        idx = rng.permutation(n)
-        if num_batches * batch_size > n:
-            extra = rng.integers(0, n, size=num_batches * batch_size - n)
-            idx = np.concatenate([idx, extra])
-        for b in range(num_batches):
-            sl = idx[b * batch_size : (b + 1) * batch_size]
+        """One shuffled epoch of full batches (see plan_epoch_indices)."""
+        for sl in plan_epoch_indices(self, batch_size, 1, rng):
             yield {"images": self.images[sl], "labels": self.labels[sl]}
 
 

@@ -179,6 +179,21 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
         loss, grads = jax.value_and_grad(
             lambda p: lm_loss(p, batch, cfg, remat=remat)
         )(params)
+        if tcfg.fused_sgd:
+            # opt-in: one fused Pallas pass per leaf (read p/g/m, write p/m
+            # once) instead of two tree.map passes.
+            from repro.kernels.fused_sgd.ops import fused_sgd_update
+            leaves, treedef = jax.tree.flatten(params)
+            pairs = [
+                fused_sgd_update(p, g.astype(p.dtype), m.astype(p.dtype),
+                                 lr=lr.astype(p.dtype),
+                                 momentum=tcfg.momentum)
+                for p, g, m in zip(leaves, jax.tree.leaves(grads),
+                                   jax.tree.leaves(mom))
+            ]
+            params = jax.tree.unflatten(treedef, [p for p, _ in pairs])
+            mom = jax.tree.unflatten(treedef, [m for _, m in pairs])
+            return params, mom, loss
         mom = jax.tree.map(lambda m, g: tcfg.momentum * m + g.astype(m.dtype),
                            mom, grads)
         params = jax.tree.map(

@@ -110,6 +110,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config of --arch")
     ap.add_argument("--sync-every", type=int, default=5)
+    ap.add_argument("--fused-sgd", action="store_true",
+                    help="fused Pallas momentum update (see kernels/fused_sgd)")
     ap.add_argument("--log", default=None)
     args = ap.parse_args()
 
@@ -120,7 +122,8 @@ def main() -> None:
     else:
         cfg = get_config(args.arch)
     tcfg = TrainConfig(param_dtype="float32", learning_rate=0.3,
-                       momentum=0.5, cloud_sync_every=args.sync_every)
+                       momentum=0.5, cloud_sync_every=args.sync_every,
+                       fused_sgd=args.fused_sgd)
     log = MetricLogger(args.log)
     out = train_loop(cfg, tcfg, steps=args.steps,
                      batch_per_client=args.batch, seq_len=args.seq, log=log)

@@ -45,6 +45,32 @@ def tree_weighted_sum(trees: Sequence[Pytree], weights: Sequence[float]) -> Pytr
     return out
 
 
+def tree_stack(trees: Sequence[Pytree]) -> Pytree:
+    """Stack identical pytrees along a new leading axis (the client axis of
+    the batched engine)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(tree: Pytree, n: int) -> list:
+    """Inverse of tree_stack: split the leading axis back into n pytrees."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_weighted_sum_stacked(stacked: Pytree, weights) -> Pytree:
+    """sum_i w_i * stacked[i] over the leading client axis — the stacked-
+    engine form of ``tree_weighted_sum`` (one contraction per leaf instead
+    of one dispatch per (client, leaf))."""
+    w = jnp.asarray(weights)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=1), stacked)
+
+
+def tree_broadcast(tree: Pytree, n: int) -> Pytree:
+    """n copies of ``tree`` stacked along a new leading axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+
 def tree_dot(a: Pytree, b: Pytree):
     leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
     return sum(leaves) if leaves else jnp.asarray(0.0)

@@ -1,0 +1,236 @@
+"""Engine parity: the batched vmap engine must reproduce the sequential
+python-loop engine — per loss variant (``train_many`` vs looped ``train``),
+per algorithm round (``engine="batched"`` vs ``engine="sequential"``), and
+for the opt-in fused-SGD update path. Uneven shard sizes are used throughout
+so the padding/valid-mask machinery is always exercised."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FLConfig
+from repro.core.algorithms import make_algorithm
+from repro.core.comm import CommMeter
+from repro.core.local import LocalTrainer
+from repro.data.pipeline import (
+    ClientData, make_clients, plan_epoch_indices, stack_client_batches,
+)
+from repro.data.synthetic import make_task
+from repro.models.small import init_small_model
+from repro.utils.tree import (
+    tree_broadcast, tree_scale, tree_stack, tree_unstack, tree_zeros_like,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+CFG = get_config("fedsr-mlp")
+SIZES = (5, 17, 24, 10)      # uneven on purpose: 5 < batch_size wraps inside
+                             # a batch; the rest pad to the max step count
+
+
+def _uneven_clients(sizes=SIZES, seed=0):
+    # 240 samples — enough for any size draw below (max 6 clients x 40)
+    train, _ = make_task("mnist_like", train_per_class=24, test_per_class=2,
+                         seed=seed)
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(train.labels))
+    out, off = [], 0
+    for cid, s in enumerate(sizes):
+        sl = idx[off:off + s]
+        off += s
+        out.append(ClientData(cid, train.images[sl], train.labels[sl]))
+    return out
+
+
+def _assert_trees_close(a, b, atol=1e-5, msg=""):
+    for (ka, la), (kb, lb) in zip(
+            jax.tree_util.tree_leaves_with_path(a),
+            jax.tree_util.tree_leaves_with_path(b)):
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), atol=atol, rtol=atol,
+            err_msg=f"{msg} leaf {ka}")
+
+
+def _variant_kwargs(variant, w0, other, n):
+    """(sequential per-client kwargs, batched stacked kwargs)."""
+    if variant == "plain":
+        return [{}] * n, {}
+    if variant == "prox":
+        return ([{"anchor": w0}] * n,
+                {"anchor": tree_broadcast(w0, n)})
+    if variant == "moon":
+        prevs = [tree_scale(other, 0.1 * (i + 1)) for i in range(n)]
+        return ([{"w_glob": w0, "w_prev": p} for p in prevs],
+                {"w_glob": tree_broadcast(w0, n), "w_prev": tree_stack(prevs)})
+    if variant == "scaffold":
+        c = tree_scale(other, 0.01)
+        cis = [tree_scale(other, 0.005 * (i + 1)) for i in range(n)]
+        return ([{"c_glob": c, "c_local": ci} for ci in cis],
+                {"c_glob": tree_broadcast(c, n), "c_local": tree_stack(cis)})
+    raise ValueError(variant)
+
+
+@pytest.mark.parametrize("variant", ["plain", "prox", "moon", "scaffold"])
+@pytest.mark.parametrize("epochs", [1, 2])
+def test_train_many_matches_looped_train(variant, epochs):
+    fl = FLConfig(batch_size=8, momentum=0.5, mu=0.1)
+    clients = _uneven_clients()
+    trainer = LocalTrainer(CFG, fl)
+    w0 = init_small_model(jax.random.PRNGKey(0), CFG)
+    other = init_small_model(jax.random.PRNGKey(1), CFG)
+    seq_kw, many_kw = _variant_kwargs(variant, w0, other, len(clients))
+
+    rng_seq = np.random.default_rng(42)
+    seq_out, seq_steps = [], []
+    for c, kw in zip(clients, seq_kw):
+        seq_out.append(trainer.train(w0, c, lr=0.05, epochs=epochs,
+                                     rng=rng_seq, variant=variant, **kw))
+        seq_steps.append(trainer.last_steps)
+
+    rng_bat = np.random.default_rng(42)
+    batches, valid = stack_client_batches(clients, fl.batch_size, epochs,
+                                          rng_bat)
+    out = trainer.train_many(tree_broadcast(w0, len(clients)), batches, valid,
+                             lr=0.05, variant=variant, **many_kw)
+    # both engines consumed the one RNG stream identically (bit-for-bit)
+    assert rng_seq.bit_generator.state == rng_bat.bit_generator.state
+    assert trainer.last_steps_many.tolist() == seq_steps
+    for i, (w_seq, w_bat) in enumerate(
+            zip(seq_out, tree_unstack(out, len(clients)))):
+        _assert_trees_close(w_seq, w_bat, msg=f"{variant} client {i}")
+
+
+def test_valid_mask_blocks_padded_steps():
+    """Flipping padded steps' data must not change the result — only the
+    valid mask decides what runs."""
+    fl = FLConfig(batch_size=8, momentum=0.5)
+    clients = _uneven_clients()
+    trainer = LocalTrainer(CFG, fl)
+    w0 = init_small_model(jax.random.PRNGKey(0), CFG)
+    batches, valid = stack_client_batches(
+        clients, fl.batch_size, 1, np.random.default_rng(0))
+    ref = trainer.train_many(tree_broadcast(w0, len(clients)), batches,
+                             valid, lr=0.05)
+    poisoned = {k: v.copy() for k, v in batches.items()}
+    mask = ~valid                                  # padded steps only
+    poisoned["images"][mask] = 1e3
+    poisoned["labels"][mask] = 0
+    out = trainer.train_many(tree_broadcast(w0, len(clients)), poisoned,
+                             valid, lr=0.05)
+    _assert_trees_close(ref, out, atol=0, msg="padded-step data leaked")
+
+
+ROUND_CASES = [
+    # (algorithm, fl overrides) — 2 rounds each so carried state (MOON prev,
+    # SCAFFOLD control variates) must also round-trip between engines
+    ("fedavg", {}),
+    ("fedprox", {}),
+    ("moon", {}),
+    ("scaffold", {}),
+    ("hieravg", {}),
+    ("ring", {}),
+    ("fedsr", {}),
+    ("fedavg", {"participation": 0.5}),
+    ("fedsr", {"participation": 0.75}),   # 6 of 8 -> uneven rings (4, 2)
+]
+
+
+@pytest.mark.parametrize("algo,overrides", ROUND_CASES)
+def test_round_parity_batched_vs_sequential(algo, overrides):
+    results = {}
+    for engine in ("sequential", "batched"):
+        fl = FLConfig(algorithm=algo, num_devices=8, num_edges=2, rounds=2,
+                      ring_rounds=2, local_epochs=1, batch_size=8,
+                      momentum=0.5, engine=engine, **overrides)
+        train, _ = make_task("mnist_like", train_per_class=10,
+                             test_per_class=2, seed=0)
+        clients = make_clients(train, scheme="dirichlet", num_devices=8,
+                               rng=np.random.default_rng(0), alpha=0.5)
+        trainer = LocalTrainer(CFG, fl)
+        algo_obj = make_algorithm(algo, trainer, clients, fl)
+        w = init_small_model(jax.random.PRNGKey(0), CFG)
+        meter = CommMeter(model_bytes=1)
+        rng = np.random.default_rng(7)
+        state = {}
+        for t in range(fl.rounds):
+            w, state = algo_obj.run_round(w, t, 0.05, rng, meter, state)
+        results[engine] = (w, meter, rng.bit_generator.state)
+    w_seq, meter_seq, rng_seq = results["sequential"]
+    w_bat, meter_bat, rng_bat = results["batched"]
+    assert rng_seq == rng_bat, "engines must share one RNG stream"
+    _assert_trees_close(w_seq, w_bat, msg=f"{algo} round")
+    for ch in ("cloud_up", "cloud_down", "edge_up", "edge_down", "p2p"):
+        assert getattr(meter_seq, ch) == getattr(meter_bat, ch), ch
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_fused_sgd_path_matches_tree_update(engine):
+    """FLConfig.use_fused_sgd swaps the update implementation, not the math."""
+    clients = _uneven_clients()
+    outs = {}
+    for fused in (False, True):
+        fl = FLConfig(batch_size=8, momentum=0.5, engine=engine,
+                      use_fused_sgd=fused)
+        trainer = LocalTrainer(CFG, fl)
+        w0 = init_small_model(jax.random.PRNGKey(0), CFG)
+        rng = np.random.default_rng(3)
+        if engine == "sequential":
+            outs[fused] = trainer.train(w0, clients[1], lr=0.05, epochs=1,
+                                        rng=rng)
+        else:
+            batches, valid = stack_client_batches(clients, fl.batch_size, 1,
+                                                  rng)
+            outs[fused] = trainer.train_many(
+                tree_broadcast(w0, len(clients)), batches, valid, lr=0.05)
+    _assert_trees_close(outs[False], outs[True], atol=1e-6,
+                        msg=f"fused vs tree.map ({engine})")
+
+
+# ---------------------------------------------------------------------------
+# batch-stacker properties
+
+
+def _check_stacker_invariants(sizes, batch_size, epochs, seed):
+    clients = _uneven_clients(sizes=sizes, seed=seed)
+    rng = np.random.default_rng(seed)
+    batches, valid = stack_client_batches(clients, batch_size, epochs, rng)
+    C = len(clients)
+    steps = [epochs * max(1, int(np.ceil(len(c) / batch_size)))
+             for c in clients]
+    S = max(steps)
+    assert batches["images"].shape[:3] == (C, S, batch_size)
+    assert batches["labels"].shape == (C, S, batch_size)
+    assert valid.shape == (C, S)
+    for ci, s in enumerate(steps):
+        assert valid[ci].sum() == s
+        assert valid[ci, :s].all() and not valid[ci, s:].any()
+    # every planned batch indexes that client's own shard
+    rng2 = np.random.default_rng(seed)
+    for c in clients:
+        plan = plan_epoch_indices(c, batch_size, epochs, rng2)
+        assert plan.min() >= 0 and plan.max() < len(c)
+    assert rng.bit_generator.state == rng2.bit_generator.state
+
+
+if HAS_HYPOTHESIS:
+    @given(st.lists(st.integers(1, 40), min_size=1, max_size=6),
+           st.integers(1, 16), st.integers(1, 3), st.integers(0, 10))
+    @settings(max_examples=15, deadline=None)
+    def test_stacker_invariants(sizes, batch_size, epochs, seed):
+        _check_stacker_invariants(tuple(sizes), batch_size, epochs, seed)
+else:
+    @pytest.mark.parametrize("sizes,batch_size,epochs,seed", [
+        ((1,), 8, 1, 0),
+        ((3, 40, 7), 16, 2, 1),
+        ((8, 8, 8), 8, 1, 2),
+        ((5, 17, 24, 10), 8, 3, 3),
+        ((12, 1, 30, 2, 9, 25), 4, 2, 4),
+    ])
+    def test_stacker_invariants(sizes, batch_size, epochs, seed):
+        _check_stacker_invariants(sizes, batch_size, epochs, seed)

@@ -1,0 +1,28 @@
+"""Benchmark entrypoints can't silently rot: tier-1 runs the --smoke fast
+path of benchmarks/run.py end-to-end (module entrypoint, CSV contract)."""
+import os
+import subprocess
+import sys
+
+
+def test_benchmark_run_smoke_entrypoint():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=540,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    lines = [l for l in out.stdout.splitlines() if l]
+    assert lines[0] == "name,us_per_call,derived"
+    names = {l.split(",")[0] for l in lines[1:]}
+    assert any(n.startswith("kernel/sgd_update") for n in names), names
+    assert any(n.startswith("kernel/fl_round") for n in names), names
+    assert {"smoke/fedavg_round/sequential",
+            "smoke/fedavg_round/batched"} <= names, names
+    # every emitted row respects the CSV contract
+    for l in lines[1:]:
+        name, us, _ = l.split(",", 2)
+        assert float(us) >= 0.0, l

@@ -169,3 +169,52 @@ def test_fused_sgd_zero_momentum_is_plain_sgd():
     pn, _ = fused_sgd_update(p, g, m, lr=0.1, momentum=0.0, block=64)
     np.testing.assert_allclose(np.asarray(pn), np.asarray(p - 0.1 * g),
                                rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [
+    (1, 256),             # single element, whole tile is pad
+    (255, 256), (257, 256),    # one short / one past the tile boundary
+    (1023, 1024), (4097, 1024),
+    (199_210, 65_536),    # the paper MLP's raveled parameter count
+])
+def test_fused_sgd_odd_tails(n, block):
+    """fp32 parity on sizes that never divide the tile — the pad/unpad path
+    of the flat-parameter update used by LocalTrainer(use_fused_sgd)."""
+    p, g, m = arr(n), arr(n), arr(n)
+    pn, mn = fused_sgd_update(p, g, m, lr=0.02, momentum=0.9, block=block)
+    pr, mr = sgd_reference(p, g, m, 0.02, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(pn), np.asarray(pr),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(mn), np.asarray(mr),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_fused_sgd_under_vmap():
+    """The launch path vmaps the client update over the FL stack; the fused
+    kernel must batch correctly."""
+    C, n = 4, 300
+    p, g, m = arr(C, n), arr(C, n), arr(C, n)
+    fn = jax.vmap(lambda p, g, m: fused_sgd_update(
+        p, g, m, lr=0.05, momentum=0.5, block=256))
+    pn, mn = fn(p, g, m)
+    pr, mr = sgd_reference(p, g, m, 0.05, momentum=0.5)
+    np.testing.assert_allclose(np.asarray(pn), np.asarray(pr),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(mn), np.asarray(mr),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_fused_sgd_traced_lr():
+    """lr arrives as a traced scalar from the cosine schedule — must not be
+    treated as a static value."""
+    p, g, m = arr(128), arr(128), arr(128)
+
+    @jax.jit
+    def step(lr):
+        return fused_sgd_update(p, g, m, lr=lr, momentum=0.5, block=128)
+
+    for lr in (0.1, 0.01):
+        pn, _ = step(jnp.asarray(lr, jnp.float32))
+        pr, _ = sgd_reference(p, g, m, lr, momentum=0.5)
+        np.testing.assert_allclose(np.asarray(pn), np.asarray(pr), rtol=1e-5,
+                                   atol=1e-7)

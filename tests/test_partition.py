@@ -4,7 +4,12 @@ device empty, and pathological partitions bound per-device class diversity.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                     # property-based when available ...
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:              # ... fixed examples otherwise
+    HAS_HYPOTHESIS = False
 
 from repro.data.partition import (
     dirichlet_partition,
@@ -12,18 +17,25 @@ from repro.data.partition import (
     pathological_partition,
 )
 
+# (n, num_classes, k, seed) — mirrors partition_case()'s ranges
+_FIXED_CASES = [
+    (40, 2, 2, 0), (100, 10, 12, 1), (397, 5, 7, 12345), (60, 3, 4, 7),
+    (248, 8, 10, 2**31 - 1), (44, 4, 11, 9),
+]
+
 
 def _labels(n, num_classes, seed):
     return np.random.default_rng(seed).integers(0, num_classes, size=n)
 
 
-@st.composite
-def partition_case(draw):
-    num_classes = draw(st.integers(2, 10))
-    k = draw(st.integers(2, 12))
-    n = draw(st.integers(max(4 * k, 40), 400))
-    seed = draw(st.integers(0, 2**31 - 1))
-    return n, num_classes, k, seed
+if HAS_HYPOTHESIS:
+    @st.composite
+    def partition_case(draw):
+        num_classes = draw(st.integers(2, 10))
+        k = draw(st.integers(2, 12))
+        n = draw(st.integers(max(4 * k, 40), 400))
+        seed = draw(st.integers(0, 2**31 - 1))
+        return n, num_classes, k, seed
 
 
 def _check_disjoint_cover(parts, n):
@@ -33,9 +45,7 @@ def _check_disjoint_cover(parts, n):
     assert all(len(p) > 0 for p in parts), "no device may be empty"
 
 
-@given(partition_case())
-@settings(max_examples=25, deadline=None)
-def test_iid_partition_invariants(case):
+def _check_iid(case):
     n, c, k, seed = case
     labels = _labels(n, c, seed)
     parts = iid_partition(labels, k, np.random.default_rng(seed))
@@ -44,9 +54,7 @@ def test_iid_partition_invariants(case):
     assert max(sizes) - min(sizes) <= 1, "iid split must be equal-sized"
 
 
-@given(partition_case(), st.integers(1, 4))
-@settings(max_examples=25, deadline=None)
-def test_pathological_partition_invariants(case, xi):
+def _check_pathological(case, xi):
     n, c, k, seed = case
     labels = _labels(n, c, seed)
     parts = pathological_partition(labels, k, xi, np.random.default_rng(seed))
@@ -58,13 +66,42 @@ def test_pathological_partition_invariants(case, xi):
     assert excess <= c - 1
 
 
-@given(partition_case(), st.floats(0.05, 5.0))
-@settings(max_examples=25, deadline=None)
-def test_dirichlet_partition_invariants(case, alpha):
+def _check_dirichlet(case, alpha):
     n, c, k, seed = case
     labels = _labels(n, c, seed)
     parts = dirichlet_partition(labels, k, alpha, np.random.default_rng(seed))
     _check_disjoint_cover(parts, n)
+
+
+if HAS_HYPOTHESIS:
+    @given(partition_case())
+    @settings(max_examples=25, deadline=None)
+    def test_iid_partition_invariants(case):
+        _check_iid(case)
+
+    @given(partition_case(), st.integers(1, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_pathological_partition_invariants(case, xi):
+        _check_pathological(case, xi)
+
+    @given(partition_case(), st.floats(0.05, 5.0))
+    @settings(max_examples=25, deadline=None)
+    def test_dirichlet_partition_invariants(case, alpha):
+        _check_dirichlet(case, alpha)
+else:
+    @pytest.mark.parametrize("case", _FIXED_CASES)
+    def test_iid_partition_invariants(case):
+        _check_iid(case)
+
+    @pytest.mark.parametrize("case", _FIXED_CASES)
+    @pytest.mark.parametrize("xi", [1, 2, 4])
+    def test_pathological_partition_invariants(case, xi):
+        _check_pathological(case, xi)
+
+    @pytest.mark.parametrize("case", _FIXED_CASES)
+    @pytest.mark.parametrize("alpha", [0.05, 0.5, 5.0])
+    def test_dirichlet_partition_invariants(case, alpha):
+        _check_dirichlet(case, alpha)
 
 
 def test_pathological_is_label_skewed():

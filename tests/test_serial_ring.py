@@ -19,6 +19,36 @@ def _tiny_cfg():
         num_kv_heads=2, vocab_size=128, name="serial-test")
 
 
+def test_fused_sgd_train_step_matches_unfused():
+    """TrainConfig.fused_sgd (the --fused-sgd launch flag) must only swap
+    the update implementation, not the pipelined train-step math."""
+    cfg = _tiny_cfg()
+    mesh = make_host_mesh()
+    stack, _ = fl_stack(mesh)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=stack + (4, 33)), jnp.int32)
+    batch = {"inputs": toks[..., :-1], "labels": toks[..., 1:]}
+    outs = {}
+    for fused in (False, True):
+        tcfg = TrainConfig(param_dtype="float32", learning_rate=0.1,
+                           momentum=0.5, fused_sgd=fused)
+        train_step, _ = make_train_step(cfg, tcfg, mesh)
+        p0 = init_model(jax.random.PRNGKey(0), cfg)
+        params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, stack + x.shape), p0)
+        state = {"params": params,
+                 "mom": jax.tree.map(jnp.zeros_like, params),
+                 "step": jnp.zeros((), jnp.int32)}
+        outs[fused] = jax.jit(train_step)(state, batch)
+    (s_ref, loss_ref), (s_fus, loss_fus) = outs[False], outs[True]
+    np.testing.assert_allclose(float(loss_ref), float(loss_fus), rtol=1e-6)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        s_ref["params"], s_fus["params"])
+    assert max(jax.tree.leaves(diffs)) < 1e-6
+
+
 def test_serial_ring_equals_manual_chain():
     cfg = _tiny_cfg()
     tcfg = TrainConfig(param_dtype="float32", learning_rate=0.1,

@@ -7,7 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                     # property-based when available ...
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:              # ... fixed examples otherwise
+    HAS_HYPOTHESIS = False
 
 from repro.checkpoint.io import restore, save
 from repro.optim.adamw import AdamW
@@ -27,11 +32,7 @@ def _tree(seed, shape=(7, 3)):
     }
 
 
-@given(st.integers(0, 1000), st.integers(0, 1000),
-       st.floats(-3, 3, allow_nan=False, allow_subnormal=False).filter(
-           lambda a: a == 0.0 or abs(a) > 1e-6))
-@settings(max_examples=20, deadline=None)
-def test_tree_algebra(s1, s2, alpha):
+def _check_tree_algebra(s1, s2, alpha):
     x, y = _tree(s1), _tree(s2)
     # (x + y) - y == x
     back = tree_sub(tree_add(x, y), y)
@@ -42,6 +43,22 @@ def test_tree_algebra(s1, s2, alpha):
         float(tree_norm(tree_scale(x, alpha))),
         abs(alpha) * float(tree_norm(x)), rtol=1e-5,
     )
+
+
+if HAS_HYPOTHESIS:
+    @given(st.integers(0, 1000), st.integers(0, 1000),
+           st.floats(-3, 3, allow_nan=False, allow_subnormal=False).filter(
+               lambda a: a == 0.0 or abs(a) > 1e-6))
+    @settings(max_examples=20, deadline=None)
+    def test_tree_algebra(s1, s2, alpha):
+        _check_tree_algebra(s1, s2, alpha)
+else:
+    @pytest.mark.parametrize("s1,s2,alpha", [
+        (0, 1, 0.0), (2, 3, -3.0), (1000, 0, 2.5), (17, 17, -1e-5),
+        (5, 999, 1.0),
+    ])
+    def test_tree_algebra(s1, s2, alpha):
+        _check_tree_algebra(s1, s2, alpha)
 
 
 def test_tree_weighted_sum_is_convex_combination():
