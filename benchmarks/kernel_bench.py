@@ -79,17 +79,14 @@ def bench_decode_attention() -> Tuple[str, float, str]:
     return "decode_attn_4k", us, f"{bytes_/(us*1e-6)/1e9:.1f}GB/s-effective"
 
 
-def bench_fl_engines(num_devices: int = 64, iters: int = 6) -> Tuple[str, float, str]:
-    """A/B the FL round engines: sequential python loop over per-client
-    jitted steps vs the batched vmap engine, one 64-client FedAvg round.
+def _fl_round_times(engines, num_devices: int, iters: int) -> dict:
+    """Min-of-iters wall time (us) of one FedAvg round per engine.
 
     IoT microbench regime: a narrow MLP (hidden 64x64) and ~2-sample device
     shards, so the round cost is dominated by per-visit dispatch/loop
     overhead — the term that grows linearly with fleet size and that the
     batched engine removes — rather than by raw matmul FLOPs, which are
-    identical under both engines. Min-of-iters timing (post-compile) to
-    resist host noise; derived reports the sequential time and the speedup
-    (acceptance target: >= 3x)."""
+    identical under every engine."""
     import dataclasses
 
     from repro.configs import get_config
@@ -107,7 +104,7 @@ def bench_fl_engines(num_devices: int = 64, iters: int = 6) -> Tuple[str, float,
                          test_per_class=2, seed=0)
     w0 = init_small_model(jax.random.PRNGKey(0), cfg)
     times = {}
-    for engine in ("sequential", "batched"):
+    for engine in engines:
         fl = FLConfig(algorithm="fedavg", num_devices=num_devices,
                       num_edges=8, batch_size=4, local_epochs=1,
                       engine=engine)
@@ -127,10 +124,37 @@ def bench_fl_engines(num_devices: int = 64, iters: int = 6) -> Tuple[str, float,
             jax.block_until_ready(round_())
             best = min(best, time.time() - t0)
         times[engine] = best * 1e6
+    return times
+
+
+def bench_fl_engines(num_devices: int = 64, iters: int = 6) -> Tuple[str, float, str]:
+    """A/B the FL round engines: sequential python loop over per-client
+    jitted steps vs the batched vmap engine, one 64-client FedAvg round.
+    Min-of-iters timing (post-compile) to resist host noise; derived reports
+    the sequential time and the speedup (acceptance target: >= 3x)."""
+    times = _fl_round_times(("sequential", "batched"), num_devices, iters)
     speedup = times["sequential"] / times["batched"]
     return (f"fl_round_fedavg{num_devices}_mlp64_batched", times["batched"],
             f"seq_us={times['sequential']:.0f};speedup={speedup:.1f}x")
 
 
+def bench_fl_engines_sharded(num_devices: int = 64, iters: int = 6) -> Tuple[str, float, str]:
+    """Batched vs sharded round A/B: same compiled math, with the (C, ...)
+    client stack placed on the host's sim mesh (launch.mesh.make_sim_mesh).
+    With one visible device the mesh is (1,) and the ratio measures pure
+    sharding-machinery overhead (~1x expected); with N faked or real devices
+    the client axis partitions N-ways and the ratio becomes the multi-device
+    scaling factor. ``derived`` records the mesh size so recorded numbers
+    are interpretable either way."""
+    from repro.launch.mesh import make_sim_mesh
+
+    times = _fl_round_times(("batched", "sharded"), num_devices, iters)
+    mesh_devices = make_sim_mesh(num_devices).shape["data"]
+    ratio = times["batched"] / times["sharded"]
+    return (f"fl_round_fedavg{num_devices}_mlp64_sharded", times["sharded"],
+            f"batched_us={times['batched']:.0f};mesh={mesh_devices}"
+            f";ratio={ratio:.2f}x")
+
+
 ALL = [bench_attention, bench_ssd, bench_fused_sgd, bench_decode_attention,
-       bench_fl_engines]
+       bench_fl_engines, bench_fl_engines_sharded]

@@ -155,7 +155,18 @@ class FLConfig:
                                      # batched: all concurrent client visits of a
                                      #   round run as ONE vmap-compiled scan over
                                      #   padded, mask-validated batch stacks
-                                     #   (same math, one dispatch per round)
+                                     #   (same math, one dispatch per round);
+                                     # sharded: the batched engine with the
+                                     #   stacked (C, ...) client axis placed on
+                                     #   a device mesh's "data" axis
+                                     #   (launch.mesh.make_sim_mesh) — cohorts
+                                     #   ghost-padded to a mesh-size multiple
+    mesh_data_axis: Optional[str] = None
+                                     # name of the sim-mesh axis the client
+                                     # stack shards over. None: "data" when
+                                     # engine="sharded", no sharding otherwise.
+                                     # Setting it on engine="batched" opts that
+                                     # engine into the same mesh placement.
     use_fused_sgd: bool = False      # opt-in: apply the momentum update as one
                                      # fused Pallas pass over the raveled
                                      # parameter vector instead of per-leaf
@@ -163,7 +174,10 @@ class FLConfig:
 
     @property
     def devices_per_edge(self) -> int:
-        assert self.num_devices % self.num_edges == 0
+        if self.num_edges <= 0 or self.num_devices % self.num_edges != 0:
+            raise ValueError(
+                f"num_edges={self.num_edges} must divide "
+                f"num_devices={self.num_devices} evenly")
         return self.num_devices // self.num_edges
 
 

@@ -15,6 +15,13 @@ private memory (MOON's previous local models).
   them hop-by-hop in lockstep. Data plans are pre-drawn in the sequential
   engine's visit order (see ``plan_epoch_indices``), so both engines
   consume an identical RNG stream and produce matching rounds.
+* ``sharded`` — the batched engine with the stacked ``(C, ...)`` client
+  axis placed on a device mesh's data axis (``launch.mesh.make_sim_mesh``).
+  Cohorts/rings are ghost-padded to the next multiple of the mesh size
+  (``_pad_cohort``) so the stack always shards evenly; ghost rows are
+  all-invalid (never train, never touch the RNG stream, never metered) and
+  are sliced off before aggregation. Setting ``FLConfig.mesh_data_axis``
+  opts the plain batched engine into the same mesh placement.
 """
 from __future__ import annotations
 
@@ -32,7 +39,7 @@ from repro.data.pipeline import (
     ClientData, plan_epoch_indices, stack_client_batches, stack_plans,
 )
 from repro.utils.tree import (
-    tree_broadcast, tree_stack, tree_unstack, tree_weighted_sum,
+    tree_broadcast, tree_prefix, tree_stack, tree_unstack, tree_weighted_sum,
     tree_weighted_sum_stacked,
 )
 
@@ -43,14 +50,35 @@ class _Base:
     variant = "plain"
 
     def __init__(self, trainer: LocalTrainer, clients: List[ClientData], fl: FLConfig):
-        if fl.engine not in ("sequential", "batched"):
+        if fl.engine not in ("sequential", "batched", "sharded"):
             raise ValueError(
                 f"unknown FLConfig.engine {fl.engine!r}; "
-                "expected 'sequential' or 'batched'")
+                "expected 'sequential', 'batched' or 'sharded'")
         self.trainer = trainer
         self.clients = clients
         self.fl = fl
         self.edges = assign_edges(fl.num_devices, fl.num_edges)
+        # sharded = the batched engine + a device mesh for the client stack;
+        # mesh_data_axis alone opts the batched engine into the same mesh.
+        self.batched = fl.engine != "sequential"
+        self.data_axis = fl.mesh_data_axis or "data"
+        self.mesh = None
+        if fl.engine == "sharded" or (self.batched and fl.mesh_data_axis):
+            from repro.launch.mesh import make_sim_mesh
+            self.mesh = make_sim_mesh(fl.num_devices, axis=self.data_axis)
+
+    def _pad_cohort(self, c: int) -> int:
+        """Round a cohort/ring count up to the next mesh-size multiple (the
+        ghost-client padding of the sharded engine); identity when unsharded."""
+        if self.mesh is None:
+            return c
+        n = self.mesh.shape[self.data_axis]
+        return -(-c // n) * n
+
+    def _train_many(self, params, batches, valid, **kw):
+        return self.trainer.train_many(
+            params, batches, valid, mesh=self.mesh, data_axis=self.data_axis,
+            **kw)
 
     def _sample(self, rng: np.random.Generator) -> List[int]:
         k = self.fl.num_devices
@@ -68,7 +96,8 @@ class _Base:
         ``train_many`` call over the stacked ring models. Plans are drawn
         ring-by-ring first — the sequential visit order — so the RNG stream
         matches ``ring_optimization`` exactly. Rings shorter than the longest
-        get all-invalid steps past their end (model carried unchanged)."""
+        get all-invalid steps past their end (model carried unchanged); under
+        a mesh, the ring axis is ghost-padded to the mesh-size multiple."""
         fl = self.fl
         plans = {}
         for r, ring in enumerate(rings):
@@ -76,7 +105,8 @@ class _Base:
                 for j, i in enumerate(ring):
                     plans[r, lap, j] = plan_epoch_indices(
                         self.clients[i], fl.batch_size, fl.local_epochs, rng)
-        models = tree_broadcast(w_glob, len(rings))
+        padded = self._pad_cohort(len(rings))
+        models = tree_broadcast(w_glob, padded)
         hops = max(len(r) for r in rings)
         for lap in range(fl.ring_rounds):
             for j in range(hops):
@@ -88,12 +118,19 @@ class _Base:
                     plans[r, lap, j] if j < len(ring) else None
                     for r, ring in enumerate(rings)
                 ]
-                batches, valid = stack_plans(hop_clients, hop_plans)
-                models = self.trainer.train_many(models, batches, valid, lr=lr)
+                batches, valid = stack_plans(hop_clients, hop_plans,
+                                             pad_to=padded)
+                models = self._train_many(models, batches, valid, lr=lr)
         if meter is not None:
             for ring in rings:
-                meter.record("p2p", fl.ring_rounds * (len(ring) - 1)
-                             + (fl.ring_rounds if fl.ring_rounds > 1 else 0))
+                # R laps over K devices: K-1 forward hops per lap plus ONE
+                # lap-closing hop back to the first device between laps —
+                # R*(K-1) + (R-1) total (the final lap ends at the last
+                # device; its model leaves via the edge uplink, not the
+                # ring). A single-device ring has no peer: zero hops.
+                if len(ring) > 1:
+                    meter.record("p2p", fl.ring_rounds * (len(ring) - 1)
+                                 + (fl.ring_rounds - 1))
         return tree_unstack(models, len(rings))
 
 
@@ -103,7 +140,7 @@ class FedAvg(_Base):
     def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
         ids = self._sample(rng)
         weights = self._weights(ids)
-        if self.fl.engine == "batched":
+        if self.batched:
             return self._run_round_batched(
                 w_glob, ids, weights, lr, rng, meter, state)
         locals_ = []
@@ -120,14 +157,17 @@ class FedAvg(_Base):
         return tree_weighted_sum(locals_, weights.tolist()), state
 
     def _run_round_batched(self, w_glob, ids, weights, lr, rng, meter, state):
+        padded = self._pad_cohort(len(ids))
         batches, valid = stack_client_batches(
             [self.clients[i] for i in ids], self.fl.batch_size,
-            self.fl.local_epochs, rng)
+            self.fl.local_epochs, rng, pad_to=padded)
         meter.record("cloud_down", len(ids))
-        out = self.trainer.train_many(
+        out = self._train_many(
             w_glob, batches, valid, lr=lr, broadcast=True,
-            variant=self.variant, **self._batched_extra(w_glob, ids, state))
+            variant=self.variant,
+            **self._batched_extra(w_glob, ids, state, padded - len(ids)))
         meter.record("cloud_up", len(ids))
+        out = tree_prefix(out, len(ids))            # drop ghost rows
         if type(self)._post is not FedAvg._post:    # only MOON keeps locals
             for i, w in zip(ids, tree_unstack(out, len(ids))):
                 self._post(i, w, state)
@@ -136,7 +176,10 @@ class FedAvg(_Base):
     def _extra(self, w_glob, i, state) -> Dict:
         return {}
 
-    def _batched_extra(self, w_glob, ids, state) -> Dict:
+    def _batched_extra(self, w_glob, ids, state, ghosts: int) -> Dict:
+        """Stacked/shared extras for one batched cohort visit. Cohort-shared
+        trees are returned UNSTACKED (broadcast inside the jit — the host
+        never materializes C copies); per-client stacks are ghost-padded."""
         return {}
 
     def _post(self, i, w, state) -> None:
@@ -150,8 +193,8 @@ class FedProx(FedAvg):
     def _extra(self, w_glob, i, state):
         return {"anchor": w_glob}
 
-    def _batched_extra(self, w_glob, ids, state):
-        return {"anchor": tree_broadcast(w_glob, len(ids))}
+    def _batched_extra(self, w_glob, ids, state, ghosts):
+        return {"anchor": w_glob}       # cohort-shared, broadcast in-jit
 
 
 class Moon(FedAvg):
@@ -163,10 +206,11 @@ class Moon(FedAvg):
         prev = state.setdefault("prev", {}).get(i, w_glob)
         return {"w_glob": w_glob, "w_prev": prev}
 
-    def _batched_extra(self, w_glob, ids, state):
+    def _batched_extra(self, w_glob, ids, state, ghosts):
         prev = state.setdefault("prev", {})
-        return {"w_glob": tree_broadcast(w_glob, len(ids)),
-                "w_prev": tree_stack([prev.get(i, w_glob) for i in ids])}
+        prevs = [prev.get(i, w_glob) for i in ids] + [w_glob] * ghosts
+        return {"w_glob": w_glob,       # cohort-shared, broadcast in-jit
+                "w_prev": tree_stack(prevs)}
 
     def _post(self, i, w, state):
         state.setdefault("prev", {})[i] = w
@@ -177,7 +221,7 @@ class HierFAVG(_Base):
     per cloud round (matched compute budget with FedSR: same R)."""
 
     def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
-        if self.fl.engine == "batched":
+        if self.batched:
             return self._run_round_batched(w_glob, lr, rng, meter), state
         edge_models, edge_weights = [], []
         for edge_devices in self.edges:
@@ -217,15 +261,17 @@ class HierFAVG(_Base):
                     plans[e, r, i] = plan_epoch_indices(
                         self.clients[i], fl.batch_size, fl.local_epochs, rng)
         pairs = [(e, i) for e, ids in enumerate(edge_ids) for i in ids]
+        padded = self._pad_cohort(len(pairs))
         per_edge_w = [self._weights(ids) for ids in edge_ids]
         edge_models = [w_glob] * len(self.edges)
         for r in range(fl.ring_rounds):
-            params = tree_stack([edge_models[e] for e, _ in pairs])
+            params = tree_stack([edge_models[e] for e, _ in pairs]
+                                + [w_glob] * (padded - len(pairs)))
             batches, valid = stack_plans(
                 [self.clients[i] for _, i in pairs],
-                [plans[e, r, i] for e, i in pairs])
+                [plans[e, r, i] for e, i in pairs], pad_to=padded)
             locals_ = tree_unstack(
-                self.trainer.train_many(params, batches, valid, lr=lr),
+                self._train_many(params, batches, valid, lr=lr),
                 len(pairs))
             off, edge_models = 0, []
             for ids, w in zip(edge_ids, per_edge_w):
@@ -252,7 +298,7 @@ class RingOptimization(_Base):
         if self.fl.reshuffle_ring:
             rng.shuffle(ring_ids)
         meter.record("cloud_down")                      # seed the first device
-        if self.fl.engine == "batched":
+        if self.batched:
             w = self._run_rings_batched(w_glob, [ring_ids], lr, rng, meter)[0]
         else:
             w = ring_optimization(
@@ -282,7 +328,7 @@ class FedSR(_Base):
         else:
             ids = self._sample(rng)
             rings = clusters_of(ids, self.fl.devices_per_edge, rng)
-        if self.fl.engine == "batched":
+        if self.batched:
             meter.record("cloud_down", len(rings))      # w_glob -> edges
             edge_models = self._run_rings_batched(w_glob, rings, lr, rng, meter)
             meter.record("cloud_up", len(rings))        # edge models -> cloud
@@ -322,19 +368,23 @@ class Scaffold(_Base):
         ids = self._sample(rng)
         weights = self._weights(ids)
         cis = [ci_map.get(i, tree_zeros_like(w_glob)) for i in ids]
-        if self.fl.engine == "batched":
+        if self.batched:
+            padded = self._pad_cohort(len(ids))
             batches, valid = stack_client_batches(
                 [self.clients[i] for i in ids], self.fl.batch_size,
-                self.fl.local_epochs, rng)
+                self.fl.local_epochs, rng, pad_to=padded)
             meter.record("cloud_down", 2 * len(ids))    # model + c
-            out = self.trainer.train_many(
+            out = self._train_many(
                 w_glob, batches, valid, lr=lr, broadcast=True,
-                variant="scaffold", c_glob=tree_broadcast(c, len(ids)),
-                c_local=tree_stack(cis))
+                variant="scaffold",
+                c_glob=c,                   # cohort-shared, broadcast in-jit
+                c_local=tree_stack(cis + [c] * (padded - len(ids))))
             meter.record("cloud_up", 2 * len(ids))      # model + delta c
+            out = tree_prefix(out, len(ids))            # drop ghost rows
             new_w = tree_weighted_sum_stacked(out, weights)
             locals_ = tree_unstack(out, len(ids))
-            steps = [max(int(s), 1) for s in self.trainer.last_steps_many]
+            steps = [max(int(s), 1)
+                     for s in self.trainer.last_steps_many[:len(ids)]]
         else:
             locals_, steps = [], []
             for i, ci in zip(ids, cis):

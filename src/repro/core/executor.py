@@ -88,6 +88,7 @@ def run_experiment(
     lr_fn = cosine_decay(fl.init_lr, fl.final_lr, fl.rounds)
     state: Dict = {}
     start_round = 0
+    history: List[RoundRecord] = []
 
     if resume and checkpoint_dir:
         ck = _restore_checkpoint(checkpoint_dir)
@@ -97,12 +98,13 @@ def run_experiment(
             rng.bit_generator.state = ck["rng_state"]
             for k, v in ck["comm"].items():
                 setattr(meter, k, int(v))
+            # pre-checkpoint history rides along so rounds_to_accuracy /
+            # comm_to_accuracy see the full run, not just the resumed tail
+            history = [RoundRecord(**h) for h in ck.get("history", [])]
 
     test_images = jnp.asarray(test.images)
     test_labels = jnp.asarray(test.labels)
     acc_fn = jax.jit(lambda p: classifier_accuracy(p, test_images, test_labels, model_cfg))
-
-    history: List[RoundRecord] = []
     for t in range(start_round, fl.rounds):
         t0 = time.time()
         lr = float(lr_fn(t))
@@ -118,17 +120,21 @@ def run_experiment(
                       f"acc={acc:.4f} lr={lr:.5f} "
                       f"transfers={meter.total_transfers}")
         if checkpoint_dir and checkpoint_every and (t + 1) % checkpoint_every == 0:
-            _save_checkpoint(checkpoint_dir, w_glob, t + 1, rng, meter)
+            _save_checkpoint(checkpoint_dir, w_glob, t + 1, rng, meter,
+                             history)
         if stop_after is not None and (t + 1) >= stop_after:
             break
     return ExperimentResult(fl.algorithm, task, fl.partition, history)
 
 
 # ---------------------------------------------------------------------------
-# checkpoint / resume (exact: model + round + numpy RNG + comm counters)
+# checkpoint / resume (exact: model + round + numpy RNG + comm counters +
+# eval history — dropping history would silently change rounds_to_accuracy /
+# comm_to_accuracy answers on a resumed run)
 
 
-def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter):
+def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter,
+                     history: List[RoundRecord] = ()):
     import json as _json
     import os as _os
 
@@ -141,7 +147,8 @@ def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter):
              "edge_down", "p2p")}
     with open(f"{ckdir}/state.json", "w") as f:
         _json.dump({"round": round_, "rng_state": rng.bit_generator.state,
-                    "comm": comm}, f)
+                    "comm": comm,
+                    "history": [dataclasses.asdict(r) for r in history]}, f)
 
 
 def _restore_checkpoint(ckdir: str):

@@ -15,6 +15,17 @@ Two execution engines share the same losses and update rule:
   per-client gradient is ``jax.vmap``-ed, and a ``jax.lax.scan`` walks the
   padded step axis; a (C, S) valid mask turns padded steps into no-ops for
   the clients that ran out of data, so uneven shard sizes batch cleanly.
+  Cohort-shared extras (FedProx's anchor, MOON's global model, SCAFFOLD's
+  server control variate) are passed as ONE tree and broadcast inside the
+  jit (``vmap in_axes=None`` / elementwise broadcasting) — the host never
+  materializes C copies; per-client extras (MOON's previous locals,
+  SCAFFOLD's client variates) stay client-stacked.
+* sharded — ``train_many(..., mesh=...)``: the batched engine with the
+  leading C axis of every stacked input placed on a ``jax.sharding.Mesh``
+  data axis via ``NamedSharding``; cohort-shared trees are replicated.
+  Clients are embarrassingly parallel between hops, so XLA partitions the
+  whole scan along C with zero collectives. Callers must pad C to a
+  multiple of the mesh axis (ghost clients — see ``stack_plans(pad_to)``).
 
 The update rule itself is elementwise, so one implementation serves both
 engines — and can optionally run as a single fused Pallas pass over the
@@ -28,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import FLConfig, ModelConfig
 from repro.models.small import classifier_loss, small_model_features
@@ -144,19 +156,23 @@ class LocalTrainer:
             return params, m
 
         def masked_scaffold_update(params, m, grads, lr, c_glob, c_local, ok):
+            # c_glob is ONE unstacked tree (cohort-shared): its (...) leaves
+            # broadcast elementwise against the (C, ...) grad/c_local stacks.
             corr = jax.tree.map(lambda g, c, ci: g + c - ci,
                                 grads, c_glob, c_local)
             params = jax.tree.map(
                 lambda p, d: p - (_expand_mask(ok, p) * lr) * d, params, corr)
             return params, m
 
-        def make_many(loss_fn, update, n_loss_extras, broadcast_params):
-            vgrad = jax.vmap(jax.grad(loss_fn),
-                             in_axes=(0, 0) + (0,) * n_loss_extras)
+        def make_many(loss_fn, update, extra_axes, broadcast_params):
+            # extra_axes: one vmap axis per loss extra — 0 for client-stacked
+            # trees, None for cohort-shared trees broadcast inside the jit.
+            n_loss_extras = len(extra_axes)
+            vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + extra_axes)
 
             @jax.jit
             def many(params, batches, valid, lr, *extras):
-                # params/extras: (C, ...) pytrees — or one client's tree when
+                # params: (C, ...) pytree — or one client's tree when
                 # broadcast_params (stacked inside the jit, so the host never
                 # materializes C copies); batches: (C, S, B, ...); valid:
                 # (C, S) bool — False steps leave that client's params and
@@ -181,11 +197,23 @@ class LocalTrainer:
                 return p
             return many
 
+        # The vmap in_axes of each loss extra derive from the ONE
+        # stacked/shared spec (_EXTRA_STACKED): client-stacked -> 0,
+        # cohort-shared -> None (broadcast inside the jit). SCAFFOLD's
+        # extras feed the update, not the vmapped loss (n_loss_extras=0):
+        # c_glob unstacked broadcasts in tree.map, c_local stays stacked.
+        many_spec = {
+            "plain": (plain_loss, masked_momentum_update, 0),
+            "prox": (prox_loss, masked_momentum_update, 1),
+            "moon": (moon_loss, masked_momentum_update, 2),
+            "scaffold": (plain_loss, masked_scaffold_update, 0),
+        }
         self._many, self._many_bc = ({
-            "plain": make_many(plain_loss, masked_momentum_update, 0, bc),
-            "prox": make_many(prox_loss, masked_momentum_update, 1, bc),
-            "moon": make_many(moon_loss, masked_momentum_update, 2, bc),
-            "scaffold": make_many(plain_loss, masked_scaffold_update, 0, bc),
+            v: make_many(
+                loss, upd,
+                tuple(0 if stacked else None
+                      for stacked in self._EXTRA_STACKED[v][:n_loss]), bc)
+            for v, (loss, upd, n_loss) in many_spec.items()
         } for bc in (False, True))
 
     # ------------------------------------------------------------------
@@ -227,6 +255,8 @@ class LocalTrainer:
         lr: float,
         variant: str = "plain",
         broadcast: bool = False,
+        mesh: Optional[Mesh] = None,
+        data_axis: str = "data",
         anchor: Optional[Pytree] = None,
         w_glob: Optional[Pytree] = None,
         w_prev: Optional[Pytree] = None,
@@ -235,21 +265,62 @@ class LocalTrainer:
     ) -> Pytree:
         """One local-training visit for a whole cohort in one compiled call.
 
-        ``params`` and every extra are pytrees stacked along a leading client
-        axis C — or, with ``broadcast=True``, ``params`` is a single tree
-        that every client starts from (stacked device-side, the FedAvg-style
-        fast path). ``batches``/``valid`` come from ``stack_client_batches``
-        / ``stack_plans`` ((C, S, B, ...) data + (C, S) valid-step mask).
+        ``params`` and the per-client extras (``w_prev``, ``c_local``) are
+        pytrees stacked along a leading client axis C — or, with
+        ``broadcast=True``, ``params`` is a single tree that every client
+        starts from (stacked device-side, the FedAvg-style fast path).
+        Cohort-shared extras (``anchor``, ``w_glob``, ``c_glob``) are single
+        unstacked trees, broadcast inside the jit. ``batches``/``valid``
+        come from ``stack_client_batches`` / ``stack_plans``
+        ((C, S, B, ...) data + (C, S) valid-step mask).
+
+        With ``mesh``, every C-stacked input is placed on the mesh's
+        ``data_axis`` via ``NamedSharding`` and cohort-shared trees are
+        replicated, so the compiled scan partitions the client axis across
+        devices; C must then be a multiple of the mesh axis size (callers
+        ghost-pad via ``stack_plans(pad_to=...)``).
+
         Returns the trained (C, ...) stack; per-client executed step counts
         are left in ``self.last_steps_many``.
         """
         self.last_steps_many = np.asarray(valid).sum(axis=1).astype(int)
         extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
         fam = self._many_bc if broadcast else self._many
+        batches = {k: jnp.asarray(v) for k, v in batches.items()}
+        valid = jnp.asarray(valid, bool)
+        if mesh is not None:
+            n_shards = mesh.shape[data_axis]
+            C = valid.shape[0]
+            if C % n_shards != 0:
+                raise ValueError(
+                    f"client axis C={C} must be a multiple of mesh axis "
+                    f"{data_axis!r}={n_shards}; ghost-pad the cohort "
+                    "(stack_plans(pad_to=...))")
+            shard = NamedSharding(mesh, PartitionSpec(data_axis))
+            repl = NamedSharding(mesh, PartitionSpec())
+
+            def put(tree, sharding):
+                return jax.tree.map(
+                    lambda x: jax.device_put(jnp.asarray(x), sharding), tree)
+
+            params = put(params, repl if broadcast else shard)
+            batches = put(batches, shard)
+            valid = put(valid, shard)
+            stacked = self._EXTRA_STACKED[variant]
+            extras = tuple(
+                put(e, shard if s else repl)
+                for e, s in zip(extras, stacked))
         return fam[variant](
-            params,
-            {k: jnp.asarray(v) for k, v in batches.items()},
-            jnp.asarray(valid, bool), jnp.asarray(lr, jnp.float32), *extras)
+            params, batches, valid, jnp.asarray(lr, jnp.float32), *extras)
+
+    # which extras carry a leading client axis (True) vs are cohort-shared
+    # single trees (False) — order matches ``_extras``
+    _EXTRA_STACKED = {
+        "plain": (),
+        "prox": (False,),               # anchor
+        "moon": (False, True),          # w_glob, w_prev
+        "scaffold": (False, True),      # c_glob, c_local
+    }
 
     @staticmethod
     def _extras(variant, anchor, w_glob, w_prev, c_glob, c_local) -> tuple:

@@ -28,12 +28,15 @@ def ring_optimization(
     """Faithful Algorithm 1 inner loop: the model hops device->device,
     each visit = ``local_epochs`` SGD epochs on that device's private shard.
     Returns the last device's weights (eq. 7: w_{t+1} = z_t^{P_K})."""
-    for _ in range(laps):
+    for lap in range(laps):
         for i, client in enumerate(ring):
             w = trainer.train(w, client, lr=lr, epochs=local_epochs, rng=rng)
             if meter is not None and (i < len(ring) - 1):
                 meter.record("p2p")     # hop to the next device
-        # closing the lap: last device sends back to the first (next lap)
-        if meter is not None and laps > 1:
+        # closing the lap: last device sends back to the first — only when
+        # another lap follows, so R laps cost R*(K-1) + (R-1) hops total
+        # (after the final lap the model goes up to the edge, not around);
+        # a single-device "ring" has no peer, so no closing hop either
+        if meter is not None and lap < laps - 1 and len(ring) > 1:
             meter.record("p2p")
     return w

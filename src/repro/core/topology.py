@@ -14,7 +14,10 @@ import numpy as np
 
 def assign_edges(num_devices: int, num_edges: int) -> List[List[int]]:
     """Uniform device->edge assignment (paper §IV-C)."""
-    assert num_devices % num_edges == 0
+    if num_edges <= 0 or num_devices % num_edges != 0:
+        raise ValueError(
+            f"num_edges={num_edges} must divide num_devices={num_devices} "
+            "evenly (every edge server gets the same device count)")
     per = num_devices // num_edges
     return [list(range(m * per, (m + 1) * per)) for m in range(num_edges)]
 

@@ -24,9 +24,15 @@ def plan_epoch_indices(
 ) -> np.ndarray:
     """(steps, batch_size) sample-index plan for ``epochs`` shuffled epochs.
 
-    Each epoch is a permutation plus wrap-around padding to full batches
-    (static shapes keep the jitted train step cache warm). This makes the
-    identical rng draws ``epoch_batches`` makes, in the identical order.
+    Each epoch is a permutation; when the shard does not divide evenly into
+    full batches, the final batch is topped up by *resampling* uniform
+    random indices (``rng.integers``), NOT by wrapping the permutation
+    around (static shapes keep the jitted train step cache warm). The
+    resample is an extra draw on the shared RNG stream, so any consumer
+    that must stay stream-parallel with this plan (both engines do) has to
+    make the identical ``permutation`` + ``integers`` calls in the
+    identical order — which is why the batched engine pre-draws plans here
+    rather than re-implementing them.
     """
     n = len(client)
     num_batches = max(1, int(np.ceil(n / batch_size)))
@@ -43,6 +49,7 @@ def plan_epoch_indices(
 def stack_plans(
     clients: Sequence["ClientData"],
     plans: Sequence[Optional[np.ndarray]],
+    pad_to: Optional[int] = None,
 ) -> Tuple[dict, np.ndarray]:
     """Materialize per-client batch plans into client-stacked arrays.
 
@@ -51,6 +58,12 @@ def stack_plans(
     padded by repeating their first batch; a ``None`` plan yields an all-
     invalid row (used for ring positions past a shorter ring's end). Padded
     steps carry real data but are masked to no-ops by the engine.
+
+    ``pad_to`` appends *ghost clients* — all-invalid rows of zero data —
+    until the client axis reaches ``pad_to``. The sharded engine uses this
+    to round every cohort/ring count up to a multiple of the device-mesh
+    size so the ``(C, ...)`` stack shards evenly; ghost rows never train
+    (every step invalid) and never draw from the RNG stream.
     """
     B = next(p.shape[1] for p in plans if p is not None)
     real = [p if p is not None else np.zeros((1, B), np.int64) for p in plans]
@@ -66,17 +79,27 @@ def stack_plans(
         imgs.append(img)
         labs.append(lab)
         valid[ci, :s] = plans[ci] is not None
-    return {"images": np.stack(imgs), "labels": np.stack(labs)}, valid
+    out = {"images": np.stack(imgs), "labels": np.stack(labs)}
+    if pad_to is not None and pad_to > len(clients):
+        ghosts = pad_to - len(clients)
+        out = {
+            k: np.concatenate(
+                [v, np.zeros((ghosts,) + v.shape[1:], v.dtype)])
+            for k, v in out.items()
+        }
+        valid = np.concatenate([valid, np.zeros((ghosts, S), bool)])
+    return out, valid
 
 
 def stack_client_batches(
     clients: Sequence["ClientData"], batch_size: int, epochs: int,
-    rng: np.random.Generator,
+    rng: np.random.Generator, pad_to: Optional[int] = None,
 ) -> Tuple[dict, np.ndarray]:
     """Plan + stack one cohort's visits, consuming ``rng`` in the sequential
-    engine's visit order (client by client)."""
+    engine's visit order (client by client). ``pad_to`` ghost-pads the
+    client axis (see ``stack_plans``)."""
     plans = [plan_epoch_indices(c, batch_size, epochs, rng) for c in clients]
-    return stack_plans(clients, plans)
+    return stack_plans(clients, plans, pad_to=pad_to)
 
 
 @dataclasses.dataclass

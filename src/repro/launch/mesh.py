@@ -13,7 +13,10 @@ FedSR mapping: "model" = tensor parallelism inside one FL participant;
 """
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,9 +25,33 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def _host_mesh_shape(n: int) -> Tuple[int, int]:
+    """(data, model) factorization of ``n`` host devices that strands none:
+    model=2 only when it divides evenly (4 -> (2,2), 8 -> (4,2)); odd or
+    tiny counts keep every device on "data" (5 -> (5,1), 2 -> (2,1))."""
+    model = 2 if (n >= 4 and n % 2 == 0) else 1
+    return (n // model, model)
+
+
 def make_host_mesh():
-    """Whatever fits the current host (tests / examples): 1 device -> (1, 1)."""
+    """Whatever fits the current host (tests / examples): 1 device -> (1, 1);
+    every visible device is used, including odd counts."""
     n = len(jax.devices())
-    if n >= 4:
-        return jax.make_mesh((n // 2, 2), ("data", "model"))
-    return jax.make_mesh((n, 1), ("data", "model"))
+    return jax.make_mesh(_host_mesh_shape(n), ("data", "model"))
+
+
+def make_sim_mesh(num_clients: Optional[int] = None, *, axis: str = "data"):
+    """1-D device mesh for the FL simulator's stacked client axis.
+
+    The batched engine stacks all concurrent client visits of a round along
+    a leading ``(C, ...)`` axis; the sharded engine places that axis on this
+    mesh's single ``axis`` (default ``"data"``). ``num_clients`` caps the
+    mesh at the fleet size so no device is left without at least one client
+    row; cohorts smaller than the mesh, or not divisible by it, are ghost-
+    padded by the engine (see ``stack_plans(pad_to=...)``).
+    """
+    devices = jax.devices()
+    n = len(devices)
+    if num_clients is not None:
+        n = max(1, min(n, num_clients))
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))

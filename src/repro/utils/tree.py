@@ -56,6 +56,12 @@ def tree_unstack(tree: Pytree, n: int) -> list:
     return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
 
 
+def tree_prefix(tree: Pytree, n: int) -> Pytree:
+    """First ``n`` rows of every leaf's leading axis — drops the ghost-client
+    padding the sharded engine appends to make cohorts divide the mesh."""
+    return jax.tree.map(lambda x: x[:n], tree)
+
+
 def tree_weighted_sum_stacked(stacked: Pytree, weights) -> Pytree:
     """sum_i w_i * stacked[i] over the leading client axis — the stacked-
     engine form of ``tree_weighted_sum`` (one contraction per leaf instead

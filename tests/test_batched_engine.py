@@ -58,21 +58,22 @@ def _assert_trees_close(a, b, atol=1e-5, msg=""):
 
 
 def _variant_kwargs(variant, w0, other, n):
-    """(sequential per-client kwargs, batched stacked kwargs)."""
+    """(sequential per-client kwargs, batched kwargs). Cohort-shared extras
+    (anchor / w_glob / c_glob) are single unstacked trees — ``train_many``
+    broadcasts them inside the jit; only per-client extras are stacked."""
     if variant == "plain":
         return [{}] * n, {}
     if variant == "prox":
-        return ([{"anchor": w0}] * n,
-                {"anchor": tree_broadcast(w0, n)})
+        return ([{"anchor": w0}] * n, {"anchor": w0})
     if variant == "moon":
         prevs = [tree_scale(other, 0.1 * (i + 1)) for i in range(n)]
         return ([{"w_glob": w0, "w_prev": p} for p in prevs],
-                {"w_glob": tree_broadcast(w0, n), "w_prev": tree_stack(prevs)})
+                {"w_glob": w0, "w_prev": tree_stack(prevs)})
     if variant == "scaffold":
         c = tree_scale(other, 0.01)
         cis = [tree_scale(other, 0.005 * (i + 1)) for i in range(n)]
         return ([{"c_glob": c, "c_local": ci} for ci in cis],
-                {"c_glob": tree_broadcast(c, n), "c_local": tree_stack(cis)})
+                {"c_glob": c, "c_local": tree_stack(cis)})
     raise ValueError(variant)
 
 
@@ -167,6 +168,14 @@ def test_round_parity_batched_vs_sequential(algo, overrides):
     _assert_trees_close(w_seq, w_bat, msg=f"{algo} round")
     for ch in ("cloud_up", "cloud_down", "edge_up", "edge_down", "p2p"):
         assert getattr(meter_seq, ch) == getattr(meter_bat, ch), ch
+    # parity alone can't catch two equally-wrong meters: pin the corrected
+    # closed-form ring-hop count, R*(K-1) + (R-1) closings per ring per
+    # round (K=8, M=2 -> Q=4, R=2, T=2; see tests/test_comm_golden.py)
+    if not overrides:
+        if algo == "ring":
+            assert meter_bat.p2p == 2 * (2 * 7 + 1)
+        elif algo == "fedsr":
+            assert meter_bat.p2p == 2 * 2 * (2 * 3 + 1)
 
 
 @pytest.mark.parametrize("engine", ["sequential", "batched"])

@@ -20,8 +20,11 @@ def test_benchmark_run_smoke_entrypoint():
     names = {l.split(",")[0] for l in lines[1:]}
     assert any(n.startswith("kernel/sgd_update") for n in names), names
     assert any(n.startswith("kernel/fl_round") for n in names), names
+    assert any(n.startswith("kernel/fl_round") and n.endswith("_sharded")
+               for n in names), names
     assert {"smoke/fedavg_round/sequential",
-            "smoke/fedavg_round/batched"} <= names, names
+            "smoke/fedavg_round/batched",
+            "smoke/fedavg_round/sharded"} <= names, names
     # every emitted row respects the CSV contract
     for l in lines[1:]:
         name, us, _ = l.split(",", 2)

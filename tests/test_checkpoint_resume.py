@@ -45,6 +45,15 @@ def test_resume_is_exact():
     # comm counters continue, not reset
     assert (resumed.history[-1].comm["total_transfers"]
             == full.history[-1].comm["total_transfers"])
+    # pre-checkpoint history is restored, not dropped: the resumed result
+    # answers rounds_to_accuracy/comm_to_accuracy over ALL 4 rounds
+    assert [r.round for r in resumed.history] == [1, 2, 3, 4]
+    for rec_full, rec_res in zip(full.history, resumed.history):
+        assert rec_res.accuracy == pytest.approx(rec_full.accuracy, abs=1e-7)
+        assert rec_res.comm == rec_full.comm
+    target = full.history[0].accuracy           # hit from round 1
+    assert resumed.rounds_to_accuracy(target) == full.rounds_to_accuracy(target)
+    assert resumed.comm_to_accuracy(target) == full.comm_to_accuracy(target)
 
 
 def test_resume_without_checkpoint_starts_fresh():

@@ -1,0 +1,132 @@
+"""Golden per-round communication counts for every algorithm, checked
+against the closed-form Table III formulas — per channel and exact, so a
+meter regression (e.g. the ring lap-closing overcount fixed in this PR)
+cannot land silently behind an engine-parity test that compares two
+equally-wrong engines to each other.
+
+Full participation, K devices over M edges (ring size Q = K/M), R ring
+laps, T rounds:
+
+  fedavg/fedprox/moon : cloud_down = K*T, cloud_up = K*T
+  scaffold            : cloud_down = 2K*T, cloud_up = 2K*T   (model + c)
+  fedsr               : cloud = M*T each way;  p2p = T*M*(R*(Q-1) + (R-1))
+  ring                : cloud = T each way;    p2p = T*(R*(K-1) + (R-1))
+  hieravg             : cloud = M*T each way;  edge = R*K*T each way
+
+The ring/p2p closed form: each lap visits Q devices = Q-1 forward hops, and
+between consecutive laps the model closes the ring back to the first device
+— R-1 closings, NOT R (after the final lap the model leaves via the edge
+uplink, paper Algorithm 1 / eq. 7).
+"""
+import numpy as np
+import pytest
+
+K, M, R, T = 8, 2, 3, 2
+Q = K // M
+
+GOLDEN = {
+    "fedavg":   dict(cloud_down=K * T, cloud_up=K * T,
+                     edge_down=0, edge_up=0, p2p=0),
+    "fedprox":  dict(cloud_down=K * T, cloud_up=K * T,
+                     edge_down=0, edge_up=0, p2p=0),
+    "moon":     dict(cloud_down=K * T, cloud_up=K * T,
+                     edge_down=0, edge_up=0, p2p=0),
+    "scaffold": dict(cloud_down=2 * K * T, cloud_up=2 * K * T,
+                     edge_down=0, edge_up=0, p2p=0),
+    "fedsr":    dict(cloud_down=M * T, cloud_up=M * T,
+                     edge_down=0, edge_up=0,
+                     p2p=T * M * (R * (Q - 1) + (R - 1))),
+    "ring":     dict(cloud_down=T, cloud_up=T,
+                     edge_down=0, edge_up=0,
+                     p2p=T * (R * (K - 1) + (R - 1))),
+    "hieravg":  dict(cloud_down=M * T, cloud_up=M * T,
+                     edge_down=R * K * T, edge_up=R * K * T, p2p=0),
+}
+
+_CACHE = {}
+
+
+def _meter(algo, engine):
+    if (algo, engine) in _CACHE:
+        return _CACHE[algo, engine]
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.algorithms import make_algorithm
+    from repro.core.comm import CommMeter
+    from repro.core.local import LocalTrainer
+    from repro.data.pipeline import make_clients
+    from repro.data.synthetic import make_task
+    from repro.models.small import init_small_model
+
+    cfg = get_config("fedsr-mlp")
+    fl = FLConfig(algorithm=algo, num_devices=K, num_edges=M, rounds=T,
+                  ring_rounds=R, local_epochs=1, batch_size=8, momentum=0.5,
+                  engine=engine)
+    train, _ = make_task("mnist_like", train_per_class=8, test_per_class=2,
+                         seed=0)
+    clients = make_clients(train, scheme="iid", num_devices=K,
+                           rng=np.random.default_rng(0))
+    if "trainer" not in _CACHE:
+        _CACHE["trainer"] = LocalTrainer(cfg, fl)
+    trainer = _CACHE["trainer"]
+    algo_obj = make_algorithm(algo, trainer, clients, fl)
+    w = init_small_model(jax.random.PRNGKey(0), cfg)
+    meter = CommMeter(model_bytes=1)
+    rng = np.random.default_rng(5)
+    state = {}
+    for t in range(T):
+        w, state = algo_obj.run_round(w, t, 0.05, rng, meter, state)
+    _CACHE[algo, engine] = meter
+    return meter
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched", "sharded"])
+@pytest.mark.parametrize("algo", sorted(GOLDEN))
+def test_golden_comm_counts(algo, engine):
+    meter = _meter(algo, engine)
+    for channel, want in GOLDEN[algo].items():
+        assert getattr(meter, channel) == want, (
+            f"{algo}/{engine} {channel}: got {getattr(meter, channel)}, "
+            f"Table III closed form says {want}")
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_single_device_rings_have_zero_p2p(engine):
+    """Degenerate FedSR config num_edges == num_devices: every ring is one
+    device, which has no peer — p2p must be exactly 0, not R-1 phantom
+    lap-closing hops (FedSR then meters like per-device FedAvg)."""
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.algorithms import make_algorithm
+    from repro.core.comm import CommMeter
+    from repro.core.local import LocalTrainer
+    from repro.data.pipeline import make_clients
+    from repro.data.synthetic import make_task
+    from repro.models.small import init_small_model
+
+    cfg = get_config("fedsr-mlp")
+    fl = FLConfig(algorithm="fedsr", num_devices=4, num_edges=4, rounds=1,
+                  ring_rounds=3, local_epochs=1, batch_size=8, engine=engine)
+    train, _ = make_task("mnist_like", train_per_class=4, test_per_class=2,
+                         seed=0)
+    clients = make_clients(train, scheme="iid", num_devices=4,
+                           rng=np.random.default_rng(0))
+    if "trainer" not in _CACHE:
+        _CACHE["trainer"] = LocalTrainer(cfg, fl)
+    algo = make_algorithm("fedsr", _CACHE["trainer"], clients, fl)
+    meter = CommMeter(model_bytes=1)
+    w = init_small_model(jax.random.PRNGKey(0), cfg)
+    w, _ = algo.run_round(w, 0, 0.05, np.random.default_rng(3), meter, {})
+    assert meter.p2p == 0
+    assert meter.cloud_transfers == 2 * 4
+
+
+def test_golden_totals_expose_semi_decentralized_claim():
+    """The headline Table III comparison with corrected meters: FedSR's
+    cloud traffic is K/M times smaller than FedAvg's at equal rounds."""
+    fedavg = _meter("fedavg", "sequential")
+    fedsr = _meter("fedsr", "sequential")
+    assert fedavg.cloud_transfers == Q * fedsr.cloud_transfers
+    assert fedsr.p2p == T * M * (R * (Q - 1) + (R - 1))

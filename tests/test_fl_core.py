@@ -91,8 +91,8 @@ def test_comm_accounting_fedsr_vs_fedavg():
     K, M, T, R, Q = 8, 2, 2, 2, 4
     assert results["fedavg"].cloud_transfers == 2 * K * T
     assert results["fedsr"].cloud_transfers == 2 * M * T
-    # ring hops per edge per round: R laps x Q devices - 1 final + (R-1 closing)
-    assert results["fedsr"].p2p > 0
+    # ring hops per edge per round: R*(Q-1) forward + (R-1) lap closings
+    assert results["fedsr"].p2p == T * M * (R * (Q - 1) + (R - 1))
     assert results["fedsr"].cloud_transfers < results["fedavg"].cloud_transfers
 
 
@@ -123,6 +123,15 @@ def test_topology_rings():
     assert sorted(ring) == edges[0]
     cl = clusters_of(list(range(10)), 4, rng)
     assert sum(len(c) for c in cl) == 10
+
+
+def test_assign_edges_rejects_indivisible_fleet():
+    """A real ValueError, not a bare assert — the check must survive
+    ``python -O`` (asserts are stripped under optimization)."""
+    with pytest.raises(ValueError, match="divide"):
+        assign_edges(7, 2)
+    with pytest.raises(ValueError, match="divide"):
+        assign_edges(4, 0)
 
 
 def test_scaffold_round_runs_and_updates_control_variates():

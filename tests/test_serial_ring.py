@@ -1,10 +1,13 @@
 """ring_mode="serial" must be the literal Algorithm-1 chain: identical to
-manually applying client updates in ring order with one logical model."""
+manually applying client updates in ring order with one logical model —
+and the serial ring's comm meter must match the corrected Table III hop
+count (R*(K-1) forward hops + R-1 lap closings, NOT R closings)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import TrainConfig
 from repro.launch.mesh import make_host_mesh
@@ -92,3 +95,34 @@ def test_serial_ring_equals_manual_chain():
         lambda a, b: bool(jnp.all(a == b)), synced["params"],
         new_state["params"])
     assert all(jax.tree.leaves(same))
+
+
+@pytest.mark.parametrize("laps,n_clients", [(1, 3), (2, 3), (3, 4)])
+def test_ring_optimization_p2p_hop_count(laps, n_clients):
+    """R laps over a K-ring cost exactly R*(K-1) + (R-1) p2p transfers: the
+    model closes the ring only BETWEEN laps (after the final lap it leaves
+    via the edge uplink). The old meter charged a closing hop on every lap
+    whenever R > 1, overcounting Table III by one hop per ring per round."""
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.comm import CommMeter
+    from repro.core.local import LocalTrainer
+    from repro.core.ring import ring_optimization
+    from repro.data.pipeline import ClientData
+    from repro.models.small import init_small_model
+
+    cfg = get_config("fedsr-mlp")
+    fl = FLConfig(batch_size=8, momentum=0.0)
+    trainer = LocalTrainer(cfg, fl)
+    rng = np.random.default_rng(0)
+    clients = [
+        ClientData(i, rng.normal(size=(8, 28, 28, 1)).astype(np.float32),
+                   rng.integers(0, 10, 8))
+        for i in range(n_clients)
+    ]
+    w0 = init_small_model(jax.random.PRNGKey(0), cfg)
+    meter = CommMeter(model_bytes=1)
+    ring_optimization(trainer, w0, clients, lr=0.05, laps=laps,
+                      local_epochs=1, rng=np.random.default_rng(1),
+                      meter=meter)
+    assert meter.p2p == laps * (n_clients - 1) + (laps - 1)
