@@ -47,13 +47,13 @@ def table1_ring_vs_fedavg(rounds: int = 12) -> List[dict]:
             fl = FLConfig(algorithm=algo, num_devices=10, num_edges=1,
                           local_epochs=1, ring_rounds=1, rounds=rounds,
                           partition=partition, xi=2)
-            t0 = time.time()
+            t0 = time.perf_counter()
             res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
                                  eval_every=rounds)
             rows.append({
                 "table": "I", "task": "mnist_like", "partition": partition,
                 "algorithm": algo, "accuracy": res.final_accuracy,
-                "seconds": time.time() - t0,
+                "seconds": time.perf_counter() - t0,
             })
     return rows
 
@@ -79,13 +79,13 @@ def table2_accuracy(rounds: int = 12, task: str = "fashionmnist_like",
     ):
         for algo in algorithms:
             fl = _fl(algo, partition=partition, rounds=rounds, **dict(kw))
-            t0 = time.time()
+            t0 = time.perf_counter()
             res = run_experiment(task=task, model_cfg=model, fl=fl,
                                  eval_every=rounds)
             rows.append({
                 "table": "II", "task": task, "partition": partition, **kw,
                 "algorithm": algo, "accuracy": res.final_accuracy,
-                "seconds": time.time() - t0,
+                "seconds": time.perf_counter() - t0,
             })
     return rows
 
@@ -96,7 +96,7 @@ def table3_comm_cost(rounds: int = 15, target: float = 0.8) -> List[dict]:
     rows = []
     for algo in ("fedavg", "fedprox", "hieravg", "ring", "fedsr"):
         fl = _fl(algo, partition="pathological", rounds=rounds, xi=2)
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
                              eval_every=1)
         rows.append({
@@ -104,7 +104,7 @@ def table3_comm_cost(rounds: int = 15, target: float = 0.8) -> List[dict]:
             "transfers_to_target": res.comm_to_accuracy(target),
             "cloud_transfers_total": res.history[-1].comm["cloud_transfers"],
             "final_accuracy": res.final_accuracy,
-            "seconds": time.time() - t0,
+            "seconds": time.perf_counter() - t0,
         })
     return rows
 
@@ -122,11 +122,11 @@ def table4_scalability(rounds: int = 8) -> List[dict]:
                 rounds=rounds, partition="pathological", xi=2,
                 participation=frac,
             )
-            t0 = time.time()
+            t0 = time.perf_counter()
             res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
                                  eval_every=rounds)
             rows.append({
                 "table": "IV", "participation": frac, "algorithm": algo,
-                "accuracy": res.final_accuracy, "seconds": time.time() - t0,
+                "accuracy": res.final_accuracy, "seconds": time.perf_counter() - t0,
             })
     return rows

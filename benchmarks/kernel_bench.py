@@ -15,11 +15,11 @@ import numpy as np
 def _time(fn: Callable, *args, iters: int = 5) -> float:
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6     # us
+    return (time.perf_counter() - t0) / iters * 1e6     # us
 
 
 def bench_attention() -> Tuple[str, float, str]:
@@ -79,14 +79,19 @@ def bench_decode_attention() -> Tuple[str, float, str]:
     return "decode_attn_4k", us, f"{bytes_/(us*1e-6)/1e9:.1f}GB/s-effective"
 
 
-def _fl_round_times(engines, num_devices: int, iters: int) -> dict:
-    """Min-of-iters wall time (us) of one FedAvg round per engine.
+def _fl_round_times(engines, num_devices: int, iters: int,
+                    algorithm: str = "fedavg", **overrides) -> Tuple[dict, dict]:
+    """Min-of-iters wall time (us) AND per-round data-plane H2D bytes of one
+    FL round per engine.
 
     IoT microbench regime: a narrow MLP (hidden 64x64) and ~2-sample device
-    shards, so the round cost is dominated by per-visit dispatch/loop
+    shards, so the round cost is dominated by per-visit dispatch/transfer
     overhead — the term that grows linearly with fleet size and that the
-    batched engine removes — rather than by raw matmul FLOPs, which are
-    identical under every engine."""
+    batched/fused engines remove — rather than by raw matmul FLOPs, which
+    are identical under every engine. H2D bytes come from
+    ``LocalTrainer.h2d_bytes`` (pixel stacks for batched/sharded, int32
+    index plans for fused; 0 for sequential, which ships per-step batches
+    outside the accounted stacker path)."""
     import dataclasses
 
     from repro.configs import get_config
@@ -103,14 +108,17 @@ def _fl_round_times(engines, num_devices: int, iters: int) -> dict:
                          train_per_class=max(2 * num_devices // 10, 2),
                          test_per_class=2, seed=0)
     w0 = init_small_model(jax.random.PRNGKey(0), cfg)
-    times = {}
+    overrides.setdefault("num_edges", 8)
+    overrides.setdefault("batch_size", 4)
+    overrides.setdefault("local_epochs", 1)
+    times, h2d = {}, {}
     for engine in engines:
-        fl = FLConfig(algorithm="fedavg", num_devices=num_devices,
-                      num_edges=8, batch_size=4, local_epochs=1,
-                      engine=engine)
+        fl = FLConfig(algorithm=algorithm, num_devices=num_devices,
+                      engine=engine, **overrides)
         clients = make_clients(train, scheme="iid", num_devices=num_devices,
                                rng=np.random.default_rng(0))
-        algo = make_algorithm("fedavg", LocalTrainer(cfg, fl), clients, fl)
+        trainer = LocalTrainer(cfg, fl)
+        algo = make_algorithm(algorithm, trainer, clients, fl)
 
         def round_():
             w, _ = algo.run_round(w0, 0, 0.05, np.random.default_rng(1),
@@ -118,13 +126,15 @@ def _fl_round_times(engines, num_devices: int, iters: int) -> dict:
             return w
 
         jax.block_until_ready(round_())             # compile + warmup
+        trainer.h2d_bytes = 0
         best = float("inf")
         for _ in range(iters):
-            t0 = time.time()
+            t0 = time.perf_counter()
             jax.block_until_ready(round_())
-            best = min(best, time.time() - t0)
+            best = min(best, time.perf_counter() - t0)
         times[engine] = best * 1e6
-    return times
+        h2d[engine] = trainer.h2d_bytes // iters
+    return times, h2d
 
 
 def bench_fl_engines(num_devices: int = 64, iters: int = 6) -> Tuple[str, float, str]:
@@ -132,7 +142,7 @@ def bench_fl_engines(num_devices: int = 64, iters: int = 6) -> Tuple[str, float,
     jitted steps vs the batched vmap engine, one 64-client FedAvg round.
     Min-of-iters timing (post-compile) to resist host noise; derived reports
     the sequential time and the speedup (acceptance target: >= 3x)."""
-    times = _fl_round_times(("sequential", "batched"), num_devices, iters)
+    times, _ = _fl_round_times(("sequential", "batched"), num_devices, iters)
     speedup = times["sequential"] / times["batched"]
     return (f"fl_round_fedavg{num_devices}_mlp64_batched", times["batched"],
             f"seq_us={times['sequential']:.0f};speedup={speedup:.1f}x")
@@ -148,7 +158,7 @@ def bench_fl_engines_sharded(num_devices: int = 64, iters: int = 6) -> Tuple[str
     are interpretable either way."""
     from repro.launch.mesh import make_sim_mesh
 
-    times = _fl_round_times(("batched", "sharded"), num_devices, iters)
+    times, _ = _fl_round_times(("batched", "sharded"), num_devices, iters)
     mesh_devices = make_sim_mesh(num_devices).shape["data"]
     ratio = times["batched"] / times["sharded"]
     return (f"fl_round_fedavg{num_devices}_mlp64_sharded", times["sharded"],
@@ -156,5 +166,41 @@ def bench_fl_engines_sharded(num_devices: int = 64, iters: int = 6) -> Tuple[str
             f";ratio={ratio:.2f}x")
 
 
+def bench_fl_engines_fused(num_devices: int = 64, iters: int = 6) -> Tuple[str, float, str]:
+    """Batched vs fused FedAvg round A/B: identical compiled math, but the
+    fused engine gathers batches from the device-resident data plane, so
+    per-round H2D collapses from the (C, S, B, 28, 28) pixel stack to int32
+    index plans (~800x for these shapes). ``derived`` records wall time of
+    both engines plus per-round H2D bytes of each."""
+    times, h2d = _fl_round_times(("batched", "fused"), num_devices, iters)
+    speedup = times["batched"] / times["fused"]
+    return (f"fl_round_fedavg{num_devices}_mlp64_fused", times["fused"],
+            f"batched_us={times['batched']:.0f};speedup={speedup:.1f}x"
+            f";h2d_batched={h2d['batched']};h2d_fused={h2d['fused']}")
+
+
+def bench_ring_round_fedsr(num_devices: int = 64, ring_rounds: int = 4,
+                           num_edges: int = 2,
+                           iters: int = 6) -> Tuple[str, float, str]:
+    """FedSR ring round (M rings, R laps) batched vs fused — the dispatch-
+    bound regime the hop-fused scan targets: few edge servers ringing MANY
+    devices each (here 2 rings of 32, R=4 -> 128 hops/round) with tiny
+    per-visit steps, so the batched engine pays 128 compiled dispatches
+    plus a host re-stack of the ring cohort's pixels per hop while the
+    fused engine runs the whole lap sequence as ONE dispatch with
+    index-only H2D (recorded ~3x wall, ~600x H2D on a 2-core CPU host).
+    Wide rings keep per-hop FLOPs small relative to per-hop fixed costs;
+    many concurrent rings (large M) or fat visits grow the shared compiled
+    scan body and shrink the ratio toward 1."""
+    times, h2d = _fl_round_times(("batched", "fused"), num_devices, iters,
+                                 algorithm="fedsr", ring_rounds=ring_rounds,
+                                 num_edges=num_edges)
+    speedup = times["batched"] / times["fused"]
+    return (f"ring_round_fedsr{num_devices}_mlp64_fused", times["fused"],
+            f"batched_us={times['batched']:.0f};speedup={speedup:.1f}x"
+            f";h2d_batched={h2d['batched']};h2d_fused={h2d['fused']}")
+
+
 ALL = [bench_attention, bench_ssd, bench_fused_sgd, bench_decode_attention,
-       bench_fl_engines, bench_fl_engines_sharded]
+       bench_fl_engines, bench_fl_engines_sharded, bench_fl_engines_fused,
+       bench_ring_round_fedsr]

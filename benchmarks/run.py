@@ -93,7 +93,8 @@ def run_smoke() -> None:
     size, and one tiny FL round per engine — so the benchmark drivers can't
     silently rot. Invoked from tier-1 (tests/test_benchmarks_smoke.py)."""
     from benchmarks.kernel_bench import (
-        bench_fl_engines, bench_fl_engines_sharded, bench_fused_sgd,
+        bench_fl_engines, bench_fl_engines_fused, bench_fl_engines_sharded,
+        bench_fused_sgd, bench_ring_round_fedsr,
     )
 
     name, us, derived = bench_fused_sgd()
@@ -101,6 +102,11 @@ def run_smoke() -> None:
     name, us, derived = bench_fl_engines(num_devices=8, iters=1)
     _emit(f"kernel/{name}", us, derived)
     name, us, derived = bench_fl_engines_sharded(num_devices=8, iters=1)
+    _emit(f"kernel/{name}", us, derived)
+    name, us, derived = bench_fl_engines_fused(num_devices=8, iters=1)
+    _emit(f"kernel/{name}", us, derived)
+    name, us, derived = bench_ring_round_fedsr(num_devices=8, ring_rounds=2,
+                                               num_edges=2, iters=1)
     _emit(f"kernel/{name}", us, derived)
 
     from repro.configs import get_config
@@ -110,7 +116,7 @@ def run_smoke() -> None:
 
     train, test = make_task("mnist_like", train_per_class=16,
                             test_per_class=4, seed=0)
-    for engine in ("sequential", "batched", "sharded"):
+    for engine in ("sequential", "batched", "sharded", "fused"):
         fl = FLConfig(algorithm="fedavg", num_devices=4, num_edges=2,
                       rounds=1, local_epochs=1, batch_size=16, engine=engine)
         res = run_experiment(task="mnist_like", model_cfg=get_config("fedsr-mlp"),

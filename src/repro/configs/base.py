@@ -160,7 +160,14 @@ class FLConfig:
                                      #   stacked (C, ...) client axis placed on
                                      #   a device mesh's "data" axis
                                      #   (launch.mesh.make_sim_mesh) — cohorts
-                                     #   ghost-padded to a mesh-size multiple
+                                     #   ghost-padded to a mesh-size multiple;
+                                     # fused: the batched math against a
+                                     #   device-resident data plane — client
+                                     #   shards upload ONCE per experiment,
+                                     #   per-visit H2D is int32 indices only,
+                                     #   and a whole ring lap sequence runs as
+                                     #   one compiled scan over hops (set
+                                     #   mesh_data_axis to also shard it)
     mesh_data_axis: Optional[str] = None
                                      # name of the sim-mesh axis the client
                                      # stack shards over. None: "data" when

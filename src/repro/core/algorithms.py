@@ -22,6 +22,15 @@ private memory (MOON's previous local models).
   all-invalid (never train, never touch the RNG stream, never metered) and
   are sliced off before aggregation. Setting ``FLConfig.mesh_data_axis``
   opts the plain batched engine into the same mesh placement.
+* ``fused`` — the batched schedule against a device-resident data plane:
+  client shards upload ONCE per experiment (``DeviceDataPlane``, built
+  lazily on the first visit), every visit ships only int32 batch plans
+  (``stack_plan_indices``) and FedSR/Ring rounds run their ENTIRE lap
+  sequence as one compiled scan over hops (``_run_rings_fused``) instead
+  of one dispatch plus a host re-stack per hop. Plans are pre-drawn in the
+  identical sequential visit order, so RNG-stream/output/meter parity with
+  every other engine is preserved. ``FLConfig.mesh_data_axis`` composes:
+  the plane's fleet axis and the cohort axis then shard over the mesh.
 """
 from __future__ import annotations
 
@@ -33,10 +42,11 @@ import numpy as np
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.comm import CommMeter
 from repro.core.local import LocalTrainer
-from repro.core.ring import ring_optimization
+from repro.core.ring import ring_lap_hops, ring_optimization
 from repro.core.topology import assign_edges, clusters_of, sample_ring
 from repro.data.pipeline import (
-    ClientData, plan_epoch_indices, stack_client_batches, stack_plans,
+    ClientData, DeviceDataPlane, plan_epoch_indices, stack_plan_indices,
+    stack_plans,
 )
 from repro.utils.tree import (
     tree_broadcast, tree_prefix, tree_stack, tree_unstack, tree_weighted_sum,
@@ -50,35 +60,61 @@ class _Base:
     variant = "plain"
 
     def __init__(self, trainer: LocalTrainer, clients: List[ClientData], fl: FLConfig):
-        if fl.engine not in ("sequential", "batched", "sharded"):
+        if fl.engine not in ("sequential", "batched", "sharded", "fused"):
             raise ValueError(
                 f"unknown FLConfig.engine {fl.engine!r}; "
-                "expected 'sequential', 'batched' or 'sharded'")
+                "expected 'sequential', 'batched', 'sharded' or 'fused'")
         self.trainer = trainer
         self.clients = clients
         self.fl = fl
         self.edges = assign_edges(fl.num_devices, fl.num_edges)
         # sharded = the batched engine + a device mesh for the client stack;
-        # mesh_data_axis alone opts the batched engine into the same mesh.
+        # mesh_data_axis alone opts the batched/fused engines into the mesh.
         self.batched = fl.engine != "sequential"
+        self.fused = fl.engine == "fused"
         self.data_axis = fl.mesh_data_axis or "data"
         self.mesh = None
+        self._plane = None
         if fl.engine == "sharded" or (self.batched and fl.mesh_data_axis):
             from repro.launch.mesh import make_sim_mesh
             self.mesh = make_sim_mesh(fl.num_devices, axis=self.data_axis)
+
+    @property
+    def plane(self) -> DeviceDataPlane:
+        """Device-resident fleet stack of the fused engine, built on the
+        first visit so ONE upload serves every round of the experiment."""
+        if self._plane is None:
+            self._plane = DeviceDataPlane(
+                self.clients, mesh=self.mesh, data_axis=self.data_axis)
+        return self._plane
 
     def _pad_cohort(self, c: int) -> int:
         """Round a cohort/ring count up to the next mesh-size multiple (the
         ghost-client padding of the sharded engine); identity when unsharded."""
         if self.mesh is None:
             return c
-        n = self.mesh.shape[self.data_axis]
-        return -(-c // n) * n
+        from repro.launch.mesh import round_up_to_mesh
+        return round_up_to_mesh(c, self.mesh, self.data_axis)
 
     def _train_many(self, params, batches, valid, **kw):
         return self.trainer.train_many(
             params, batches, valid, mesh=self.mesh, data_axis=self.data_axis,
             **kw)
+
+    def _train_cohort(self, params, ids: List[int], plans, **kw):
+        """One concurrent visit of cohort ``ids`` with pre-drawn ``plans``,
+        routed through the engine's data path: fused ships index-only plans
+        against the resident plane (H=1 hop); batched/sharded materialize
+        the pixel stacks host-side. Cohorts are ghost-padded under a mesh."""
+        padded = self._pad_cohort(len(ids))
+        if self.fused:
+            rows, idx, valid = stack_plan_indices(plans, ids, pad_to=padded)
+            return self.trainer.train_many_fused(
+                params, self.plane, rows[None], idx[None], valid[None],
+                mesh=self.mesh, data_axis=self.data_axis, **kw)
+        batches, valid = stack_plans(
+            [self.clients[i] for i in ids], plans, pad_to=padded)
+        return self._train_many(params, batches, valid, **kw)
 
     def _sample(self, rng: np.random.Generator) -> List[int]:
         k = self.fl.num_devices
@@ -90,13 +126,26 @@ class _Base:
         return sizes / sizes.sum()
 
     # -- shared batched ring runner (FedSR clusters / the global ring) ------
+    def _ring_hop(self, rings, plans, lap: int, j: int):
+        """Ring position j of every ring at lap ``lap``: (client ids, hop
+        plans). Positions past a shorter ring's end repeat the ring's first
+        device with a ``None`` plan (all-invalid — the model is carried
+        unchanged). ONE implementation of the ring-tail rule, shared by the
+        batched and fused runners so it cannot drift between engines."""
+        ids = [ring[j] if j < len(ring) else ring[0] for ring in rings]
+        hop_plans = [plans[r, lap, j] if j < len(ring) else None
+                     for r, ring in enumerate(rings)]
+        return ids, hop_plans
+
     def _run_rings_batched(self, w_glob, rings: List[List[int]], lr, rng,
                            meter: Optional[CommMeter]) -> List[Pytree]:
         """Advance all rings concurrently: hop j of every ring is one
-        ``train_many`` call over the stacked ring models. Plans are drawn
-        ring-by-ring first — the sequential visit order — so the RNG stream
-        matches ``ring_optimization`` exactly. Rings shorter than the longest
-        get all-invalid steps past their end (model carried unchanged); under
+        ``train_many`` call over the stacked ring models — or, under the
+        fused engine, the WHOLE lap sequence is one ``train_many_fused``
+        dispatch (``_run_rings_fused``). Plans are drawn ring-by-ring first
+        — the sequential visit order — so the RNG stream matches
+        ``ring_optimization`` exactly. Rings shorter than the longest get
+        all-invalid steps past their end (model carried unchanged); under
         a mesh, the ring axis is ghost-padded to the mesh-size multiple."""
         fl = self.fl
         plans = {}
@@ -106,32 +155,52 @@ class _Base:
                     plans[r, lap, j] = plan_epoch_indices(
                         self.clients[i], fl.batch_size, fl.local_epochs, rng)
         padded = self._pad_cohort(len(rings))
-        models = tree_broadcast(w_glob, padded)
         hops = max(len(r) for r in rings)
-        for lap in range(fl.ring_rounds):
-            for j in range(hops):
-                hop_clients = [
-                    self.clients[ring[j] if j < len(ring) else ring[0]]
-                    for ring in rings
-                ]
-                hop_plans = [
-                    plans[r, lap, j] if j < len(ring) else None
-                    for r, ring in enumerate(rings)
-                ]
-                batches, valid = stack_plans(hop_clients, hop_plans,
-                                             pad_to=padded)
-                models = self._train_many(models, batches, valid, lr=lr)
+        if self.fused and fl.ring_rounds > 0:
+            # (ring_rounds=0 falls through to the loop below, which runs no
+            # hops and yields the broadcast seed — same as every engine)
+            models = self._run_rings_fused(w_glob, rings, plans, hops,
+                                           padded, lr)
+        else:
+            models = tree_broadcast(w_glob, padded)
+            for lap in range(fl.ring_rounds):
+                for j in range(hops):
+                    ids, hop_plans = self._ring_hop(rings, plans, lap, j)
+                    batches, valid = stack_plans(
+                        [self.clients[i] for i in ids], hop_plans,
+                        pad_to=padded)
+                    models = self._train_many(models, batches, valid, lr=lr)
         if meter is not None:
             for ring in rings:
-                # R laps over K devices: K-1 forward hops per lap plus ONE
-                # lap-closing hop back to the first device between laps —
-                # R*(K-1) + (R-1) total (the final lap ends at the last
-                # device; its model leaves via the edge uplink, not the
-                # ring). A single-device ring has no peer: zero hops.
-                if len(ring) > 1:
-                    meter.record("p2p", fl.ring_rounds * (len(ring) - 1)
-                                 + (fl.ring_rounds - 1))
+                # R laps over K devices cost R*(K-1) + (R-1) hops (the final
+                # lap ends at the last device; its model leaves via the edge
+                # uplink, not the ring) — see ``ring_lap_hops``.
+                meter.record("p2p", ring_lap_hops(len(ring), fl.ring_rounds))
         return tree_unstack(models, len(rings))
+
+    def _run_rings_fused(self, w_glob, rings: List[List[int]], plans,
+                         hops: int, padded: int, lr) -> Pytree:
+        """The fused ring round: every (lap, hop) visit's plan is stacked
+        along a leading hop axis (H = R*hops, C, S, B) — padded to the
+        round-global max step count S so hops are uniform — and the whole
+        lap sequence runs as ONE ``train_many_fused`` dispatch, the model
+        stack carried hop to hop inside the compiled scan. H2D is the int32
+        plan stack; pixels never leave the resident data plane."""
+        fl = self.fl
+        S = max(p.shape[0] for p in plans.values())
+        hop_rows, hop_idx, hop_valid = [], [], []
+        for lap in range(fl.ring_rounds):
+            for j in range(hops):
+                ids, hop_plans = self._ring_hop(rings, plans, lap, j)
+                rows, idx, valid = stack_plan_indices(
+                    hop_plans, ids, pad_to=padded, steps=S)
+                hop_rows.append(rows)
+                hop_idx.append(idx)
+                hop_valid.append(valid)
+        return self.trainer.train_many_fused(
+            w_glob, self.plane, np.stack(hop_rows), np.stack(hop_idx),
+            np.stack(hop_valid), lr=lr, broadcast=True,
+            mesh=self.mesh, data_axis=self.data_axis)
 
 
 class FedAvg(_Base):
@@ -158,12 +227,11 @@ class FedAvg(_Base):
 
     def _run_round_batched(self, w_glob, ids, weights, lr, rng, meter, state):
         padded = self._pad_cohort(len(ids))
-        batches, valid = stack_client_batches(
-            [self.clients[i] for i in ids], self.fl.batch_size,
-            self.fl.local_epochs, rng, pad_to=padded)
+        plans = [plan_epoch_indices(self.clients[i], self.fl.batch_size,
+                                    self.fl.local_epochs, rng) for i in ids]
         meter.record("cloud_down", len(ids))
-        out = self._train_many(
-            w_glob, batches, valid, lr=lr, broadcast=True,
+        out = self._train_cohort(
+            w_glob, ids, plans, lr=lr, broadcast=True,
             variant=self.variant,
             **self._batched_extra(w_glob, ids, state, padded - len(ids)))
         meter.record("cloud_up", len(ids))
@@ -265,13 +333,13 @@ class HierFAVG(_Base):
         per_edge_w = [self._weights(ids) for ids in edge_ids]
         edge_models = [w_glob] * len(self.edges)
         for r in range(fl.ring_rounds):
+            # a fresh stack every iteration: the fused path donates it
             params = tree_stack([edge_models[e] for e, _ in pairs]
                                 + [w_glob] * (padded - len(pairs)))
-            batches, valid = stack_plans(
-                [self.clients[i] for _, i in pairs],
-                [plans[e, r, i] for e, i in pairs], pad_to=padded)
             locals_ = tree_unstack(
-                self._train_many(params, batches, valid, lr=lr),
+                self._train_cohort(params, [i for _, i in pairs],
+                                   [plans[e, r, i] for e, i in pairs],
+                                   lr=lr),
                 len(pairs))
             off, edge_models = 0, []
             for ids, w in zip(edge_ids, per_edge_w):
@@ -370,12 +438,12 @@ class Scaffold(_Base):
         cis = [ci_map.get(i, tree_zeros_like(w_glob)) for i in ids]
         if self.batched:
             padded = self._pad_cohort(len(ids))
-            batches, valid = stack_client_batches(
-                [self.clients[i] for i in ids], self.fl.batch_size,
-                self.fl.local_epochs, rng, pad_to=padded)
+            plans = [plan_epoch_indices(self.clients[i], self.fl.batch_size,
+                                        self.fl.local_epochs, rng)
+                     for i in ids]
             meter.record("cloud_down", 2 * len(ids))    # model + c
-            out = self._train_many(
-                w_glob, batches, valid, lr=lr, broadcast=True,
+            out = self._train_cohort(
+                w_glob, ids, plans, lr=lr, broadcast=True,
                 variant="scaffold",
                 c_glob=c,                   # cohort-shared, broadcast in-jit
                 c_local=tree_stack(cis + [c] * (padded - len(ids))))

@@ -106,14 +106,14 @@ def run_experiment(
     test_labels = jnp.asarray(test.labels)
     acc_fn = jax.jit(lambda p: classifier_accuracy(p, test_images, test_labels, model_cfg))
     for t in range(start_round, fl.rounds):
-        t0 = time.time()
+        t0 = time.perf_counter()
         lr = float(lr_fn(t))
         w_glob, state = algo.run_round(w_glob, t, lr, rng, meter, state)
         if (t + 1) % eval_every == 0 or t == fl.rounds - 1:
             acc = float(acc_fn(w_glob))
             history.append(RoundRecord(
                 round=t + 1, accuracy=acc, comm=meter.snapshot(),
-                lr=lr, seconds=time.time() - t0,
+                lr=lr, seconds=time.perf_counter() - t0,
             ))
             if not quiet:
                 print(f"  [{fl.algorithm:>12}] round {t+1:>3} "

@@ -26,6 +26,13 @@ Two execution engines share the same losses and update rule:
   Clients are embarrassingly parallel between hops, so XLA partitions the
   whole scan along C with zero collectives. Callers must pad C to a
   multiple of the mesh axis (ghost clients — see ``stack_plans(pad_to)``).
+* fused — ``train_many_fused``: the batched math against a device-resident
+  ``DeviceDataPlane``. Per call, only int32 plan arrays cross H2D; the
+  scan body gathers each step's batch from the resident fleet stack with
+  ``jnp.take``. A leading hop axis H runs as an OUTER ``lax.scan``
+  carrying the model stack, so a whole ring lap sequence (R*K visits) is
+  ONE compiled dispatch; the non-broadcast family donates the params stack
+  to the computation (in-place update on accelerator backends).
 
 The update rule itself is elementwise, so one implementation serves both
 engines — and can optionally run as a single fused Pallas pass over the
@@ -51,6 +58,20 @@ Pytree = Any
 def _expand_mask(ok, x):
     """Broadcast a (C,) per-client step mask against a (C, ...) leaf."""
     return ok.reshape(ok.shape + (1,) * (x.ndim - 1))
+
+
+def _h2d_nbytes(a) -> int:
+    """Bytes that actually cross H2D for one host array: jax demotes 64-bit
+    dtypes to 32-bit on transfer while x64 is disabled, so int64 label
+    stacks ship as int32 — count those, not the host representation."""
+    a = np.asarray(a)
+    return a.size * min(a.dtype.itemsize, 4)
+
+
+def _donation_supported() -> bool:
+    """Buffer donation is a no-op (with a warning) on the CPU backend; only
+    request it where XLA can actually alias the update in place."""
+    return jax.default_backend() != "cpu"
 
 
 class LocalTrainer:
@@ -216,6 +237,79 @@ class LocalTrainer:
             for v, (loss, upd, n_loss) in many_spec.items()
         } for bc in (False, True))
 
+        # -- fused engine: the batched scan, but batches are GATHERED inside
+        #    the jit from the device-resident fleet stack (index-only H2D)
+        #    and an outer scan walks a hop axis carrying the model stack —
+        #    a whole ring lap sequence compiles to one dispatch.
+        def make_many_fused(loss_fn, update, extra_axes, broadcast_params):
+            n_loss_extras = len(extra_axes)
+            vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + extra_axes)
+
+            def many_hops(params, images, labels, offsets, rows, plans,
+                          valid, lr, *extras):
+                # images/labels: flat (total, ...) resident fleet stacks,
+                # offsets: (K,) first flat row of each client; rows: (H, C)
+                # int32 fleet row of each cohort/ring slot per hop; plans:
+                # (H, C, S, B) int32 sample indices; valid: (H, C, S).
+                # Extras are hop-invariant (rings train variant="plain";
+                # star cohorts call with H=1).
+                if broadcast_params:
+                    C = valid.shape[1]
+                    params = jax.tree.map(
+                        lambda x: jnp.broadcast_to(x[None], (C,) + x.shape),
+                        params)
+                H, _, S = valid.shape
+                # The (hop, step) axes flatten into ONE scan: a nested
+                # scan-in-scan pays per-hop setup (inner scan machinery,
+                # fresh zero momentum buffers) every hop, which dominates
+                # in the dispatch-bound S=1 regime. Instead the momentum
+                # carry is zeroed by a per-step reset flag wherever a new
+                # client visit begins — same math, one flat scan of H*S
+                # gathered SGD steps.
+                flat_rows = jnp.repeat(rows, S, axis=0)
+                flat_ix = jnp.transpose(plans, (0, 2, 1, 3)).reshape(
+                    (H * S,) + plans.shape[1:2] + plans.shape[3:])
+                flat_ok = jnp.transpose(valid, (0, 2, 1)).reshape(
+                    H * S, -1).astype(jnp.float32)
+                reset = (jnp.arange(H * S) % S == 0).astype(jnp.float32)
+                m = jax.tree.map(jnp.zeros_like, params)
+
+                def body(carry, x):
+                    pc, mc = carry
+                    row_s, ix, ok, rs = x   # (C,), (C, B), (C,), scalar
+                    mc = jax.tree.map(lambda mi: (1.0 - rs) * mi, mc)
+                    # fleet row r, sample i -> flat row offsets[r] + i: ONE
+                    # (C, B)-indexed gather per leaf, so a step reads C*B
+                    # rows — a per-lane take-of-take would materialize
+                    # (C, N_max, ...) intermediates and all-gather the
+                    # sharded plane instead
+                    gidx = jnp.take(offsets, row_s)[:, None] + ix
+                    batch = {"images": jnp.take(images, gidx, axis=0),
+                             "labels": jnp.take(labels, gidx, axis=0)}
+                    g = vgrad(pc, batch, *extras[:n_loss_extras])
+                    return update(pc, mc, g, lr,
+                                  *extras[n_loss_extras:], ok), None
+
+                (p, _), _ = jax.lax.scan(
+                    body, (params, m), (flat_rows, flat_ix, flat_ok, reset))
+                return p
+
+            donate = (0,) if (not broadcast_params
+                              and _donation_supported()) else ()
+            return jax.jit(many_hops, donate_argnums=donate)
+
+        self._many_fused, self._many_fused_bc = ({
+            v: make_many_fused(
+                loss, upd,
+                tuple(0 if stacked else None
+                      for stacked in self._EXTRA_STACKED[v][:n_loss]), bc)
+            for v, (loss, upd, n_loss) in many_spec.items()
+        } for bc in (False, True))
+
+        # data-plane H2D bytes shipped by the batched/sharded/fused engines
+        # (pixel stacks vs index plans) — benchmarks reset and read this
+        self.h2d_bytes = 0
+
     # ------------------------------------------------------------------
     def train(
         self,
@@ -284,34 +378,107 @@ class LocalTrainer:
         are left in ``self.last_steps_many``.
         """
         self.last_steps_many = np.asarray(valid).sum(axis=1).astype(int)
+        self.h2d_bytes += (sum(_h2d_nbytes(v) for v in batches.values())
+                           + _h2d_nbytes(valid))
         extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
         fam = self._many_bc if broadcast else self._many
         batches = {k: jnp.asarray(v) for k, v in batches.items()}
         valid = jnp.asarray(valid, bool)
         if mesh is not None:
-            n_shards = mesh.shape[data_axis]
-            C = valid.shape[0]
-            if C % n_shards != 0:
-                raise ValueError(
-                    f"client axis C={C} must be a multiple of mesh axis "
-                    f"{data_axis!r}={n_shards}; ghost-pad the cohort "
-                    "(stack_plans(pad_to=...))")
-            shard = NamedSharding(mesh, PartitionSpec(data_axis))
-            repl = NamedSharding(mesh, PartitionSpec())
-
-            def put(tree, sharding):
-                return jax.tree.map(
-                    lambda x: jax.device_put(jnp.asarray(x), sharding), tree)
-
+            put, data_s, shard, repl = self._mesh_placement(
+                mesh, data_axis, valid.shape[0], hop_leading=False)
             params = put(params, repl if broadcast else shard)
-            batches = put(batches, shard)
-            valid = put(valid, shard)
-            stacked = self._EXTRA_STACKED[variant]
+            batches = put(batches, data_s)
+            valid = put(valid, data_s)
             extras = tuple(
                 put(e, shard if s else repl)
-                for e, s in zip(extras, stacked))
+                for e, s in zip(extras, self._EXTRA_STACKED[variant]))
         return fam[variant](
             params, batches, valid, jnp.asarray(lr, jnp.float32), *extras)
+
+    @staticmethod
+    def _mesh_placement(mesh, data_axis: str, C: int, hop_leading: bool):
+        """NamedSharding placement shared by the sharded and fused engines:
+        a ``put`` helper plus the (per-visit data, client-stacked,
+        replicated) shardings. Per-visit data shards its C axis along
+        ``data_axis`` — with ``hop_leading``, after a leading hop axis —
+        and C must divide the mesh axis (callers ghost-pad)."""
+        n_shards = mesh.shape[data_axis]
+        if C % n_shards != 0:
+            raise ValueError(
+                f"client axis C={C} must be a multiple of mesh axis "
+                f"{data_axis!r}={n_shards}; ghost-pad the cohort "
+                "(stack_plans/stack_plan_indices pad_to=...)")
+        lead = (None, data_axis) if hop_leading else (data_axis,)
+        data_s = NamedSharding(mesh, PartitionSpec(*lead))
+        shard = NamedSharding(mesh, PartitionSpec(data_axis))
+        repl = NamedSharding(mesh, PartitionSpec())
+
+        def put(tree, sharding):
+            return jax.tree.map(
+                lambda x: jax.device_put(jnp.asarray(x), sharding), tree)
+
+        return put, data_s, shard, repl
+
+    # ------------------------------------------------------------------
+    def train_many_fused(
+        self,
+        params: Pytree,
+        plane,
+        rows: np.ndarray,
+        plans: np.ndarray,
+        valid: np.ndarray,
+        *,
+        lr: float,
+        variant: str = "plain",
+        broadcast: bool = False,
+        mesh: Optional[Mesh] = None,
+        data_axis: str = "data",
+        anchor: Optional[Pytree] = None,
+        w_glob: Optional[Pytree] = None,
+        w_prev: Optional[Pytree] = None,
+        c_glob: Optional[Pytree] = None,
+        c_local: Optional[Pytree] = None,
+    ) -> Pytree:
+        """A hop sequence of cohort visits in ONE compiled call against the
+        device-resident data plane (``DeviceDataPlane``).
+
+        ``rows`` (H, C) int32, ``plans`` (H, C, S, B) int32 and ``valid``
+        (H, C, S) bool come from ``stack_plan_indices``; they are the
+        ENTIRE per-call H2D payload — each step's pixels are gathered from
+        ``plane`` inside the jit. Hop h trains fleet row ``rows[h, c]`` on
+        plan ``plans[h, c]`` starting from the carried (C, ...) model
+        stack, with momentum reset per visit, so a FedSR/Ring round (H =
+        R*K hops) is one dispatch instead of R*K. Star cohorts call with
+        H=1 and behave exactly like ``train_many``.
+
+        ``broadcast=True`` stacks a single params tree device-side (the
+        FedAvg/ring-seed fast path). With ``broadcast=False`` the params
+        stack is DONATED to the computation on accelerator backends — the
+        caller's buffer is consumed and updated in place; pass a fresh
+        stack. ``mesh`` shards the C axis like ``train_many`` (the plane
+        itself was placed at construction).
+        """
+        rows = np.asarray(rows, np.int32)
+        plans = np.asarray(plans, np.int32)
+        valid = np.asarray(valid, bool)
+        self.last_steps_many = valid.sum(axis=(0, 2)).astype(int)
+        self.h2d_bytes += rows.nbytes + plans.nbytes + valid.nbytes
+        extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
+        fam = self._many_fused_bc if broadcast else self._many_fused
+        if mesh is not None:
+            put, hop_s, shard, repl = self._mesh_placement(
+                mesh, data_axis, valid.shape[1], hop_leading=True)
+            params = put(params, repl if broadcast else shard)
+            rows, plans, valid = (put(x, hop_s)
+                                  for x in (rows, plans, valid))
+            extras = tuple(
+                put(e, shard if s else repl)
+                for e, s in zip(extras, self._EXTRA_STACKED[variant]))
+        return fam[variant](
+            params, plane.images, plane.labels, plane.offsets,
+            jnp.asarray(rows), jnp.asarray(plans), jnp.asarray(valid),
+            jnp.asarray(lr, jnp.float32), *extras)
 
     # which extras carry a leading client axis (True) vs are cohort-shared
     # single trees (False) — order matches ``_extras``

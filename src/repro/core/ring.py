@@ -14,6 +14,18 @@ from repro.core.local import LocalTrainer
 Pytree = Any
 
 
+def ring_lap_hops(size: int, laps: int) -> int:
+    """Closed-form p2p hop count of ``laps`` laps over a ``size``-device
+    ring: size-1 forward hops per lap plus ONE lap-closing hop back to the
+    first device between consecutive laps — ``laps*(size-1) + (laps-1)``
+    total (after the final lap the model leaves via the edge uplink, paper
+    Algorithm 1 / eq. 7). A single-device ring has no peer, and zero laps
+    make zero hops (not -1 lap closings): both degenerate cases are 0."""
+    if size <= 1 or laps <= 0:
+        return 0
+    return laps * (size - 1) + (laps - 1)
+
+
 def ring_optimization(
     trainer: LocalTrainer,
     w: Pytree,

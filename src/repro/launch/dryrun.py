@@ -86,13 +86,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "status": "ok", "steps": {},
     }
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         lowered = lower_for(cfg, shape, mesh)
         acfg = adapt_config(cfg, shape)
         diff = _differential_costs(acfg, shape, mesh, num_repeats(acfg))
         for name, low in lowered.items():
-            t1 = time.time()
+            t1 = time.perf_counter()
             compiled = low.compile()
             hlo = compiled.as_text()
             trip = num_repeats(acfg)
@@ -111,7 +111,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
                 cost=cost, collective_bytes=collective_total, cfg=acfg,
             )
             rec["steps"][name] = {
-                "compile_s": round(time.time() - t1, 1),
+                "compile_s": round(time.perf_counter() - t1, 1),
                 "memory": mem,
                 "cost_flops_reported": float(cost.get("flops", 0.0)),
                 "cost_bytes_reported": float(cost.get("bytes accessed", 0.0)),
@@ -138,7 +138,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
         rec["status"] = "fail"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
-    rec["total_s"] = round(time.time() - t0, 1)
+    rec["total_s"] = round(time.perf_counter() - t0, 1)
     os.makedirs(outdir, exist_ok=True)
     fname = f"{arch}_{shape_name}_{mesh_name}.json"
     with open(os.path.join(outdir, fname), "w") as f:

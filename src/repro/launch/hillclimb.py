@@ -34,7 +34,7 @@ def measure(arch: str, shape_name: str, tag: str,
     reps = num_repeats(cfg)
     period = len(block_pattern(cfg))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     # differential 1-repeat/2-repeat unrolled lowerings (exact scan costs)
     rec = {"arch": arch, "shape": shape_name, "tag": tag,
            "cfg_overrides": cfg_overrides or {},
@@ -77,7 +77,7 @@ def measure(arch: str, shape_name: str, tag: str,
             "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
         }
         del compiled
-    rec["total_s"] = round(time.time() - t0, 1)
+    rec["total_s"] = round(time.perf_counter() - t0, 1)
     os.makedirs(outdir, exist_ok=True)
     with open(os.path.join(outdir, f"{arch}_{shape_name}_{tag}.json"), "w") as f:
         json.dump(rec, f, indent=1)

@@ -40,6 +40,14 @@ def make_host_mesh():
     return jax.make_mesh(_host_mesh_shape(n), ("data", "model"))
 
 
+def round_up_to_mesh(n: int, mesh, axis: str = "data") -> int:
+    """Smallest multiple of ``mesh``'s ``axis`` size >= ``n`` — the ghost-
+    padding target shared by the sharded/fused engines' cohort axis and the
+    fused engine's device-resident fleet stack."""
+    size = mesh.shape[axis]
+    return -(-n // size) * size
+
+
 def make_sim_mesh(num_clients: Optional[int] = None, *, axis: str = "data"):
     """1-D device mesh for the FL simulator's stacked client axis.
 

@@ -35,16 +35,16 @@ def prefill_and_decode(
 
     rng = jax.random.PRNGKey(seed)
     toks = prompts
-    t0 = time.time()
+    t0 = time.perf_counter()
     # prefill token-by-token through the cache path (keeps one compiled step;
     # a fused prefill kernel is a serving-layer optimization, see DESIGN.md)
     last_logits = None
     for i in range(s0):
         last_logits, cache = step(params, toks[:, i:i + 1], cache,
                                   jnp.asarray(i))
-    prefill_s = time.time() - t0
+    prefill_s = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(new_tokens):
         pos = s0 + i
         if temperature > 0:
@@ -54,7 +54,7 @@ def prefill_and_decode(
             nxt = jnp.argmax(last_logits[:, -1], axis=-1)
         toks = jnp.concatenate([toks, nxt[:, None].astype(jnp.int32)], axis=1)
         last_logits, cache = step(params, toks[:, -1:], cache, jnp.asarray(pos))
-    decode_s = time.time() - t0
+    decode_s = time.perf_counter() - t0
     return toks, {
         "prefill_s": prefill_s,
         "decode_s": decode_s,

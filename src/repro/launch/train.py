@@ -81,7 +81,7 @@ def train_loop(
           f"clients={n_clients}  ring_mode={tcfg.ring_mode}")
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for t in range(steps):
         batch_np = data[t].reshape(stack + (batch_per_client, seq_len + 1))
         batch = {
@@ -95,10 +95,10 @@ def train_loop(
         if (t + 1) % 10 == 0 or t == 0:
             log.log(t + 1, loss=float(loss),
                     tok_s=batch_per_client * n_clients * seq_len
-                    * (t + 1) / (time.time() - t0))
+                    * (t + 1) / (time.perf_counter() - t0))
     return {"final_loss": losses[-1], "first_loss": losses[0],
             "params_m": n_params / 1e6,
-            "seconds": time.time() - t0}
+            "seconds": time.perf_counter() - t0}
 
 
 def main() -> None:

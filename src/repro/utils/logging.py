@@ -12,14 +12,14 @@ class MetricLogger:
     def __init__(self, jsonl_path: Optional[str] = None, quiet: bool = False):
         self.jsonl_path = jsonl_path
         self.quiet = quiet
-        self._t0 = time.time()
+        self._t0 = time.perf_counter()
         if jsonl_path:
             os.makedirs(os.path.dirname(os.path.abspath(jsonl_path)), exist_ok=True)
             # truncate
             open(jsonl_path, "w").close()
 
     def log(self, step: int, **metrics: Any) -> None:
-        rec = {"step": step, "t": round(time.time() - self._t0, 3), **metrics}
+        rec = {"step": step, "t": round(time.perf_counter() - self._t0, 3), **metrics}
         if not self.quiet:
             parts = " ".join(
                 f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"

@@ -205,6 +205,20 @@ def test_fused_sgd_path_matches_tree_update(engine):
 # batch-stacker properties
 
 
+def test_stack_plans_all_none_raises_value_error():
+    """A stack of only ``None`` plans has no batch shape to pad to: it must
+    be a clear ValueError, not the bare StopIteration the old
+    ``next(...)`` generator leaked (PEP 479 makes that especially hostile
+    inside generator-based callers)."""
+    from repro.data.pipeline import stack_plan_indices, stack_plans
+
+    clients = _uneven_clients()[:2]
+    with pytest.raises(ValueError, match="every plan is None"):
+        stack_plans(clients, [None, None])
+    with pytest.raises(ValueError, match="every plan is None"):
+        stack_plan_indices([None, None], [0, 1])
+
+
 def _check_stacker_invariants(sizes, batch_size, epochs, seed):
     clients = _uneven_clients(sizes=sizes, seed=seed)
     rng = np.random.default_rng(seed)

@@ -22,9 +22,13 @@ def test_benchmark_run_smoke_entrypoint():
     assert any(n.startswith("kernel/fl_round") for n in names), names
     assert any(n.startswith("kernel/fl_round") and n.endswith("_sharded")
                for n in names), names
+    assert any(n.startswith("kernel/fl_round") and n.endswith("_fused")
+               for n in names), names
+    assert any(n.startswith("kernel/ring_round_fedsr") for n in names), names
     assert {"smoke/fedavg_round/sequential",
             "smoke/fedavg_round/batched",
-            "smoke/fedavg_round/sharded"} <= names, names
+            "smoke/fedavg_round/sharded",
+            "smoke/fedavg_round/fused"} <= names, names
     # every emitted row respects the CSV contract
     for l in lines[1:]:
         name, us, _ = l.split(",", 2)

@@ -81,7 +81,8 @@ def _meter(algo, engine):
     return meter
 
 
-@pytest.mark.parametrize("engine", ["sequential", "batched", "sharded"])
+@pytest.mark.parametrize("engine", ["sequential", "batched", "sharded",
+                                    "fused"])
 @pytest.mark.parametrize("algo", sorted(GOLDEN))
 def test_golden_comm_counts(algo, engine):
     meter = _meter(algo, engine)
@@ -91,7 +92,8 @@ def test_golden_comm_counts(algo, engine):
             f"Table III closed form says {want}")
 
 
-@pytest.mark.parametrize("engine", ["sequential", "batched"])
+@pytest.mark.parametrize("engine", ["sequential", "batched", "sharded",
+                                    "fused"])
 def test_single_device_rings_have_zero_p2p(engine):
     """Degenerate FedSR config num_edges == num_devices: every ring is one
     device, which has no peer — p2p must be exactly 0, not R-1 phantom
