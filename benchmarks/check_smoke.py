@@ -1,0 +1,69 @@
+"""Smoke-bench wall-time regression gate (CI).
+
+Compares the round rows of a ``benchmarks.run --smoke`` CSV against the
+committed baseline (``benchmarks/smoke_baseline.json``) and fails when any
+recorded round wall-time regresses by more than the baseline's factor
+(default 2x — wide enough for CI-runner noise, tight enough to catch a
+round path falling off its compiled fast path, e.g. an engine silently
+re-tracing or re-stacking per hop).
+
+  PYTHONPATH=src python -m benchmarks.run --smoke | tee smoke.csv
+  python benchmarks/check_smoke.py smoke.csv \\
+      --baseline benchmarks/smoke_baseline.json
+
+Re-baseline (after an intentional perf change) by pasting the new round
+``us_per_call`` values into the JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def parse_rows(csv_text: str) -> dict:
+    rows = {}
+    for line in csv_text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or parts[0] == "name":
+            continue
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            continue
+    return rows
+
+
+def check(rows: dict, baseline: dict) -> list:
+    factor = float(baseline.get("factor", 2.0))
+    failures = []
+    for name, base_us in baseline["rounds"].items():
+        if name not in rows:
+            failures.append(f"{name}: missing from smoke results")
+        elif rows[name] > factor * base_us:
+            failures.append(
+                f"{name}: {rows[name]:.0f}us > {factor:g}x baseline "
+                f"{base_us:.0f}us")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("csv", help="output of `python -m benchmarks.run --smoke`")
+    ap.add_argument("--baseline", default="benchmarks/smoke_baseline.json")
+    args = ap.parse_args()
+    with open(args.csv) as f:
+        rows = parse_rows(f.read())
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(rows, baseline)
+    for msg in failures:
+        print(f"REGRESSION {msg}", file=sys.stderr)
+    if not failures:
+        print(f"smoke gate: {len(baseline['rounds'])} round wall-times "
+              f"within {baseline.get('factor', 2.0):g}x of baseline")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

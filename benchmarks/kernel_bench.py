@@ -80,18 +80,21 @@ def bench_decode_attention() -> Tuple[str, float, str]:
 
 
 def _fl_round_times(engines, num_devices: int, iters: int,
-                    algorithm: str = "fedavg", **overrides) -> Tuple[dict, dict]:
-    """Min-of-iters wall time (us) AND per-round data-plane H2D bytes of one
-    FL round per engine.
+                    algorithm: str = "fedavg",
+                    **overrides) -> Tuple[dict, dict, dict]:
+    """Min-of-iters wall time (us), per-round data-plane H2D bytes AND
+    per-round compiled-dispatch counts of one FL round per engine.
 
     IoT microbench regime: a narrow MLP (hidden 64x64) and ~2-sample device
     shards, so the round cost is dominated by per-visit dispatch/transfer
     overhead — the term that grows linearly with fleet size and that the
     batched/fused engines remove — rather than by raw matmul FLOPs, which
     are identical under every engine. H2D bytes come from
-    ``LocalTrainer.h2d_bytes`` (pixel stacks for batched/sharded, int32
-    index plans for fused; 0 for sequential, which ships per-step batches
-    outside the accounted stacker path)."""
+    ``LocalTrainer.h2d_bytes`` (per-step batches for sequential, pixel
+    stacks for batched/sharded, int32 index plans for fused), dispatch
+    counts from ``LocalTrainer.dispatches`` (one per jitted step /
+    ``train_many`` / ``train_many_fused`` invocation — the fused FedSR
+    round records exactly 1)."""
     import dataclasses
 
     from repro.configs import get_config
@@ -111,7 +114,7 @@ def _fl_round_times(engines, num_devices: int, iters: int,
     overrides.setdefault("num_edges", 8)
     overrides.setdefault("batch_size", 4)
     overrides.setdefault("local_epochs", 1)
-    times, h2d = {}, {}
+    times, h2d, dispatches = {}, {}, {}
     for engine in engines:
         fl = FLConfig(algorithm=algorithm, num_devices=num_devices,
                       engine=engine, **overrides)
@@ -127,6 +130,7 @@ def _fl_round_times(engines, num_devices: int, iters: int,
 
         jax.block_until_ready(round_())             # compile + warmup
         trainer.h2d_bytes = 0
+        trainer.dispatches = 0
         best = float("inf")
         for _ in range(iters):
             t0 = time.perf_counter()
@@ -134,18 +138,23 @@ def _fl_round_times(engines, num_devices: int, iters: int,
             best = min(best, time.perf_counter() - t0)
         times[engine] = best * 1e6
         h2d[engine] = trainer.h2d_bytes // iters
-    return times, h2d
+        dispatches[engine] = trainer.dispatches // iters
+    return times, h2d, dispatches
 
 
 def bench_fl_engines(num_devices: int = 64, iters: int = 6) -> Tuple[str, float, str]:
     """A/B the FL round engines: sequential python loop over per-client
     jitted steps vs the batched vmap engine, one 64-client FedAvg round.
     Min-of-iters timing (post-compile) to resist host noise; derived reports
-    the sequential time and the speedup (acceptance target: >= 3x)."""
-    times, _ = _fl_round_times(("sequential", "batched"), num_devices, iters)
+    the sequential time and the speedup (acceptance target: >= 3x), plus
+    both engines' per-round H2D bytes — the sequential engine's per-step
+    batch shipments are metered too, so the comparison is like-for-like."""
+    times, h2d, _ = _fl_round_times(("sequential", "batched"), num_devices,
+                                    iters)
     speedup = times["sequential"] / times["batched"]
     return (f"fl_round_fedavg{num_devices}_mlp64_batched", times["batched"],
-            f"seq_us={times['sequential']:.0f};speedup={speedup:.1f}x")
+            f"seq_us={times['sequential']:.0f};speedup={speedup:.1f}x"
+            f";h2d_seq={h2d['sequential']};h2d_batched={h2d['batched']}")
 
 
 def bench_fl_engines_sharded(num_devices: int = 64, iters: int = 6) -> Tuple[str, float, str]:
@@ -158,7 +167,7 @@ def bench_fl_engines_sharded(num_devices: int = 64, iters: int = 6) -> Tuple[str
     are interpretable either way."""
     from repro.launch.mesh import make_sim_mesh
 
-    times, _ = _fl_round_times(("batched", "sharded"), num_devices, iters)
+    times, _, _ = _fl_round_times(("batched", "sharded"), num_devices, iters)
     mesh_devices = make_sim_mesh(num_devices).shape["data"]
     ratio = times["batched"] / times["sharded"]
     return (f"fl_round_fedavg{num_devices}_mlp64_sharded", times["sharded"],
@@ -172,11 +181,27 @@ def bench_fl_engines_fused(num_devices: int = 64, iters: int = 6) -> Tuple[str, 
     per-round H2D collapses from the (C, S, B, 28, 28) pixel stack to int32
     index plans (~800x for these shapes). ``derived`` records wall time of
     both engines plus per-round H2D bytes of each."""
-    times, h2d = _fl_round_times(("batched", "fused"), num_devices, iters)
+    times, h2d, _ = _fl_round_times(("batched", "fused"), num_devices, iters)
     speedup = times["batched"] / times["fused"]
     return (f"fl_round_fedavg{num_devices}_mlp64_fused", times["fused"],
             f"batched_us={times['batched']:.0f};speedup={speedup:.1f}x"
             f";h2d_batched={h2d['batched']};h2d_fused={h2d['fused']}")
+
+
+_FEDSR_RING_RUNS = {}
+
+
+def _fedsr_ring_times(num_devices, ring_rounds, num_edges, iters):
+    """ONE batched-vs-fused FedSR ring measurement, shared by the two rows
+    that report it (``ring_round_*_fused`` continuity + the PR-4
+    ``*_onedispatch`` acceptance row) — the heaviest A/B in the suite
+    should not run twice for two views of the same numbers."""
+    key = (num_devices, ring_rounds, num_edges, iters)
+    if key not in _FEDSR_RING_RUNS:
+        _FEDSR_RING_RUNS[key] = _fl_round_times(
+            ("batched", "fused"), num_devices, iters, algorithm="fedsr",
+            ring_rounds=ring_rounds, num_edges=num_edges)
+    return _FEDSR_RING_RUNS[key]
 
 
 def bench_ring_round_fedsr(num_devices: int = 64, ring_rounds: int = 4,
@@ -192,15 +217,36 @@ def bench_ring_round_fedsr(num_devices: int = 64, ring_rounds: int = 4,
     Wide rings keep per-hop FLOPs small relative to per-hop fixed costs;
     many concurrent rings (large M) or fat visits grow the shared compiled
     scan body and shrink the ratio toward 1."""
-    times, h2d = _fl_round_times(("batched", "fused"), num_devices, iters,
-                                 algorithm="fedsr", ring_rounds=ring_rounds,
-                                 num_edges=num_edges)
+    times, h2d, _ = _fedsr_ring_times(num_devices, ring_rounds, num_edges,
+                                      iters)
     speedup = times["batched"] / times["fused"]
     return (f"ring_round_fedsr{num_devices}_mlp64_fused", times["fused"],
             f"batched_us={times['batched']:.0f};speedup={speedup:.1f}x"
             f";h2d_batched={h2d['batched']};h2d_fused={h2d['fused']}")
 
 
+def bench_fedsr_onedispatch(num_devices: int = 64, ring_rounds: int = 4,
+                            num_edges: int = 2,
+                            iters: int = 6) -> Tuple[str, float, str]:
+    """The in-jit-aggregation headline (PR 4): the fused FedSR round —
+    broadcast, R-lap ring scan over 2 rings of 32, two-level weighted
+    cloud reduce (eq. 11) — measured as a SINGLE compiled dispatch.
+    Before the RoundPlan IR (PR 3) the fused round still paid a host-side
+    unstack + tree_weighted_sum after its one training dispatch; now the
+    reduce is inside it. ``derived`` records the dispatch counts of both
+    engines (fused must be 1), the batched wall time/speedup, and the H2D
+    bytes of each — the deltas vs the PR 3 row
+    ``ring_round_fedsr*_mlp64_fused`` isolate what moving aggregation
+    in-jit bought. Shares ``bench_ring_round_fedsr``'s measurement."""
+    times, h2d, disp = _fedsr_ring_times(num_devices, ring_rounds, num_edges,
+                                         iters)
+    speedup = times["batched"] / times["fused"]
+    return (f"fl_round_fedsr{num_devices}_mlp64_onedispatch", times["fused"],
+            f"dispatches={disp['fused']};batched_dispatches={disp['batched']}"
+            f";batched_us={times['batched']:.0f};speedup={speedup:.1f}x"
+            f";h2d_batched={h2d['batched']};h2d_fused={h2d['fused']}")
+
+
 ALL = [bench_attention, bench_ssd, bench_fused_sgd, bench_decode_attention,
        bench_fl_engines, bench_fl_engines_sharded, bench_fl_engines_fused,
-       bench_ring_round_fedsr]
+       bench_ring_round_fedsr, bench_fedsr_onedispatch]

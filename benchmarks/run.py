@@ -93,8 +93,8 @@ def run_smoke() -> None:
     size, and one tiny FL round per engine — so the benchmark drivers can't
     silently rot. Invoked from tier-1 (tests/test_benchmarks_smoke.py)."""
     from benchmarks.kernel_bench import (
-        bench_fl_engines, bench_fl_engines_fused, bench_fl_engines_sharded,
-        bench_fused_sgd, bench_ring_round_fedsr,
+        bench_fedsr_onedispatch, bench_fl_engines, bench_fl_engines_fused,
+        bench_fl_engines_sharded, bench_fused_sgd, bench_ring_round_fedsr,
     )
 
     name, us, derived = bench_fused_sgd()
@@ -107,6 +107,9 @@ def run_smoke() -> None:
     _emit(f"kernel/{name}", us, derived)
     name, us, derived = bench_ring_round_fedsr(num_devices=8, ring_rounds=2,
                                                num_edges=2, iters=1)
+    _emit(f"kernel/{name}", us, derived)
+    name, us, derived = bench_fedsr_onedispatch(num_devices=8, ring_rounds=2,
+                                                num_edges=2, iters=1)
     _emit(f"kernel/{name}", us, derived)
 
     from repro.configs import get_config

@@ -1,12 +1,17 @@
 # FedSR — the paper's primary contribution: ring-optimization (incremental
 # subgradient over a device ring) + semi-decentralized star-ring hierarchy.
+# Algorithms are planners over the RoundPlan IR (repro.core.plan); the
+# engines package (repro.core.engines) interprets the plans.
 from repro.core.algorithms import ALGORITHMS, make_algorithm
 from repro.core.comm import CommMeter
+from repro.core.engines import make_engine
 from repro.core.executor import ExperimentResult, RoundRecord, run_experiment
 from repro.core.local import LocalTrainer
+from repro.core.plan import AggSpec, RoundPlan, VisitGroup
 from repro.core.ring import ring_optimization
 
 __all__ = [
-    "ALGORITHMS", "CommMeter", "ExperimentResult", "LocalTrainer",
-    "RoundRecord", "make_algorithm", "ring_optimization", "run_experiment",
+    "ALGORITHMS", "AggSpec", "CommMeter", "ExperimentResult", "LocalTrainer",
+    "RoundPlan", "RoundRecord", "VisitGroup", "make_algorithm",
+    "make_engine", "ring_optimization", "run_experiment",
 ]

@@ -1,120 +1,87 @@
-"""All FL algorithms compared in the paper (§IV-B), one round each.
+"""All FL algorithms compared in the paper (§IV-B) — as *planners*.
 
-Every algorithm exposes ``run_round(w_glob, round_idx, lr, rng, meter,
-state) -> (w_glob, state)`` over a shared roster of clients, so the
-executor and benchmarks treat them uniformly. ``state`` carries algorithm-
-private memory (MOON's previous local models).
+Every algorithm is a pure planner over the RoundPlan IR (``core.plan``):
+``plan_round(t, rng, state)`` consumes only the host RNG, the config and
+the algorithm's host-side state, and emits a declarative plan — visit
+groups (a star cohort, or hop-sequenced ring stacks with pre-drawn batch
+plans), an extras spec (cohort-shared vs per-lane), an aggregation spec
+(eq. 11 weights, per-edge grouping for HierFAVG), and closed-form comm
+records (Table III). Execution lives entirely in ``core.engines``; which
+engine interprets the plan is ``FLConfig.engine``'s choice and never
+changes the math.
 
-``FLConfig.engine`` selects how a round executes:
+Planners draw ALL randomness (participation sampling, ring orders, batch
+plans) in the sequential engine's visit order, so every engine consumes a
+bit-identical RNG stream by construction — parity is structural, not
+per-engine discipline. Algorithms with memory (MOON's previous locals,
+SCAFFOLD's control variates) request the final group's per-lane models
+(``keep_locals``) and fold them back into ``state`` in ``update_state``.
 
-* ``sequential`` — the reference python loop, one ``LocalTrainer.train``
-  call per client visit.
-* ``batched`` — every set of *concurrent* visits runs as one
-  ``LocalTrainer.train_many`` call: star algorithms batch their whole
-  cohort; FedSR/HierFAVG/Ring batch their independent rings/edges and step
-  them hop-by-hop in lockstep. Data plans are pre-drawn in the sequential
-  engine's visit order (see ``plan_epoch_indices``), so both engines
-  consume an identical RNG stream and produce matching rounds.
-* ``sharded`` — the batched engine with the stacked ``(C, ...)`` client
-  axis placed on a device mesh's data axis (``launch.mesh.make_sim_mesh``).
-  Cohorts/rings are ghost-padded to the next multiple of the mesh size
-  (``_pad_cohort``) so the stack always shards evenly; ghost rows are
-  all-invalid (never train, never touch the RNG stream, never metered) and
-  are sliced off before aggregation. Setting ``FLConfig.mesh_data_axis``
-  opts the plain batched engine into the same mesh placement.
-* ``fused`` — the batched schedule against a device-resident data plane:
-  client shards upload ONCE per experiment (``DeviceDataPlane``, built
-  lazily on the first visit), every visit ships only int32 batch plans
-  (``stack_plan_indices``) and FedSR/Ring rounds run their ENTIRE lap
-  sequence as one compiled scan over hops (``_run_rings_fused``) instead
-  of one dispatch plus a host re-stack per hop. Plans are pre-drawn in the
-  identical sequential visit order, so RNG-stream/output/meter parity with
-  every other engine is preserved. ``FLConfig.mesh_data_axis`` composes:
-  the plane's fleet axis and the cohort axis then shard over the mesh.
+``run_round(w_glob, t, lr, rng, meter, state)`` is the driver every
+executor/benchmark calls: plan -> engine.run -> meter from plan.comm ->
+state update. Plans reference the global model only through the ``GLOBAL``
+sentinel, so ``w_glob`` stays device-resident across rounds — with the
+engines' in-jit aggregation there is no per-round unstack/host/restack of
+model trees at all.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Tuple
 
 import jax
 import numpy as np
 
-from repro.configs.base import FLConfig, ModelConfig
+from repro.configs.base import FLConfig
 from repro.core.comm import CommMeter
+from repro.core.engines import make_engine
 from repro.core.local import LocalTrainer
-from repro.core.ring import ring_lap_hops, ring_optimization
+from repro.core.plan import (
+    GLOBAL, ZEROS, AggSpec, Hop, RoundPlan, RoundResult, VisitGroup,
+)
+from repro.core.ring import ring_lap_hops
 from repro.core.topology import assign_edges, clusters_of, sample_ring
-from repro.data.pipeline import (
-    ClientData, DeviceDataPlane, plan_epoch_indices, stack_plan_indices,
-    stack_plans,
-)
-from repro.utils.tree import (
-    tree_broadcast, tree_prefix, tree_stack, tree_unstack, tree_weighted_sum,
-    tree_weighted_sum_stacked,
-)
+from repro.data.pipeline import ClientData, plan_epoch_indices
 
 Pytree = Any
 
 
-class _Base:
-    variant = "plain"
+class _Planner:
+    """Shared planner base: sampling/weights helpers + the round driver."""
 
-    def __init__(self, trainer: LocalTrainer, clients: List[ClientData], fl: FLConfig):
-        if fl.engine not in ("sequential", "batched", "sharded", "fused"):
-            raise ValueError(
-                f"unknown FLConfig.engine {fl.engine!r}; "
-                "expected 'sequential', 'batched', 'sharded' or 'fused'")
+    variant = "plain"
+    keep_locals = False
+
+    def __init__(self, trainer: LocalTrainer, clients: List[ClientData],
+                 fl: FLConfig):
         self.trainer = trainer
         self.clients = clients
         self.fl = fl
+        self.engine = make_engine(trainer, clients, fl)
         self.edges = assign_edges(fl.num_devices, fl.num_edges)
-        # sharded = the batched engine + a device mesh for the client stack;
-        # mesh_data_axis alone opts the batched/fused engines into the mesh.
-        self.batched = fl.engine != "sequential"
-        self.fused = fl.engine == "fused"
-        self.data_axis = fl.mesh_data_axis or "data"
-        self.mesh = None
-        self._plane = None
-        if fl.engine == "sharded" or (self.batched and fl.mesh_data_axis):
-            from repro.launch.mesh import make_sim_mesh
-            self.mesh = make_sim_mesh(fl.num_devices, axis=self.data_axis)
 
-    @property
-    def plane(self) -> DeviceDataPlane:
-        """Device-resident fleet stack of the fused engine, built on the
-        first visit so ONE upload serves every round of the experiment."""
-        if self._plane is None:
-            self._plane = DeviceDataPlane(
-                self.clients, mesh=self.mesh, data_axis=self.data_axis)
-        return self._plane
+    # -- the one execution driver (identical for every algorithm) --------
+    def run_round(self, w_glob, t, lr, rng: np.random.Generator,
+                  meter: CommMeter, state: Dict) -> Tuple[Pytree, Dict]:
+        plan = self.plan_round(t, rng, state)
+        result = self.engine.run(plan, w_glob, lr)
+        if meter is not None:
+            for channel, count in plan.comm:
+                meter.record(channel, count)
+        self.update_state(plan, w_glob, result, lr, state)
+        return result.w_glob, state
 
-    def _pad_cohort(self, c: int) -> int:
-        """Round a cohort/ring count up to the next mesh-size multiple (the
-        ghost-client padding of the sharded engine); identity when unsharded."""
-        if self.mesh is None:
-            return c
-        from repro.launch.mesh import round_up_to_mesh
-        return round_up_to_mesh(c, self.mesh, self.data_axis)
+    def plan_round(self, t: int, rng: np.random.Generator,
+                   state: Dict) -> RoundPlan:
+        raise NotImplementedError
 
-    def _train_many(self, params, batches, valid, **kw):
-        return self.trainer.train_many(
-            params, batches, valid, mesh=self.mesh, data_axis=self.data_axis,
-            **kw)
+    def update_state(self, plan: RoundPlan, w_before: Pytree,
+                     result: RoundResult, lr: float, state: Dict) -> None:
+        pass
 
-    def _train_cohort(self, params, ids: List[int], plans, **kw):
-        """One concurrent visit of cohort ``ids`` with pre-drawn ``plans``,
-        routed through the engine's data path: fused ships index-only plans
-        against the resident plane (H=1 hop); batched/sharded materialize
-        the pixel stacks host-side. Cohorts are ghost-padded under a mesh."""
-        padded = self._pad_cohort(len(ids))
-        if self.fused:
-            rows, idx, valid = stack_plan_indices(plans, ids, pad_to=padded)
-            return self.trainer.train_many_fused(
-                params, self.plane, rows[None], idx[None], valid[None],
-                mesh=self.mesh, data_axis=self.data_axis, **kw)
-        batches, valid = stack_plans(
-            [self.clients[i] for i in ids], plans, pad_to=padded)
-        return self._train_many(params, batches, valid, **kw)
+    # -- planning helpers ------------------------------------------------
+    def _batch_plan(self, i: int, rng: np.random.Generator) -> np.ndarray:
+        return plan_epoch_indices(self.clients[i], self.fl.batch_size,
+                                  self.fl.local_epochs, rng)
 
     def _sample(self, rng: np.random.Generator) -> List[int]:
         k = self.fl.num_devices
@@ -125,301 +92,83 @@ class _Base:
         sizes = np.asarray([len(self.clients[i]) for i in ids], np.float64)
         return sizes / sizes.sum()
 
-    # -- shared batched ring runner (FedSR clusters / the global ring) ------
-    def _ring_hop(self, rings, plans, lap: int, j: int):
-        """Ring position j of every ring at lap ``lap``: (client ids, hop
-        plans). Positions past a shorter ring's end repeat the ring's first
-        device with a ``None`` plan (all-invalid — the model is carried
-        unchanged). ONE implementation of the ring-tail rule, shared by the
-        batched and fused runners so it cannot drift between engines."""
-        ids = [ring[j] if j < len(ring) else ring[0] for ring in rings]
-        hop_plans = [plans[r, lap, j] if j < len(ring) else None
-                     for r, ring in enumerate(rings)]
-        return ids, hop_plans
+    def _ring_hops(self, rings: List[List[int]],
+                   rng: np.random.Generator) -> Tuple[Hop, ...]:
+        """The lap sequence of concurrent rings as (R * max-size) hops.
 
-    def _run_rings_batched(self, w_glob, rings: List[List[int]], lr, rng,
-                           meter: Optional[CommMeter]) -> List[Pytree]:
-        """Advance all rings concurrently: hop j of every ring is one
-        ``train_many`` call over the stacked ring models — or, under the
-        fused engine, the WHOLE lap sequence is one ``train_many_fused``
-        dispatch (``_run_rings_fused``). Plans are drawn ring-by-ring first
-        — the sequential visit order — so the RNG stream matches
-        ``ring_optimization`` exactly. Rings shorter than the longest get
-        all-invalid steps past their end (model carried unchanged); under
-        a mesh, the ring axis is ghost-padded to the mesh-size multiple."""
+        Plans are drawn ring-by-ring, lap-by-lap — the sequential engine's
+        visit order, so the RNG stream is engine-invariant. Hop j past a
+        shorter ring's end repeats the ring's first device with a ``None``
+        plan (all-invalid — the lane's model is carried unchanged): ONE
+        implementation of the ring-tail rule for every engine."""
         fl = self.fl
         plans = {}
         for r, ring in enumerate(rings):
             for lap in range(fl.ring_rounds):
                 for j, i in enumerate(ring):
-                    plans[r, lap, j] = plan_epoch_indices(
-                        self.clients[i], fl.batch_size, fl.local_epochs, rng)
-        padded = self._pad_cohort(len(rings))
-        hops = max(len(r) for r in rings)
-        if self.fused and fl.ring_rounds > 0:
-            # (ring_rounds=0 falls through to the loop below, which runs no
-            # hops and yields the broadcast seed — same as every engine)
-            models = self._run_rings_fused(w_glob, rings, plans, hops,
-                                           padded, lr)
-        else:
-            models = tree_broadcast(w_glob, padded)
-            for lap in range(fl.ring_rounds):
-                for j in range(hops):
-                    ids, hop_plans = self._ring_hop(rings, plans, lap, j)
-                    batches, valid = stack_plans(
-                        [self.clients[i] for i in ids], hop_plans,
-                        pad_to=padded)
-                    models = self._train_many(models, batches, valid, lr=lr)
-        if meter is not None:
-            for ring in rings:
-                # R laps over K devices cost R*(K-1) + (R-1) hops (the final
-                # lap ends at the last device; its model leaves via the edge
-                # uplink, not the ring) — see ``ring_lap_hops``.
-                meter.record("p2p", ring_lap_hops(len(ring), fl.ring_rounds))
-        return tree_unstack(models, len(rings))
-
-    def _run_rings_fused(self, w_glob, rings: List[List[int]], plans,
-                         hops: int, padded: int, lr) -> Pytree:
-        """The fused ring round: every (lap, hop) visit's plan is stacked
-        along a leading hop axis (H = R*hops, C, S, B) — padded to the
-        round-global max step count S so hops are uniform — and the whole
-        lap sequence runs as ONE ``train_many_fused`` dispatch, the model
-        stack carried hop to hop inside the compiled scan. H2D is the int32
-        plan stack; pixels never leave the resident data plane."""
-        fl = self.fl
-        S = max(p.shape[0] for p in plans.values())
-        hop_rows, hop_idx, hop_valid = [], [], []
-        for lap in range(fl.ring_rounds):
-            for j in range(hops):
-                ids, hop_plans = self._ring_hop(rings, plans, lap, j)
-                rows, idx, valid = stack_plan_indices(
-                    hop_plans, ids, pad_to=padded, steps=S)
-                hop_rows.append(rows)
-                hop_idx.append(idx)
-                hop_valid.append(valid)
-        return self.trainer.train_many_fused(
-            w_glob, self.plane, np.stack(hop_rows), np.stack(hop_idx),
-            np.stack(hop_valid), lr=lr, broadcast=True,
-            mesh=self.mesh, data_axis=self.data_axis)
+                    plans[r, lap, j] = self._batch_plan(i, rng)
+        width = max(len(r) for r in rings)
+        return tuple(
+            Hop(ids=tuple(ring[j] if j < len(ring) else ring[0]
+                          for ring in rings),
+                plans=tuple(plans[r, lap, j] if j < len(ring) else None
+                            for r, ring in enumerate(rings)))
+            for lap in range(fl.ring_rounds) for j in range(width)
+        )
 
 
-class FedAvg(_Base):
-    """McMahan et al. 2017 — the star baseline (paper Fig. 1)."""
+class FedAvg(_Planner):
+    """McMahan et al. 2017 — the star baseline (paper Fig. 1): one cohort
+    visit group, flat |D_i|/|D| aggregation."""
 
-    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+    _transfers_per_client = 1       # model each way (SCAFFOLD ships 2)
+
+    def plan_round(self, t, rng, state):
         ids = self._sample(rng)
-        weights = self._weights(ids)
-        if self.batched:
-            return self._run_round_batched(
-                w_glob, ids, weights, lr, rng, meter, state)
-        locals_ = []
-        for i in ids:
-            meter.record("cloud_down")
-            w = self.trainer.train(
-                w_glob, self.clients[i], lr=lr,
-                epochs=self.fl.local_epochs, rng=rng, variant=self.variant,
-                **self._extra(w_glob, i, state),
-            )
-            locals_.append(w)
-            meter.record("cloud_up")
-            self._post(i, w, state)
-        return tree_weighted_sum(locals_, weights.tolist()), state
+        plans = tuple(self._batch_plan(i, rng) for i in ids)
+        shared, stacked = self._extra_specs(ids, state)
+        group = VisitGroup(
+            hops=(Hop(tuple(ids), plans),), variant=self.variant,
+            shared_extras=shared, stacked_extras=stacked,
+            agg=AggSpec.flat(self._weights(ids)),
+            keep_locals=self.keep_locals)
+        n = self._transfers_per_client * len(ids)
+        return RoundPlan(groups=(group,),
+                         comm=(("cloud_down", n), ("cloud_up", n)))
 
-    def _run_round_batched(self, w_glob, ids, weights, lr, rng, meter, state):
-        padded = self._pad_cohort(len(ids))
-        plans = [plan_epoch_indices(self.clients[i], self.fl.batch_size,
-                                    self.fl.local_epochs, rng) for i in ids]
-        meter.record("cloud_down", len(ids))
-        out = self._train_cohort(
-            w_glob, ids, plans, lr=lr, broadcast=True,
-            variant=self.variant,
-            **self._batched_extra(w_glob, ids, state, padded - len(ids)))
-        meter.record("cloud_up", len(ids))
-        out = tree_prefix(out, len(ids))            # drop ghost rows
-        if type(self)._post is not FedAvg._post:    # only MOON keeps locals
-            for i, w in zip(ids, tree_unstack(out, len(ids))):
-                self._post(i, w, state)
-        return tree_weighted_sum_stacked(out, weights), state
-
-    def _extra(self, w_glob, i, state) -> Dict:
-        return {}
-
-    def _batched_extra(self, w_glob, ids, state, ghosts: int) -> Dict:
-        """Stacked/shared extras for one batched cohort visit. Cohort-shared
-        trees are returned UNSTACKED (broadcast inside the jit — the host
-        never materializes C copies); per-client stacks are ghost-padded."""
-        return {}
-
-    def _post(self, i, w, state) -> None:
-        pass
+    def _extra_specs(self, ids, state) -> Tuple[Dict, Dict]:
+        """(shared, per-lane) extras of one cohort visit; values may use
+        the GLOBAL/ZEROS sentinels — engines resolve them at run time."""
+        return {}, {}
 
 
 class FedProx(FedAvg):
     """Li et al. 2020 — proximal term mu/2 ||w - w_glob||^2."""
     variant = "prox"
 
-    def _extra(self, w_glob, i, state):
-        return {"anchor": w_glob}
-
-    def _batched_extra(self, w_glob, ids, state, ghosts):
-        return {"anchor": w_glob}       # cohort-shared, broadcast in-jit
+    def _extra_specs(self, ids, state):
+        return {"anchor": GLOBAL}, {}       # cohort-shared, broadcast in-jit
 
 
 class Moon(FedAvg):
     """Li et al. 2021 — model-contrastive loss. state["prev"][i] holds the
     previous local model of client i (initialized to the global model)."""
     variant = "moon"
+    keep_locals = True
 
-    def _extra(self, w_glob, i, state):
-        prev = state.setdefault("prev", {}).get(i, w_glob)
-        return {"w_glob": w_glob, "w_prev": prev}
-
-    def _batched_extra(self, w_glob, ids, state, ghosts):
+    def _extra_specs(self, ids, state):
         prev = state.setdefault("prev", {})
-        prevs = [prev.get(i, w_glob) for i in ids] + [w_glob] * ghosts
-        return {"w_glob": w_glob,       # cohort-shared, broadcast in-jit
-                "w_prev": tree_stack(prevs)}
+        return ({"w_glob": GLOBAL},
+                {"w_prev": tuple(prev.get(i, GLOBAL) for i in ids)})
 
-    def _post(self, i, w, state):
-        state.setdefault("prev", {})[i] = w
-
-
-class HierFAVG(_Base):
-    """Liu et al. 2020 — hierarchical FedAvg: R edge-level FedAvg iterations
-    per cloud round (matched compute budget with FedSR: same R)."""
-
-    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
-        if self.batched:
-            return self._run_round_batched(w_glob, lr, rng, meter), state
-        edge_models, edge_weights = [], []
-        for edge_devices in self.edges:
-            ids = sample_ring(edge_devices, rng,
-                              participation=self.fl.participation,
-                              reshuffle=False)
-            w_edge = w_glob
-            meter.record("cloud_down")
-            for _ in range(self.fl.ring_rounds):        # R edge iterations
-                locals_ = []
-                w = self._weights(ids)
-                for i in ids:
-                    meter.record("edge_down")
-                    locals_.append(self.trainer.train(
-                        w_edge, self.clients[i], lr=lr,
-                        epochs=self.fl.local_epochs, rng=rng))
-                    meter.record("edge_up")
-                w_edge = tree_weighted_sum(locals_, w.tolist())
-            edge_models.append(w_edge)
-            edge_weights.append(sum(len(self.clients[i]) for i in ids))
-            meter.record("cloud_up")
-        total = float(sum(edge_weights))
-        return tree_weighted_sum(edge_models, [w / total for w in edge_weights]), state
-
-    def _run_round_batched(self, w_glob, lr, rng, meter: CommMeter):
-        """All edges iterate in lockstep: iteration r trains every (edge,
-        device) pair in one ``train_many`` call, then aggregates per edge.
-        Sampling + plans are drawn edge-by-edge (the sequential order)."""
-        fl = self.fl
-        edge_ids, plans = [], {}
-        for e, edge_devices in enumerate(self.edges):
-            ids = sample_ring(edge_devices, rng,
-                              participation=fl.participation, reshuffle=False)
-            edge_ids.append(ids)
-            for r in range(fl.ring_rounds):
-                for i in ids:
-                    plans[e, r, i] = plan_epoch_indices(
-                        self.clients[i], fl.batch_size, fl.local_epochs, rng)
-        pairs = [(e, i) for e, ids in enumerate(edge_ids) for i in ids]
-        padded = self._pad_cohort(len(pairs))
-        per_edge_w = [self._weights(ids) for ids in edge_ids]
-        edge_models = [w_glob] * len(self.edges)
-        for r in range(fl.ring_rounds):
-            # a fresh stack every iteration: the fused path donates it
-            params = tree_stack([edge_models[e] for e, _ in pairs]
-                                + [w_glob] * (padded - len(pairs)))
-            locals_ = tree_unstack(
-                self._train_cohort(params, [i for _, i in pairs],
-                                   [plans[e, r, i] for e, i in pairs],
-                                   lr=lr),
-                len(pairs))
-            off, edge_models = 0, []
-            for ids, w in zip(edge_ids, per_edge_w):
-                edge_models.append(tree_weighted_sum(
-                    locals_[off:off + len(ids)], w.tolist()))
-                off += len(ids)
-        sizes = [sum(len(self.clients[i]) for i in ids) for ids in edge_ids]
-        for ids in edge_ids:
-            meter.record("cloud_down")
-            meter.record("edge_down", fl.ring_rounds * len(ids))
-            meter.record("edge_up", fl.ring_rounds * len(ids))
-            meter.record("cloud_up")
-        total = float(sum(sizes))
-        return tree_weighted_sum(edge_models, [s / total for s in sizes])
+    def update_state(self, plan, w_before, result, lr, state):
+        ids = plan.groups[0].hops[0].ids
+        prev = state.setdefault("prev", {})
+        for i, w in zip(ids, result.locals_):
+            prev[i] = w
 
 
-class RingOptimization(_Base):
-    """Paper §III-B standalone baseline: ONE global ring over all sampled
-    devices, R laps per round; no cloud aggregation inside the ring."""
-
-    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
-        ids = self._sample(rng)
-        ring_ids = list(ids)
-        if self.fl.reshuffle_ring:
-            rng.shuffle(ring_ids)
-        meter.record("cloud_down")                      # seed the first device
-        if self.batched:
-            w = self._run_rings_batched(w_glob, [ring_ids], lr, rng, meter)[0]
-        else:
-            w = ring_optimization(
-                self.trainer, w_glob, [self.clients[i] for i in ring_ids],
-                lr=lr, laps=self.fl.ring_rounds,
-                local_epochs=self.fl.local_epochs, rng=rng, meter=meter,
-            )
-        meter.record("cloud_up")                        # readout
-        return w, state
-
-
-class FedSR(_Base):
-    """Algorithm 1 — semi-decentralized star-ring.
-
-    Each edge server rings its sampled devices (clusters of
-    ``devices_per_edge``; with partial participation, clusters of the same
-    size are formed from the sampled pool, Table IV style), runs
-    ring-optimization for R laps, and the cloud aggregates the M edge models
-    weighted by |D_m|/|D| (eq. 11)."""
-
-    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
-        if self.fl.participation >= 1.0:
-            rings = [
-                sample_ring(e, rng, reshuffle=self.fl.reshuffle_ring)
-                for e in self.edges
-            ]
-        else:
-            ids = self._sample(rng)
-            rings = clusters_of(ids, self.fl.devices_per_edge, rng)
-        if self.batched:
-            meter.record("cloud_down", len(rings))      # w_glob -> edges
-            edge_models = self._run_rings_batched(w_glob, rings, lr, rng, meter)
-            meter.record("cloud_up", len(rings))        # edge models -> cloud
-            sizes = [sum(len(self.clients[i]) for i in r) for r in rings]
-            total = float(sum(sizes))
-            return tree_weighted_sum(
-                edge_models, [s / total for s in sizes]), state
-        edge_models, sizes = [], []
-        for ring_ids in rings:
-            meter.record("cloud_down")                  # w_glob -> edge
-            w = ring_optimization(
-                self.trainer, w_glob, [self.clients[i] for i in ring_ids],
-                lr=lr, laps=self.fl.ring_rounds,
-                local_epochs=self.fl.local_epochs, rng=rng, meter=meter,
-            )
-            meter.record("cloud_up")                    # edge model -> cloud
-            edge_models.append(w)
-            sizes.append(sum(len(self.clients[i]) for i in ring_ids))
-        total = float(sum(sizes))
-        return tree_weighted_sum(edge_models, [s / total for s in sizes]), state
-
-
-class Scaffold(_Base):
+class Scaffold(_Planner):
     """Karimireddy et al. 2020 — stochastic controlled averaging. The paper
     cites SCAFFOLD [11] as the canonical variance-reduction answer to client
     drift; included as an extra baseline beyond the paper's own table.
@@ -427,50 +176,40 @@ class Scaffold(_Base):
     state["c"] = server control variate; state["ci"][i] = client i's.
     Option II update for c_i: c_i+ = c_i - c + (w_glob - w_i)/(K_i * lr).
     """
+    variant = "scaffold"
+    keep_locals = True
 
-    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
-        from repro.utils.tree import tree_sub, tree_zeros_like
-
-        c = state.setdefault("c", tree_zeros_like(w_glob))
-        ci_map = state.setdefault("ci", {})
+    def plan_round(self, t, rng, state):
         ids = self._sample(rng)
-        weights = self._weights(ids)
-        cis = [ci_map.get(i, tree_zeros_like(w_glob)) for i in ids]
-        if self.batched:
-            padded = self._pad_cohort(len(ids))
-            plans = [plan_epoch_indices(self.clients[i], self.fl.batch_size,
-                                        self.fl.local_epochs, rng)
-                     for i in ids]
-            meter.record("cloud_down", 2 * len(ids))    # model + c
-            out = self._train_cohort(
-                w_glob, ids, plans, lr=lr, broadcast=True,
-                variant="scaffold",
-                c_glob=c,                   # cohort-shared, broadcast in-jit
-                c_local=tree_stack(cis + [c] * (padded - len(ids))))
-            meter.record("cloud_up", 2 * len(ids))      # model + delta c
-            out = tree_prefix(out, len(ids))            # drop ghost rows
-            new_w = tree_weighted_sum_stacked(out, weights)
-            locals_ = tree_unstack(out, len(ids))
-            steps = [max(int(s), 1)
-                     for s in self.trainer.last_steps_many[:len(ids)]]
-        else:
-            locals_, steps = [], []
-            for i, ci in zip(ids, cis):
-                meter.record("cloud_down", 2)           # model + c
-                locals_.append(self.trainer.train(
-                    w_glob, self.clients[i], lr=lr,
-                    epochs=self.fl.local_epochs, rng=rng, variant="scaffold",
-                    c_glob=c, c_local=ci,
-                ))
-                steps.append(max(self.trainer.last_steps, 1))
-                meter.record("cloud_up", 2)             # model + delta c
-            new_w = tree_weighted_sum(locals_, weights.tolist())
+        plans = tuple(self._batch_plan(i, rng) for i in ids)
+        c = state.get("c", ZEROS)
+        ci_map = state.get("ci", {})
+        group = VisitGroup(
+            hops=(Hop(tuple(ids), plans),), variant="scaffold",
+            shared_extras={"c_glob": c},
+            stacked_extras={"c_local": tuple(ci_map.get(i, ZEROS)
+                                             for i in ids)},
+            agg=AggSpec.flat(self._weights(ids)), keep_locals=True)
+        n = 2 * len(ids)                    # model + control variate
+        return RoundPlan(groups=(group,),
+                         comm=(("cloud_down", n), ("cloud_up", n)))
+
+    def update_state(self, plan, w_before, result, lr, state):
+        from repro.utils.tree import (
+            tree_sub, tree_weighted_sum, tree_zeros_like,
+        )
+
+        c = state.setdefault("c", tree_zeros_like(w_before))
+        ci_map = state.setdefault("ci", {})
+        ids = plan.groups[0].hops[0].ids
+        steps = plan.groups[0].lane_steps()
         delta_cs = []
-        for i, ci, w, k in zip(ids, cis, locals_, steps):
+        for lane, i in enumerate(ids):
+            ci = ci_map.get(i, tree_zeros_like(w_before))
+            k = float(max(steps[lane], 1))
             ci_new = jax.tree.map(
-                lambda cio, co, wg, wi, k=float(k):
-                    cio - co + (wg - wi) / (k * lr),
-                ci, c, w_glob, w,
+                lambda cio, co, wg, wi, k=k: cio - co + (wg - wi) / (k * lr),
+                ci, c, w_before, result.locals_[lane],
             )
             delta_cs.append(tree_sub(ci_new, ci))
             ci_map[i] = ci_new
@@ -479,11 +218,108 @@ class Scaffold(_Base):
             delta_cs, [1.0 / len(delta_cs)] * len(delta_cs))
         frac = len(ids) / self.fl.num_devices
         state["c"] = jax.tree.map(lambda a, b: a + frac * b, c, mean_dc)
-        return new_w, state
 
 
-class Centralized(_Base):
-    """Upper-bound reference: pooled-data SGD (paper's 'Centralized' rows)."""
+class HierFAVG(_Planner):
+    """Liu et al. 2020 — hierarchical FedAvg: R edge-level FedAvg iterations
+    per cloud round (matched compute budget with FedSR: same R). Planned as
+    R chained visit groups — iteration r's lanes are the (edge, device)
+    pairs, seeded from iteration r-1's per-edge aggregates; only the final
+    group collapses edge models into the cloud model."""
+
+    def plan_round(self, t, rng, state):
+        fl = self.fl
+        edge_ids, plans = [], {}
+        for e, edge_devices in enumerate(self.edges):
+            ids = sample_ring(edge_devices, rng,
+                              participation=fl.participation, reshuffle=False)
+            edge_ids.append(ids)
+            for r in range(fl.ring_rounds):
+                for i in ids:
+                    plans[e, r, i] = self._batch_plan(i, rng)
+        pairs = [(e, i) for e, ids in enumerate(edge_ids) for i in ids]
+        lane_w, agg_groups, off = [], [], 0
+        for ids in edge_ids:
+            lane_w += self._weights(ids).tolist()
+            agg_groups.append(tuple(range(off, off + len(ids))))
+            off += len(ids)
+        sizes = [sum(len(self.clients[i]) for i in ids) for ids in edge_ids]
+        total = float(sum(sizes))
+        groups = tuple(
+            VisitGroup(
+                hops=(Hop(tuple(i for _, i in pairs),
+                          tuple(plans[e, r, i] for e, i in pairs)),),
+                seed=None if r == 0 else tuple(e for e, _ in pairs),
+                agg=AggSpec(
+                    groups=tuple(agg_groups), lane_weights=tuple(lane_w),
+                    group_weights=(tuple(s / total for s in sizes)
+                                   if r == fl.ring_rounds - 1 else None)))
+            for r in range(fl.ring_rounds)
+        )
+        comm = []
+        for ids in edge_ids:
+            comm += [("cloud_down", 1),
+                     ("edge_down", fl.ring_rounds * len(ids)),
+                     ("edge_up", fl.ring_rounds * len(ids)),
+                     ("cloud_up", 1)]
+        return RoundPlan(groups=groups, comm=tuple(comm))
+
+
+class RingOptimization(_Planner):
+    """Paper §III-B standalone baseline: ONE global ring over all sampled
+    devices, R laps per round; no cloud aggregation inside the ring."""
+
+    def plan_round(self, t, rng, state):
+        fl = self.fl
+        ring = self._sample(rng)
+        if fl.reshuffle_ring:
+            rng.shuffle(ring)
+        comm = (("cloud_down", 1),          # seed the first device
+                ("p2p", ring_lap_hops(len(ring), fl.ring_rounds)),
+                ("cloud_up", 1))            # readout
+        groups = ()
+        if fl.ring_rounds > 0:
+            groups = (VisitGroup(hops=self._ring_hops([ring], rng),
+                                 agg=AggSpec.flat([1.0])),)
+        return RoundPlan(groups=groups, comm=comm)
+
+
+class FedSR(_Planner):
+    """Algorithm 1 — semi-decentralized star-ring.
+
+    Each edge server rings its sampled devices (clusters of
+    ``devices_per_edge``; with partial participation, clusters of the same
+    size are formed from the sampled pool, Table IV style), runs
+    ring-optimization for R laps, and the cloud aggregates the M edge models
+    weighted by |D_m|/|D| (eq. 11). Planned as ONE visit group whose lanes
+    are the rings — under the fused engine the whole round (broadcast,
+    H-hop lap scan, weighted cloud reduce) is a single compiled dispatch."""
+
+    def plan_round(self, t, rng, state):
+        fl = self.fl
+        if fl.participation >= 1.0:
+            rings = [sample_ring(e, rng, reshuffle=fl.reshuffle_ring)
+                     for e in self.edges]
+        else:
+            rings = clusters_of(self._sample(rng), fl.devices_per_edge, rng)
+        sizes = [sum(len(self.clients[i]) for i in r) for r in rings]
+        total = float(sum(sizes))
+        comm = (("cloud_down", len(rings)),  # w_glob -> edges
+                ("p2p", sum(ring_lap_hops(len(r), fl.ring_rounds)
+                            for r in rings)),
+                ("cloud_up", len(rings)))    # edge models -> cloud
+        groups = ()
+        if fl.ring_rounds > 0:
+            groups = (VisitGroup(
+                hops=self._ring_hops(rings, rng),
+                agg=AggSpec.flat([s / total for s in sizes])),)
+        return RoundPlan(groups=groups, comm=comm)
+
+
+class Centralized(_Planner):
+    """Upper-bound reference: pooled-data SGD (paper's 'Centralized' rows).
+    No schedule to plan — one visit of the pooled shard, no communication —
+    so it bypasses the IR and trains directly."""
 
     def __init__(self, trainer, clients, fl):
         super().__init__(trainer, clients, fl)
@@ -491,7 +327,7 @@ class Centralized(_Base):
         labels = np.concatenate([c.labels for c in clients])
         self.pool = ClientData(-1, images, labels)
 
-    def run_round(self, w_glob, t, lr, rng, meter: CommMeter, state):
+    def run_round(self, w_glob, t, lr, rng, meter, state):
         w = self.trainer.train(w_glob, self.pool, lr=lr,
                                epochs=self.fl.local_epochs, rng=rng)
         return w, state

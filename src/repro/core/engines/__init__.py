@@ -1,0 +1,50 @@
+"""Execution engines: interpreters of the RoundPlan IR (``core.plan``).
+
+Algorithms plan; engines execute. Every engine consumes the identical
+declarative plan — visit groups of pre-drawn batch plans, an aggregation
+spec, closed-form comm records — so switching engines can change *how* a
+round runs (python loop, one vmap-compiled stack, a device mesh, a single
+fused dispatch) but never *what* it computes: RNG streams are drawn
+entirely by the planners, outputs match to float tolerance, and meters are
+applied from the plan, not the execution path.
+
+* ``sequential`` — the reference python loop, one ``LocalTrainer.train``
+  call per client visit.
+* ``batched`` — every set of concurrent visits (a star cohort; hop j of
+  all rings in lockstep) is one ``LocalTrainer.train_many`` call over
+  padded, mask-validated batch stacks; the final visit of a group folds
+  the weighted aggregation into its own dispatch (``agg=``).
+* ``sharded`` — the batched engine with the stacked ``(C, ...)`` client
+  axis placed on a device-mesh "data" axis (``launch.mesh.make_sim_mesh``),
+  cohorts ghost-padded to mesh-size multiples; ghost lanes never train,
+  never draw RNG, and carry aggregation weight 0.
+* ``fused`` — the batched schedule against a device-resident data plane
+  (``DeviceDataPlane``): shards upload once per experiment, per-round H2D
+  is int32 index plans, and a whole visit group — broadcast, H-hop ring
+  scan, weighted cloud reduce — compiles to ONE dispatch
+  (``train_many_fused``). ``FLConfig.mesh_data_axis`` composes.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import FLConfig
+from repro.core.engines.batched import BatchedEngine
+from repro.core.engines.fused import FusedEngine
+from repro.core.engines.sequential import SequentialEngine
+
+ENGINES = {
+    "sequential": SequentialEngine,
+    "batched": BatchedEngine,
+    "sharded": BatchedEngine,       # = batched + mesh (see BatchedEngine)
+    "fused": FusedEngine,
+}
+
+
+def make_engine(trainer, clients: List, fl: FLConfig):
+    """Build the plan interpreter selected by ``FLConfig.engine``."""
+    if fl.engine not in ENGINES:
+        raise ValueError(
+            f"unknown FLConfig.engine {fl.engine!r}; "
+            "expected 'sequential', 'batched', 'sharded' or 'fused'")
+    return ENGINES[fl.engine](trainer, clients, fl)

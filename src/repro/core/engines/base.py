@@ -1,0 +1,63 @@
+"""Shared engine plumbing: GLOBAL resolution, group output unpacking."""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+from repro.configs.base import FLConfig
+from repro.core.plan import GLOBAL, ZEROS, RoundPlan, RoundResult, VisitGroup
+
+Pytree = Any
+
+
+class Engine:
+    """Base plan interpreter: subclasses implement ``_run_group``.
+
+    ``run`` walks the plan's visit groups, threading each group's
+    aggregate into the next (HierFAVG's edge iterations) and collecting
+    the final group's collapsed aggregate as the round output. Engines
+    never touch the comm meter (the driver applies ``plan.comm``) and
+    never draw from the RNG stream (planners pre-draw every batch plan).
+    """
+
+    def __init__(self, trainer, clients: List, fl: FLConfig):
+        self.trainer = trainer
+        self.clients = clients
+        self.fl = fl
+        self.data_axis = fl.mesh_data_axis or "data"
+        self.mesh = None
+
+    @staticmethod
+    def _resolve(value, w_glob: Pytree) -> Pytree:
+        if value is GLOBAL:
+            return w_glob
+        if value is ZEROS:
+            from repro.utils.tree import tree_zeros_like
+            return tree_zeros_like(w_glob)
+        return value
+
+    def run(self, plan: RoundPlan, w_glob: Pytree, lr: float) -> RoundResult:
+        result = RoundResult(w_glob)
+        prev = None     # previous group's (G, ...) aggregate(s)
+        for grp in plan.groups:
+            agg_out, locals_ = self._run_group(grp, w_glob, prev, lr)
+            prev = agg_out if agg_out is not None else locals_
+            if grp.agg is not None and grp.agg.collapsed:
+                result.w_glob = agg_out
+            if grp.keep_locals:
+                result.locals_ = self._unstack_locals(locals_, grp.lanes)
+        return result
+
+    def _run_group(self, grp: VisitGroup, w_glob: Pytree, prev, lr
+                   ) -> Tuple[Optional[Pytree], Optional[Pytree]]:
+        """Execute one visit group; returns ``(aggregate, locals)`` —
+        either may be None depending on the group's agg/keep_locals."""
+        raise NotImplementedError
+
+    @staticmethod
+    def _unstack_locals(locals_, lanes: int) -> Optional[List[Pytree]]:
+        """Per-lane trained models as a list (engine-native ``locals_`` is
+        a list for the sequential engine, a (C, ...) stack otherwise)."""
+        if locals_ is None or isinstance(locals_, list):
+            return locals_
+        from repro.utils.tree import tree_prefix, tree_unstack
+        return tree_unstack(tree_prefix(locals_, lanes), lanes)

@@ -1,0 +1,108 @@
+"""Batched (and sharded) engine: concurrent visits as one compiled call.
+
+Each hop of a visit group — a whole star cohort, or position j of every
+ring in lockstep — runs as ONE ``LocalTrainer.train_many`` dispatch over
+the lane-stacked model trees, with padded batch stacks and a (C, S)
+valid-step mask. The group's final dispatch folds the aggregation spec in
+(``agg=``), so the weighted cloud reduce (eq. 11) happens on device inside
+the compiled call — no host-side unstack/restack of C model trees.
+
+``engine="sharded"`` is this engine with the stacked (C, ...) client axis
+placed on a sim-mesh "data" axis (``NamedSharding``); cohorts/rings are
+ghost-padded to the next mesh-size multiple (all-invalid zero-data lanes
+that never train, never draw RNG, and carry aggregation weight 0).
+``FLConfig.mesh_data_axis`` opts the plain batched/fused engines into the
+same placement.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.engines.base import Engine
+from repro.core.plan import Hop, VisitGroup
+from repro.data.pipeline import stack_plans
+from repro.utils.tree import tree_broadcast, tree_stack
+
+Pytree = object
+
+
+class BatchedEngine(Engine):
+
+    def __init__(self, trainer, clients: List, fl: FLConfig):
+        super().__init__(trainer, clients, fl)
+        if fl.engine == "sharded" or fl.mesh_data_axis:
+            from repro.launch.mesh import make_sim_mesh
+            self.mesh = make_sim_mesh(fl.num_devices, axis=self.data_axis)
+
+    # -- shared lane plumbing -------------------------------------------
+    def _pad(self, c: int) -> int:
+        """Round a lane count up to the next mesh-size multiple (ghost-
+        client padding of the sharded engine); identity when unsharded."""
+        if self.mesh is None:
+            return c
+        from repro.launch.mesh import round_up_to_mesh
+        return round_up_to_mesh(c, self.mesh, self.data_axis)
+
+    def _extras_kwargs(self, grp: VisitGroup, w_glob, padded: int) -> dict:
+        """Resolve the plan's extras for ``train_many``: shared trees stay
+        single (broadcast inside the jit), per-lane lists stack along the
+        client axis, ghost lanes padded with the global model (they never
+        train, so any well-shaped tree serves)."""
+        kw = {k: self._resolve(v, w_glob)
+              for k, v in grp.shared_extras.items()}
+        for k, vals in grp.stacked_extras.items():
+            lanes = [self._resolve(v, w_glob) for v in vals]
+            kw[k] = tree_stack(lanes + [w_glob] * (padded - len(lanes)))
+        return kw
+
+    def _seed_stack(self, prev, seed, padded: int) -> Pytree:
+        """Gather each lane's seed row from the previous group's (G, ...)
+        aggregate stack — ghost lanes reuse row 0 (weight-0, never train)."""
+        idx = np.asarray(list(seed) + [0] * (padded - len(seed)))
+        return jax.tree.map(lambda x: x[idx], prev)
+
+    @staticmethod
+    def _unpack(out, has_agg: bool, keep: bool):
+        """Normalize a train_many(_fused) return to (aggregate, locals)."""
+        if not has_agg:
+            return None, out
+        if keep:
+            return out
+        return out, None
+
+    # -- plan interpretation --------------------------------------------
+    def _run_group(self, grp: VisitGroup, w_glob, prev, lr):
+        padded = self._pad(grp.lanes)
+        kw = dict(lr=lr, variant=grp.variant, mesh=self.mesh,
+                  data_axis=self.data_axis,
+                  **self._extras_kwargs(grp, w_glob, padded))
+        aggm = grp.agg.matrix(padded) if grp.agg is not None else None
+        keep = grp.keep_locals
+        hops = grp.hops
+        if grp.seed is None and len(hops) == 1:
+            # star cohort: the global model broadcasts inside the jit
+            out = self._train_hop(hops[0], padded, w_glob, broadcast=True,
+                                  agg=aggm, keep_locals=keep, **kw)
+        else:
+            # ring lap sequence / seeded edge iteration: carry the lane
+            # stack hop to hop; the LAST hop's dispatch absorbs the reduce
+            models = (tree_broadcast(w_glob, padded) if grp.seed is None
+                      else self._seed_stack(prev, grp.seed, padded))
+            for j, hop in enumerate(hops):
+                last = j == len(hops) - 1
+                out = self._train_hop(hop, padded, models, broadcast=False,
+                                      agg=aggm if last else None,
+                                      keep_locals=keep and last, **kw)
+                if not last:
+                    models = out
+        return self._unpack(out, aggm is not None, keep)
+
+    def _train_hop(self, hop: Hop, padded: int, params, **kw):
+        batches, valid = stack_plans(
+            [self.clients[i] for i in hop.ids], list(hop.plans),
+            pad_to=padded)
+        return self.trainer.train_many(params, batches, valid, **kw)

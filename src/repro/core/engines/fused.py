@@ -1,0 +1,63 @@
+"""Fused engine: a whole visit group as ONE compiled dispatch.
+
+The batched schedule against a device-resident data plane
+(``DeviceDataPlane``): client shards upload once per experiment, a visit
+group's hops stack along a leading (H, C, S, B) axis of int32 index plans
+(``stack_plan_indices``) — the entire per-round H2D payload — and
+``LocalTrainer.train_many_fused`` runs broadcast -> H-hop ring scan ->
+in-jit weighted reduce as a single compiled call. A FedSR round (M rings,
+R laps, cloud aggregation, eq. 11) is therefore literally one dispatch;
+star cohorts are the H=1 special case. ``FLConfig.mesh_data_axis``
+composes: the plane's flat sample axis and the lane axis both shard over
+the sim mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engines.batched import BatchedEngine
+from repro.core.plan import VisitGroup
+from repro.data.pipeline import DeviceDataPlane, stack_plan_indices
+
+
+class FusedEngine(BatchedEngine):
+
+    def __init__(self, trainer, clients, fl):
+        super().__init__(trainer, clients, fl)
+        self._plane = None
+
+    @property
+    def plane(self) -> DeviceDataPlane:
+        """Device-resident fleet stack, built on the first visit so ONE
+        upload serves every round of the experiment."""
+        if self._plane is None:
+            self._plane = DeviceDataPlane(
+                self.clients, mesh=self.mesh, data_axis=self.data_axis)
+        return self._plane
+
+    def _run_group(self, grp: VisitGroup, w_glob, prev, lr):
+        padded = self._pad(grp.lanes)
+        kw = dict(lr=lr, variant=grp.variant, mesh=self.mesh,
+                  data_axis=self.data_axis,
+                  **self._extras_kwargs(grp, w_glob, padded))
+        aggm = grp.agg.matrix(padded) if grp.agg is not None else None
+        keep = grp.keep_locals
+        # every hop pads to the group-global max step count S so the hop
+        # axis stacks uniformly (H, C, S, B)
+        S = max(p.shape[0] for hop in grp.hops for p in hop.plans
+                if p is not None)
+        rows, idx, valid = zip(*(
+            stack_plan_indices(list(hop.plans), list(hop.ids),
+                               pad_to=padded, steps=S)
+            for hop in grp.hops))
+        if grp.seed is None:
+            params, broadcast = w_glob, True
+        else:
+            # seeded edge iteration (HierFAVG): a FRESH gathered stack per
+            # group — train_many_fused donates the non-broadcast params
+            params, broadcast = self._seed_stack(prev, grp.seed, padded), False
+        out = self.trainer.train_many_fused(
+            params, self.plane, np.stack(rows), np.stack(idx),
+            np.stack(valid), broadcast=broadcast, agg=aggm,
+            keep_locals=keep, **kw)
+        return self._unpack(out, aggm is not None, keep)

@@ -1,0 +1,46 @@
+"""The reference engine: a python loop of single-client jitted steps.
+
+Interprets a RoundPlan literally — every lane of every group is an
+independent chain of ``LocalTrainer.train`` calls over the pre-drawn batch
+plans, aggregated host-side with ``tree_weighted_sum`` (the paper-faithful
+semantics every other engine must reproduce). Lanes are independent given
+their plans, so training lane-by-lane is exactly Algorithm 1's
+device-by-device schedule; the RNG stream was already consumed by the
+planner, in this same visit order.
+"""
+from __future__ import annotations
+
+from repro.core.engines.base import Engine
+from repro.utils.tree import tree_weighted_sum
+
+
+class SequentialEngine(Engine):
+
+    def _run_group(self, grp, w_glob, prev, lr):
+        shared = {k: self._resolve(v, w_glob)
+                  for k, v in grp.shared_extras.items()}
+        lane_out = []
+        for c in range(grp.lanes):
+            kw = dict(shared)
+            for k, vals in grp.stacked_extras.items():
+                kw[k] = self._resolve(vals[c], w_glob)
+            w = w_glob if grp.seed is None else prev[grp.seed[c]]
+            for hop in grp.hops:
+                if hop.plans[c] is None:        # ring-tail: carried unchanged
+                    continue
+                w = self.trainer.train(
+                    w, self.clients[hop.ids[c]], lr=lr, plan=hop.plans[c],
+                    variant=grp.variant, **kw)
+            lane_out.append(w)
+        if grp.agg is None:
+            return None, lane_out
+        agg = grp.agg
+        group_models = [
+            tree_weighted_sum([lane_out[la] for la in lanes],
+                              [agg.lane_weights[la] for la in lanes])
+            for lanes in agg.groups
+        ]
+        if agg.collapsed:
+            return (tree_weighted_sum(group_models,
+                                      list(agg.group_weights)), lane_out)
+        return group_models, lane_out

@@ -1,7 +1,11 @@
 """FL experiment executor: dataset -> partition -> T rounds -> history.
 
 This is the engine behind every paper table (benchmarks/) and the FL
-integration tests.
+integration tests. ``w_glob`` stays device-resident for the whole run:
+planners reference it only through the GLOBAL sentinel and the engines
+aggregate in-jit (see ``core.plan``), so rounds chain device array ->
+device array with no host unstack/restack; the host only sees it at
+checkpoint time (``jax.device_get`` inside ``checkpoint.io.save``).
 """
 from __future__ import annotations
 
@@ -41,6 +45,9 @@ class ExperimentResult:
     task: str
     partition: str
     history: List[RoundRecord]
+    final_model: Optional[Pytree] = None    # the run's last w_glob (device-
+                                            # resident; exact-resume tests
+                                            # compare it tree-for-tree)
 
     @property
     def final_accuracy(self) -> float:
@@ -101,6 +108,10 @@ def run_experiment(
             # pre-checkpoint history rides along so rounds_to_accuracy /
             # comm_to_accuracy see the full run, not just the resumed tail
             history = [RoundRecord(**h) for h in ck.get("history", [])]
+            # algorithm memory (MOON's prev locals, SCAFFOLD's control
+            # variates) resumes too — dropping it silently resets those
+            # algorithms to round-0 behaviour mid-run
+            state = ck.get("state") or {}
 
     test_images = jnp.asarray(test.images)
     test_labels = jnp.asarray(test.labels)
@@ -121,20 +132,41 @@ def run_experiment(
                       f"transfers={meter.total_transfers}")
         if checkpoint_dir and checkpoint_every and (t + 1) % checkpoint_every == 0:
             _save_checkpoint(checkpoint_dir, w_glob, t + 1, rng, meter,
-                             history)
+                             history, state)
         if stop_after is not None and (t + 1) >= stop_after:
             break
-    return ExperimentResult(fl.algorithm, task, fl.partition, history)
+    return ExperimentResult(fl.algorithm, task, fl.partition, history,
+                            final_model=w_glob)
 
 
 # ---------------------------------------------------------------------------
 # checkpoint / resume (exact: model + round + numpy RNG + comm counters +
-# eval history — dropping history would silently change rounds_to_accuracy /
-# comm_to_accuracy answers on a resumed run)
+# eval history + algorithm state — dropping history would silently change
+# rounds_to_accuracy / comm_to_accuracy answers on a resumed run, and
+# dropping state would silently reset MOON's prev locals and SCAFFOLD's
+# control variates)
+
+
+def _pack_state(state):
+    """Algorithm state as a msgpack-able tree: client-id dict keys (ints)
+    become tagged strings so ``checkpoint.io`` round-trips them exactly."""
+    if isinstance(state, dict):
+        return {(f"i:{k}" if isinstance(k, int) else str(k)): _pack_state(v)
+                for k, v in state.items()}
+    return state
+
+
+def _unpack_state(obj):
+    """Inverse of ``_pack_state`` over a restored tree."""
+    if isinstance(obj, dict):
+        return {(int(k[2:]) if isinstance(k, str) and k.startswith("i:")
+                 else k): _unpack_state(v)
+                for k, v in obj.items()}
+    return obj
 
 
 def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter,
-                     history: List[RoundRecord] = ()):
+                     history: List[RoundRecord] = (), state: Dict = None):
     import json as _json
     import os as _os
 
@@ -142,6 +174,7 @@ def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter,
 
     _os.makedirs(ckdir, exist_ok=True)
     _save(f"{ckdir}/model.msgpack", w_glob)
+    _save(f"{ckdir}/algo_state.msgpack", _pack_state(state or {}))
     comm = {f: int(getattr(meter, f)) for f in
             ("model_bytes", "cloud_up", "cloud_down", "edge_up",
              "edge_down", "p2p")}
@@ -161,4 +194,8 @@ def _restore_checkpoint(ckdir: str):
         return None
     with open(f"{ckdir}/state.json") as f:
         meta = _json.load(f)
-    return {"w_glob": _restore(f"{ckdir}/model.msgpack"), **meta}
+    out = {"w_glob": _restore(f"{ckdir}/model.msgpack"), **meta}
+    # absent in pre-PR-4 checkpoints: those resume with empty state
+    if _os.path.exists(f"{ckdir}/algo_state.msgpack"):
+        out["state"] = _unpack_state(_restore(f"{ckdir}/algo_state.msgpack"))
+    return out

@@ -6,12 +6,15 @@ reuse these, so accuracy differences between algorithms come from the
 is reset at the start of each client visit (the model hops between devices;
 optimizer state does not travel with it).
 
-Two execution engines share the same losses and update rule:
+The execution engines (``core.engines``) share the same losses and update
+rule through three entry points:
 
-* sequential — ``train``: a python loop over single-client jitted steps (the
-  reference semantics, one dispatch per batch).
-* batched — ``train_many``: every concurrent client visit of a round runs at
-  once. Model/momentum pytrees are stacked along a leading client axis, the
+* ``train`` — a python loop over single-client jitted steps (the reference
+  semantics, one dispatch per batch). Consumes a pre-drawn batch plan or
+  draws one itself; per-step host->device batch bytes are metered into
+  ``h2d_bytes`` so all four engines compare on one axis.
+* ``train_many`` — every concurrent client visit of a round runs at once.
+  Model/momentum pytrees are stacked along a leading client axis, the
   per-client gradient is ``jax.vmap``-ed, and a ``jax.lax.scan`` walks the
   padded step axis; a (C, S) valid mask turns padded steps into no-ops for
   the clients that ran out of data, so uneven shard sizes batch cleanly.
@@ -19,14 +22,11 @@ Two execution engines share the same losses and update rule:
   server control variate) are passed as ONE tree and broadcast inside the
   jit (``vmap in_axes=None`` / elementwise broadcasting) — the host never
   materializes C copies; per-client extras (MOON's previous locals,
-  SCAFFOLD's client variates) stay client-stacked.
-* sharded — ``train_many(..., mesh=...)``: the batched engine with the
-  leading C axis of every stacked input placed on a ``jax.sharding.Mesh``
-  data axis via ``NamedSharding``; cohort-shared trees are replicated.
-  Clients are embarrassingly parallel between hops, so XLA partitions the
-  whole scan along C with zero collectives. Callers must pad C to a
-  multiple of the mesh axis (ghost clients — see ``stack_plans(pad_to)``).
-* fused — ``train_many_fused``: the batched math against a device-resident
+  SCAFFOLD's client variates) stay client-stacked. With ``mesh``, every
+  C-stacked input is placed on a ``jax.sharding.Mesh`` data axis via
+  ``NamedSharding`` (the sharded engine); C must be a multiple of the mesh
+  axis (callers ghost-pad).
+* ``train_many_fused`` — the batched math against a device-resident
   ``DeviceDataPlane``. Per call, only int32 plan arrays cross H2D; the
   scan body gathers each step's batch from the resident fleet stack with
   ``jnp.take``. A leading hop axis H runs as an OUTER ``lax.scan``
@@ -34,8 +34,19 @@ Two execution engines share the same losses and update rule:
   ONE compiled dispatch; the non-broadcast family donates the params stack
   to the computation (in-place update on accelerator backends).
 
-The update rule itself is elementwise, so one implementation serves both
-engines — and can optionally run as a single fused Pallas pass over the
+**In-jit aggregation** (``agg=``): both stacked entry points accept the
+reduction array of an ``AggSpec`` (see ``core.plan``) and contract it
+against the trained lane stack *inside the same compiled call* — a (C,)
+vector collapses the round to ONE aggregated model, a (G, C) matrix
+reduces lanes to their per-edge group models. The round's weighted cloud
+reduce (eq. 11) therefore never bounces C model trees through the host,
+and the fused FedSR round — broadcast, H-hop ring scan, weighted cloud
+reduce — is a single dispatch (``dispatches`` counts them).
+``keep_locals=True`` additionally returns the per-lane trained stack
+(MOON/SCAFFOLD state updates read it).
+
+The update rule itself is elementwise, so one implementation serves every
+engine — and can optionally run as a single fused Pallas pass over the
 raveled parameter vector (``FLConfig.use_fused_sgd``).
 """
 from __future__ import annotations
@@ -49,6 +60,7 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import FLConfig, ModelConfig
+from repro.data.pipeline import plan_epoch_indices
 from repro.models.small import classifier_loss, small_model_features
 from repro.utils.tree import tree_sq_norm, tree_sub
 
@@ -72,6 +84,15 @@ def _donation_supported() -> bool:
     """Buffer donation is a no-op (with a warning) on the CPU backend; only
     request it where XLA can actually alias the update in place."""
     return jax.default_backend() != "cpu"
+
+
+def _tree_agg(stack, w):
+    """Contract the reduction array against a (C, ...) lane stack: a (C,)
+    vector yields the single aggregated tree, a (G, C) matrix the (G, ...)
+    per-group stack — ONE tensordot per leaf, inside the jit."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=[[-1], [0]]),
+        stack)
 
 
 class LocalTrainer:
@@ -185,19 +206,22 @@ class LocalTrainer:
                 lambda p, d: p - (_expand_mask(ok, p) * lr) * d, params, corr)
             return params, m
 
-        def make_many(loss_fn, update, extra_axes, broadcast_params):
+        def make_many(loss_fn, update, extra_axes, broadcast_params, mode):
             # extra_axes: one vmap axis per loss extra — 0 for client-stacked
             # trees, None for cohort-shared trees broadcast inside the jit.
+            # mode selects the return contract (see _get_many).
             n_loss_extras = len(extra_axes)
             vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + extra_axes)
 
             @jax.jit
-            def many(params, batches, valid, lr, *extras):
+            def many(params, batches, valid, lr, *rest):
                 # params: (C, ...) pytree — or one client's tree when
                 # broadcast_params (stacked inside the jit, so the host never
                 # materializes C copies); batches: (C, S, B, ...); valid:
                 # (C, S) bool — False steps leave that client's params and
                 # momentum untouched.
+                aggm, extras = ((None, rest) if mode == "stack"
+                                else (rest[0], rest[1:]))
                 if broadcast_params:
                     C = valid.shape[0]
                     params = jax.tree.map(
@@ -215,7 +239,10 @@ class LocalTrainer:
                                   ok), None
 
                 (p, _), _ = jax.lax.scan(body, (params, m), xs)
-                return p
+                if mode == "stack":
+                    return p
+                red = _tree_agg(p, aggm)
+                return red if mode == "agg" else (red, p)
             return many
 
         # The vmap in_axes of each loss extra derive from the ONE
@@ -223,36 +250,33 @@ class LocalTrainer:
         # cohort-shared -> None (broadcast inside the jit). SCAFFOLD's
         # extras feed the update, not the vmapped loss (n_loss_extras=0):
         # c_glob unstacked broadcasts in tree.map, c_local stays stacked.
-        many_spec = {
+        self._many_spec = {
             "plain": (plain_loss, masked_momentum_update, 0),
             "prox": (prox_loss, masked_momentum_update, 1),
             "moon": (moon_loss, masked_momentum_update, 2),
             "scaffold": (plain_loss, masked_scaffold_update, 0),
         }
-        self._many, self._many_bc = ({
-            v: make_many(
-                loss, upd,
-                tuple(0 if stacked else None
-                      for stacked in self._EXTRA_STACKED[v][:n_loss]), bc)
-            for v, (loss, upd, n_loss) in many_spec.items()
-        } for bc in (False, True))
+        self._make_many = make_many
 
         # -- fused engine: the batched scan, but batches are GATHERED inside
         #    the jit from the device-resident fleet stack (index-only H2D)
         #    and an outer scan walks a hop axis carrying the model stack —
         #    a whole ring lap sequence compiles to one dispatch.
-        def make_many_fused(loss_fn, update, extra_axes, broadcast_params):
+        def make_many_fused(loss_fn, update, extra_axes, broadcast_params,
+                            mode):
             n_loss_extras = len(extra_axes)
             vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + extra_axes)
 
             def many_hops(params, images, labels, offsets, rows, plans,
-                          valid, lr, *extras):
+                          valid, lr, *rest):
                 # images/labels: flat (total, ...) resident fleet stacks,
                 # offsets: (K,) first flat row of each client; rows: (H, C)
                 # int32 fleet row of each cohort/ring slot per hop; plans:
                 # (H, C, S, B) int32 sample indices; valid: (H, C, S).
                 # Extras are hop-invariant (rings train variant="plain";
                 # star cohorts call with H=1).
+                aggm, extras = ((None, rest) if mode == "stack"
+                                else (rest[0], rest[1:]))
                 if broadcast_params:
                     C = valid.shape[1]
                     params = jax.tree.map(
@@ -292,23 +316,47 @@ class LocalTrainer:
 
                 (p, _), _ = jax.lax.scan(
                     body, (params, m), (flat_rows, flat_ix, flat_ok, reset))
-                return p
+                if mode == "stack":
+                    return p
+                red = _tree_agg(p, aggm)
+                return red if mode == "agg" else (red, p)
 
             donate = (0,) if (not broadcast_params
                               and _donation_supported()) else ()
             return jax.jit(many_hops, donate_argnums=donate)
 
-        self._many_fused, self._many_fused_bc = ({
-            v: make_many_fused(
-                loss, upd,
-                tuple(0 if stacked else None
-                      for stacked in self._EXTRA_STACKED[v][:n_loss]), bc)
-            for v, (loss, upd, n_loss) in many_spec.items()
-        } for bc in (False, True))
+        self._make_many_fused = make_many_fused
+        # jitted train_many/train_many_fused callables, built on first use:
+        # (variant, broadcast_params, mode) -> fn. mode is the return
+        # contract — "stack": the (C, ...) trained stack; "agg": the in-jit
+        # reduced aggregate; "agg_locals": (aggregate, stack).
+        self._many_fns: Dict = {}
+        self._fused_fns: Dict = {}
 
-        # data-plane H2D bytes shipped by the batched/sharded/fused engines
-        # (pixel stacks vs index plans) — benchmarks reset and read this
+        # data-plane H2D bytes shipped per engine (sequential per-step
+        # batches, batched/sharded pixel stacks, fused int32 index plans) —
+        # benchmarks reset and read this, as they do ``dispatches``, the
+        # count of compiled-call invocations (the fused FedSR round is ONE).
         self.h2d_bytes = 0
+        self.dispatches = 0
+
+    def _get_many(self, variant: str, broadcast: bool, mode: str,
+                  fused_engine: bool):
+        cache = self._fused_fns if fused_engine else self._many_fns
+        key = (variant, broadcast, mode)
+        if key not in cache:
+            loss, upd, n_loss = self._many_spec[variant]
+            axes = tuple(0 if stacked else None
+                         for stacked in self._EXTRA_STACKED[variant][:n_loss])
+            make = self._make_many_fused if fused_engine else self._make_many
+            cache[key] = make(loss, upd, axes, broadcast, mode)
+        return cache[key]
+
+    @staticmethod
+    def _agg_mode(agg, keep_locals: bool) -> str:
+        if agg is None:
+            return "stack"              # the stack IS the locals
+        return "agg_locals" if keep_locals else "agg"
 
     # ------------------------------------------------------------------
     def train(
@@ -317,8 +365,9 @@ class LocalTrainer:
         client,
         *,
         lr: float,
-        epochs: int,
-        rng: np.random.Generator,
+        epochs: Optional[int] = None,
+        rng: Optional[np.random.Generator] = None,
+        plan: Optional[np.ndarray] = None,
         variant: str = "plain",
         anchor: Optional[Pytree] = None,
         w_glob: Optional[Pytree] = None,
@@ -326,17 +375,31 @@ class LocalTrainer:
         c_glob: Optional[Pytree] = None,
         c_local: Optional[Pytree] = None,
     ) -> Pytree:
+        """One client visit, one jitted dispatch per batch (the reference
+        engine). Trains on the pre-drawn ``plan`` (a (steps, batch) index
+        array — what the planners emit) or draws one from ``rng`` with the
+        identical calls (``plan_epoch_indices``), so both paths consume the
+        same RNG stream. Per-step host->device batch bytes are metered into
+        ``h2d_bytes`` — the sequential engine's data-plane cost, comparable
+        with the stacker/index bytes of the other engines."""
+        if plan is None:
+            if epochs is None or rng is None:
+                raise ValueError(
+                    "train() needs a pre-drawn plan= or epochs= and rng= "
+                    "to draw one")
+            plan = plan_epoch_indices(client, self.fl.batch_size, epochs, rng)
         mom = jax.tree.map(jnp.zeros_like, params)
         lr = jnp.asarray(lr, jnp.float32)
         extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
         step = {"plain": self._plain, "prox": self._prox,
                 "moon": self._moon, "scaffold": self._scaffold}[variant]
-        self.last_steps = 0
-        for _ in range(epochs):
-            for batch in client.epoch_batches(self.fl.batch_size, rng):
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                params, mom = step(params, mom, batch, lr, *extras)
-                self.last_steps += 1
+        self.last_steps = int(plan.shape[0])
+        for sl in plan:
+            batch = {"images": client.images[sl], "labels": client.labels[sl]}
+            self.h2d_bytes += sum(_h2d_nbytes(v) for v in batch.values())
+            self.dispatches += 1
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, mom = step(params, mom, batch, lr, *extras)
         return params
 
     # ------------------------------------------------------------------
@@ -349,6 +412,8 @@ class LocalTrainer:
         lr: float,
         variant: str = "plain",
         broadcast: bool = False,
+        agg: Optional[np.ndarray] = None,
+        keep_locals: bool = False,
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
         anchor: Optional[Pytree] = None,
@@ -368,33 +433,46 @@ class LocalTrainer:
         come from ``stack_client_batches`` / ``stack_plans``
         ((C, S, B, ...) data + (C, S) valid-step mask).
 
+        ``agg`` folds the round's weighted reduce into the SAME dispatch
+        (see ``AggSpec.matrix``): a (C,) vector returns the aggregated
+        model, a (G, C) matrix the (G, ...) group stack; ghost lanes carry
+        weight 0, so no host-side prefix slice is needed.
+        ``keep_locals=True`` returns ``(aggregate, (C, ...) stack)``.
+
         With ``mesh``, every C-stacked input is placed on the mesh's
         ``data_axis`` via ``NamedSharding`` and cohort-shared trees are
         replicated, so the compiled scan partitions the client axis across
         devices; C must then be a multiple of the mesh axis size (callers
         ghost-pad via ``stack_plans(pad_to=...)``).
 
-        Returns the trained (C, ...) stack; per-client executed step counts
-        are left in ``self.last_steps_many``.
+        Returns the trained (C, ...) stack when ``agg`` is None; per-client
+        executed step counts are left in ``self.last_steps_many``.
         """
         self.last_steps_many = np.asarray(valid).sum(axis=1).astype(int)
         self.h2d_bytes += (sum(_h2d_nbytes(v) for v in batches.values())
                            + _h2d_nbytes(valid))
+        self.dispatches += 1
         extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
-        fam = self._many_bc if broadcast else self._many
+        fam = self._get_many(variant, broadcast,
+                             self._agg_mode(agg, keep_locals), False)
         batches = {k: jnp.asarray(v) for k, v in batches.items()}
         valid = jnp.asarray(valid, bool)
+        if agg is not None:
+            agg = jnp.asarray(agg, jnp.float32)
         if mesh is not None:
             put, data_s, shard, repl = self._mesh_placement(
                 mesh, data_axis, valid.shape[0], hop_leading=False)
             params = put(params, repl if broadcast else shard)
             batches = put(batches, data_s)
             valid = put(valid, data_s)
+            if agg is not None:
+                agg = put(agg, repl)
             extras = tuple(
                 put(e, shard if s else repl)
                 for e, s in zip(extras, self._EXTRA_STACKED[variant]))
-        return fam[variant](
-            params, batches, valid, jnp.asarray(lr, jnp.float32), *extras)
+        head = () if agg is None else (agg,)
+        return fam(params, batches, valid, jnp.asarray(lr, jnp.float32),
+                   *head, *extras)
 
     @staticmethod
     def _mesh_placement(mesh, data_axis: str, C: int, hop_leading: bool):
@@ -432,6 +510,8 @@ class LocalTrainer:
         lr: float,
         variant: str = "plain",
         broadcast: bool = False,
+        agg: Optional[np.ndarray] = None,
+        keep_locals: bool = False,
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
         anchor: Optional[Pytree] = None,
@@ -445,12 +525,17 @@ class LocalTrainer:
 
         ``rows`` (H, C) int32, ``plans`` (H, C, S, B) int32 and ``valid``
         (H, C, S) bool come from ``stack_plan_indices``; they are the
-        ENTIRE per-call H2D payload — each step's pixels are gathered from
-        ``plane`` inside the jit. Hop h trains fleet row ``rows[h, c]`` on
-        plan ``plans[h, c]`` starting from the carried (C, ...) model
+        ENTIRE per-call H2D data payload — each step's pixels are gathered
+        from ``plane`` inside the jit. Hop h trains fleet row ``rows[h, c]``
+        on plan ``plans[h, c]`` starting from the carried (C, ...) model
         stack, with momentum reset per visit, so a FedSR/Ring round (H =
         R*K hops) is one dispatch instead of R*K. Star cohorts call with
         H=1 and behave exactly like ``train_many``.
+
+        ``agg``/``keep_locals`` fold the weighted reduce into the same
+        dispatch, exactly as in ``train_many`` — with a collapsed (C,)
+        ``agg`` the whole FedSR round (broadcast, ring laps, cloud reduce)
+        is ONE compiled call.
 
         ``broadcast=True`` stacks a single params tree device-side (the
         FedAvg/ring-seed fast path). With ``broadcast=False`` the params
@@ -464,21 +549,27 @@ class LocalTrainer:
         valid = np.asarray(valid, bool)
         self.last_steps_many = valid.sum(axis=(0, 2)).astype(int)
         self.h2d_bytes += rows.nbytes + plans.nbytes + valid.nbytes
+        self.dispatches += 1
         extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
-        fam = self._many_fused_bc if broadcast else self._many_fused
+        fam = self._get_many(variant, broadcast,
+                             self._agg_mode(agg, keep_locals), True)
+        if agg is not None:
+            agg = jnp.asarray(agg, jnp.float32)
         if mesh is not None:
             put, hop_s, shard, repl = self._mesh_placement(
                 mesh, data_axis, valid.shape[1], hop_leading=True)
             params = put(params, repl if broadcast else shard)
             rows, plans, valid = (put(x, hop_s)
                                   for x in (rows, plans, valid))
+            if agg is not None:
+                agg = put(agg, repl)
             extras = tuple(
                 put(e, shard if s else repl)
                 for e, s in zip(extras, self._EXTRA_STACKED[variant]))
-        return fam[variant](
-            params, plane.images, plane.labels, plane.offsets,
-            jnp.asarray(rows), jnp.asarray(plans), jnp.asarray(valid),
-            jnp.asarray(lr, jnp.float32), *extras)
+        head = () if agg is None else (agg,)
+        return fam(params, plane.images, plane.labels, plane.offsets,
+                   jnp.asarray(rows), jnp.asarray(plans), jnp.asarray(valid),
+                   jnp.asarray(lr, jnp.float32), *head, *extras)
 
     # which extras carry a leading client axis (True) vs are cohort-shared
     # single trees (False) — order matches ``_extras``

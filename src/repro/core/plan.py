@@ -1,0 +1,209 @@
+"""RoundPlan IR — the declarative schedule of one FL round.
+
+The paper's contribution is a *schedule*: which devices train, in what
+topology (star cohort, edge ring, hierarchy), and how the cloud aggregates
+(Algorithm 1, eq. 11). This module is that schedule as data. Algorithms
+(``core.algorithms``) are pure *planners*: they consume only the host RNG,
+the config and their host-side state and emit a ``RoundPlan``; the engines
+(``core.engines``) interpret plans against whatever execution substrate the
+hardware affords — a python loop of jitted steps, one vmap-compiled visit
+stack, a device mesh, or a device-resident data plane with the whole round
+fused into a single dispatch.
+
+Separating the two buys three things:
+
+* engines cannot drift apart per algorithm — there is ONE planner per
+  algorithm and every engine interprets the same plan, so RNG-stream /
+  output / meter parity is structural, not per-branch discipline;
+* communication accounting is closed-form data on the plan
+  (``RoundPlan.comm``), applied once per round instead of interleaved with
+  execution;
+* the aggregation rule is data too (``AggSpec``), so engines can fold the
+  weighted reduce *into* the compiled dispatch (the in-jit aggregation
+  path of ``LocalTrainer.train_many``/``train_many_fused``) — a fused
+  FedSR round is literally one dispatch: broadcast -> H-hop ring scan ->
+  weighted cloud reduce.
+
+Vocabulary
+----------
+A plan is a sequence of ``VisitGroup``s. Each group trains C *lanes*
+concurrently for H *hops*; hop ``h`` of lane ``c`` visits client
+``hops[h].ids[c]`` with the pre-drawn batch plan ``hops[h].plans[c]`` (a
+``None`` plan is an all-invalid visit: the lane's model is carried
+unchanged — the ring-tail rule for rings shorter than the longest). A star
+cohort is one group with H=1 and C clients; a FedSR round is one group
+whose C lanes are the edge rings and whose H = R * max-ring-size hops are
+the lap sequence; HierFAVG is R chained groups (one per edge iteration),
+each seeded from the previous group's per-edge aggregates.
+
+Plans never hold the global model: ``GLOBAL`` marks "the current global
+model" wherever a seed or extra refers to it, and the engine resolves it at
+run time — which is what lets the executor keep ``w_glob`` device-resident
+across rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Pytree = Any
+
+
+class _Symbol:
+    """Sentinel resolved by the engine at run time (plans stay free of
+    concrete parameter trees, so the global model can live on device)."""
+
+    def __init__(self, name: str):
+        self._name = name
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{self._name}>"
+
+
+GLOBAL = _Symbol("GLOBAL")      # the current global model
+ZEROS = _Symbol("ZEROS")        # a zeros tree of the global model's shape
+                                # (SCAFFOLD's uninitialized control variates)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    """Two-level linear reduce over a group's lanes (eq. 11 as data).
+
+    Lanes are gathered into ``groups`` (the edges); each group's model is
+    the ``lane_weights``-weighted sum of its lanes. With ``group_weights``
+    the group models collapse further into ONE model (the cloud reduce);
+    with ``group_weights=None`` the reduce stops at the (G, ...) group
+    stack (HierFAVG's intermediate edge iterations, which seed the next
+    group of visits).
+
+    Aggregation is linear, so a collapsed two-level reduce folds into a
+    single effective per-lane weight vector — ``matrix`` returns exactly
+    the array the engines contract against the lane-stacked model trees,
+    inside the compiled dispatch.
+    """
+
+    groups: Tuple[Tuple[int, ...], ...]      # lane indices per group
+    lane_weights: Tuple[float, ...]          # weight of each lane IN its group
+    group_weights: Optional[Tuple[float, ...]] = None
+
+    @classmethod
+    def flat(cls, weights: Sequence[float]) -> "AggSpec":
+        """One group of all lanes, collapsed: sum_i w_i * lane_i."""
+        return cls(groups=(tuple(range(len(weights))),),
+                   lane_weights=tuple(float(w) for w in weights),
+                   group_weights=(1.0,))
+
+    @property
+    def collapsed(self) -> bool:
+        """True when the reduce yields ONE model (the round/cloud output)."""
+        return self.group_weights is not None
+
+    def matrix(self, pad_to: int) -> np.ndarray:
+        """The reduction array engines contract in-jit against the
+        (C, ...) lane stack: ``(pad_to,)`` effective weights when
+        ``collapsed`` (-> single tree), else ``(G, pad_to)`` (-> group
+        stack). Ghost lanes past the real lane count get weight 0, so
+        mesh padding never needs a host-side slice before aggregation."""
+        C = len(self.lane_weights)
+        if pad_to < C:
+            raise ValueError(f"pad_to={pad_to} < lane count {C}")
+        W = np.zeros((len(self.groups), pad_to), np.float32)
+        for g, lanes in enumerate(self.groups):
+            for lane in lanes:
+                W[g, lane] = self.lane_weights[lane]
+        if not self.collapsed:
+            return W
+        return np.asarray(self.group_weights, np.float32) @ W     # (pad_to,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Hop:
+    """One concurrent visit of every lane: lane c trains client ``ids[c]``
+    on batch plan ``plans[c]`` (``None`` = carried unchanged)."""
+
+    ids: Tuple[int, ...]
+    plans: Tuple[Optional[np.ndarray], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class VisitGroup:
+    """H hop-sequenced concurrent visits over C lanes, then a reduce.
+
+    ``seed`` is where each lane's model comes from: ``None`` broadcasts
+    the global model to every lane (ring/cohort seeding); otherwise
+    ``seed[c]`` indexes the previous group's (G, ...) aggregate stack
+    (HierFAVG lanes restart from their edge's model each iteration).
+
+    Extras are the algorithm-specific side inputs of ``LocalTrainer``:
+    ``shared_extras`` are cohort-shared single trees (broadcast inside the
+    jit), ``stacked_extras`` hold one entry per lane. Either may use
+    ``GLOBAL`` for the current global model.
+
+    ``keep_locals`` asks the engine to also return the per-lane trained
+    models (MOON's prev memory, SCAFFOLD's variate update need them).
+    """
+
+    hops: Tuple[Hop, ...]
+    variant: str = "plain"
+    shared_extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    stacked_extras: Dict[str, Tuple[Any, ...]] = dataclasses.field(
+        default_factory=dict)
+    seed: Optional[Tuple[int, ...]] = None
+    agg: Optional[AggSpec] = None
+    keep_locals: bool = False
+
+    @property
+    def lanes(self) -> int:
+        return len(self.hops[0].ids)
+
+    def lane_steps(self) -> List[int]:
+        """Per-lane executed SGD step count — closed-form from the plans
+        (engines need not report it back from the device)."""
+        return [
+            sum(h.plans[c].shape[0] for h in self.hops
+                if h.plans[c] is not None)
+            for c in range(self.lanes)
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """One round: chained visit groups + closed-form comm records.
+
+    The round's output is the final group's collapsed aggregate (an empty
+    ``groups`` tuple — e.g. ring_rounds=0 — leaves the global model
+    unchanged). ``comm`` is applied to the meter once per round by the
+    driver; engines never touch the meter.
+    """
+
+    groups: Tuple[VisitGroup, ...]
+    comm: Tuple[Tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        for g, grp in enumerate(self.groups):
+            if not grp.hops:
+                raise ValueError(f"group {g}: a VisitGroup needs >= 1 hop")
+            if grp.seed is not None and g == 0:
+                raise ValueError("group 0 cannot seed from a previous group")
+            if grp.seed is not None and self.groups[g - 1].agg is None:
+                # engines hand a seeded group its predecessor's AGGREGATE
+                # stack; without an AggSpec they would silently index the
+                # raw (padded) lane stack instead
+                raise ValueError(f"group {g}: missing previous aggregate")
+        if self.groups:
+            last = self.groups[-1].agg
+            if last is None or not last.collapsed:
+                raise ValueError(
+                    "the final group must collapse to ONE model "
+                    "(AggSpec with group_weights)")
+
+
+@dataclasses.dataclass
+class RoundResult:
+    """What an engine hands back to the driver after interpreting a plan."""
+
+    w_glob: Pytree                          # the round's aggregated output
+    locals_: Optional[List[Pytree]] = None  # final group's per-lane models
+                                            # (only when keep_locals)

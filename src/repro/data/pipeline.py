@@ -1,23 +1,28 @@
 """Per-client data pipeline for the FL simulator.
 
-Two consumers share one batch-plan primitive: the sequential engine iterates
-``epoch_batches`` client by client, and the batched engine pre-draws the same
-plans for a whole cohort and stacks them along a leading client axis
-(``stack_client_batches``). Both draw from the numpy Generator with exactly
-the same calls in the same order, so switching engines never forks the RNG
-stream.
+``plan_epoch_indices`` is the ONE batch-plan primitive: the algorithm
+planners (``core.algorithms``) pre-draw a (steps, batch) index plan per
+client visit — in the sequential engine's visit order, so every engine
+consumes an identical RNG stream — and attach the plans to the RoundPlan
+IR (``core.plan``). The stacking helpers below live *behind* that IR: they
+are the engines' materialization step, never called by planners.
 
-The fused engine adds a third consumer with a different transfer contract:
-``DeviceDataPlane`` uploads every client shard ONCE per experiment as a
-padded ``(K, N_max, ...)`` device stack, and ``stack_plan_indices`` turns
-the same pre-drawn plans into index-only arrays — per visit, only int32
-sample indices cross the host/device boundary and the pixels are gathered
-on device inside the jit.
+* the sequential engine feeds each plan straight to ``LocalTrainer.train``
+  (which draws its own with the identical ``plan_epoch_indices`` calls when
+  invoked outside the IR, e.g. by ``Centralized`` or ``ring_optimization``);
+* the batched/sharded engines materialize a visit's plans into
+  client-stacked pixel arrays + a valid-step mask (``stack_plans``,
+  ``stack_client_batches``);
+* the fused engine keeps pixels device-resident (``DeviceDataPlane``
+  uploads every shard once per experiment, concatenated along one flat
+  sample axis) and ships only the int32 index form of the same plans
+  (``stack_plan_indices``) — per visit, nothing but indices crosses the
+  host/device boundary and batches are gathered inside the jit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -234,13 +239,6 @@ class ClientData:
 
     def __len__(self) -> int:
         return len(self.labels)
-
-    def epoch_batches(
-        self, batch_size: int, rng: np.random.Generator
-    ) -> Iterator[dict]:
-        """One shuffled epoch of full batches (see plan_epoch_indices)."""
-        for sl in plan_epoch_indices(self, batch_size, 1, rng):
-            yield {"images": self.images[sl], "labels": self.labels[sl]}
 
 
 def make_clients(

@@ -51,12 +51,15 @@ def round_up_to_mesh(n: int, mesh, axis: str = "data") -> int:
 def make_sim_mesh(num_clients: Optional[int] = None, *, axis: str = "data"):
     """1-D device mesh for the FL simulator's stacked client axis.
 
-    The batched engine stacks all concurrent client visits of a round along
-    a leading ``(C, ...)`` axis; the sharded engine places that axis on this
-    mesh's single ``axis`` (default ``"data"``). ``num_clients`` caps the
-    mesh at the fleet size so no device is left without at least one client
-    row; cohorts smaller than the mesh, or not divisible by it, are ghost-
-    padded by the engine (see ``stack_plans(pad_to=...)``).
+    The batched engine (``core.engines.batched``) stacks all concurrent
+    client visits of a visit group along a leading ``(C, ...)`` lane axis;
+    under ``FLConfig.engine="sharded"`` (or ``mesh_data_axis``) it places
+    that axis on this mesh's single ``axis`` (default ``"data"``).
+    ``num_clients`` caps the mesh at the fleet size so no device is left
+    without at least one client row; cohorts smaller than the mesh, or not
+    divisible by it, are ghost-padded by the engine (see
+    ``stack_plans(pad_to=...)``; ghost lanes never train and carry
+    aggregation weight 0 in the in-jit reduce).
     """
     devices = jax.devices()
     n = len(devices)

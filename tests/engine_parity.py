@@ -1,0 +1,153 @@
+"""Shared engine-parity helpers (NOT a test module).
+
+One implementation of the algorithm x engine parity machinery over the
+RoundPlan IR, used by ``test_engine_matrix.py`` (the full matrix + the
+8-faked-device subprocess runs) and by the engine-specific unit files
+(H2D/dispatch assertions). Replaces the three copy-pasted ``_run_round``
+scaffolds the engine test files grew in PRs 1-3.
+
+Run directly (``python tests/engine_parity.py <engine>``) this file is the
+multi-device subprocess payload: it re-runs the parity matrix for
+``<engine>`` under whatever device count XLA_FLAGS forced and prints one
+JSON line of results.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+COMM_CHANNELS = ("cloud_up", "cloud_down", "edge_up", "edge_down", "p2p")
+
+ALGOS = ["fedavg", "fedprox", "moon", "scaffold", "fedsr", "ring", "hieravg"]
+
+# (algo, FLConfig overrides) — the participation cases give cohorts/rings
+# that do NOT divide an 8-device mesh (6 clients; rings of 4 and 2), so
+# ghost padding + all-invalid ring tails are exercised whenever >1 device
+# is visible
+CASES = [(a, {}) for a in ALGOS] + [
+    ("fedavg", {"participation": 0.75}),
+    ("fedsr", {"participation": 0.75}),
+]
+
+_RUNS = {}
+
+
+def trainer():
+    """One shared LocalTrainer: its jitted steps are engine-agnostic, so
+    sharing it across every parity case keeps the compile cache warm."""
+    import jax  # noqa: F401  (deferred so __main__ env vars act first)
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.local import LocalTrainer
+
+    if "trainer" not in _RUNS:
+        _RUNS["trainer"] = LocalTrainer(
+            get_config("fedsr-mlp"),
+            FLConfig(batch_size=8, momentum=0.5))
+    return _RUNS["trainer"]
+
+
+def run_round(algo, engine, overrides=(), rounds=2):
+    """Cached ``(final weights, meter, rng state, h2d bytes, dispatches)``
+    of ``rounds`` FL rounds of ``algo`` under ``engine``."""
+    key = (algo, engine, tuple(sorted(overrides)), rounds)
+    if key in _RUNS:
+        return _RUNS[key]
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.algorithms import make_algorithm
+    from repro.core.comm import CommMeter
+    from repro.data.pipeline import make_clients
+    from repro.data.synthetic import make_task
+
+    from repro.models.small import init_small_model
+
+    fl = FLConfig(algorithm=algo, num_devices=8, num_edges=2, rounds=rounds,
+                  ring_rounds=2, local_epochs=1, batch_size=8, momentum=0.5,
+                  engine=engine, **dict(overrides))
+    train, _ = make_task("mnist_like", train_per_class=10, test_per_class=2,
+                         seed=0)
+    clients = make_clients(train, scheme="dirichlet", num_devices=8,
+                           rng=np.random.default_rng(0), alpha=0.5)
+    tr = trainer()
+    algo_obj = make_algorithm(algo, tr, clients, fl)
+    w = init_small_model(jax.random.PRNGKey(0), get_config("fedsr-mlp"))
+    meter = CommMeter(model_bytes=1)
+    rng = np.random.default_rng(7)
+    state = {}
+    tr.h2d_bytes = 0
+    tr.dispatches = 0
+    for t in range(fl.rounds):
+        w, state = algo_obj.run_round(w, t, 0.05, rng, meter, state)
+    _RUNS[key] = (w, meter, rng.bit_generator.state, tr.h2d_bytes,
+                  tr.dispatches)
+    return _RUNS[key]
+
+
+def max_diff(a, b):
+    import jax
+    return max(float(np.max(np.abs(np.asarray(la) - np.asarray(lb))))
+               for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def assert_engine_parity(algo, engine, overrides=(), rounds=2):
+    """The three-way contract every engine owes the sequential reference:
+    identical RNG stream, <=1e-5 round outputs, exactly equal meters."""
+    w_seq, m_seq, s_seq, _, _ = run_round(algo, "sequential", overrides,
+                                          rounds)
+    w_eng, m_eng, s_eng, _, _ = run_round(algo, engine, overrides, rounds)
+    assert s_seq == s_eng, f"{algo}/{engine}: engines must share one RNG stream"
+    diff = max_diff(w_seq, w_eng)
+    assert diff <= 1e-5, f"{algo}/{engine} round outputs diverged: {diff}"
+    for ch in COMM_CHANNELS:
+        assert getattr(m_seq, ch) == getattr(m_eng, ch), (algo, engine, ch)
+
+
+# ---------------------------------------------------------------------------
+# multi-device subprocess machinery: the same matrix on faked host devices
+
+
+def _payload(engine):
+    """Executed by the subprocess: sequential vs ``engine`` parity for every
+    case at the forced device count; one JSON line on stdout. The fused
+    engine additionally composes with mesh sharding via mesh_data_axis
+    (engine="sharded" takes the mesh from its name alone)."""
+    import jax
+
+    extra = (("mesh_data_axis", "data"),) if engine == "fused" else ()
+    out = {"ndev": len(jax.devices()), "cases": {}}
+    for algo, ov in CASES:
+        w_seq, m_seq, s_seq, _, _ = run_round(
+            algo, "sequential", tuple(ov.items()), rounds=1)
+        w_e, m_e, s_e, _, _ = run_round(
+            algo, engine, tuple(ov.items()) + extra, rounds=1)
+        out["cases"]["/".join([algo] + [f"{k}={v}" for k, v in ov.items()])] = {
+            "max_diff": max_diff(w_seq, w_e),
+            "meters_equal": all(getattr(m_seq, c) == getattr(m_e, c)
+                                for c in COMM_CHANNELS),
+            "rng_equal": s_seq == s_e,
+            "p2p": m_e.p2p,
+        }
+    print(json.dumps(out))
+
+
+def run_subprocess_matrix(engine, ndev=8):
+    """Re-run the parity matrix for ``engine`` in a subprocess with
+    ``ndev`` faked host devices; returns the parsed JSON payload."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), engine],
+        cwd=root, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+if __name__ == "__main__":
+    _payload(sys.argv[1])

@@ -1,26 +1,23 @@
-"""Engine parity: the batched vmap engine must reproduce the sequential
-python-loop engine — per loss variant (``train_many`` vs looped ``train``),
-per algorithm round (``engine="batched"`` vs ``engine="sequential"``), and
-for the opt-in fused-SGD update path. Uneven shard sizes are used throughout
-so the padding/valid-mask machinery is always exercised."""
-import dataclasses
-
+"""Batched-engine units: ``train_many`` must reproduce looped ``train`` per
+loss variant, the valid mask must fully decide what runs, and the batch
+stacker must hold its invariants. Round-level algorithm x engine parity
+lives in ``test_engine_matrix.py`` (shared helpers: ``engine_parity.py``).
+Uneven shard sizes are used throughout so the padding/valid-mask machinery
+is always exercised."""
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.configs.base import FLConfig
-from repro.core.algorithms import make_algorithm
-from repro.core.comm import CommMeter
 from repro.core.local import LocalTrainer
 from repro.data.pipeline import (
-    ClientData, make_clients, plan_epoch_indices, stack_client_batches,
+    ClientData, plan_epoch_indices, stack_client_batches,
 )
 from repro.data.synthetic import make_task
 from repro.models.small import init_small_model
 from repro.utils.tree import (
-    tree_broadcast, tree_scale, tree_stack, tree_unstack, tree_zeros_like,
+    tree_broadcast, tree_scale, tree_stack, tree_unstack,
 )
 
 try:
@@ -107,6 +104,43 @@ def test_train_many_matches_looped_train(variant, epochs):
         _assert_trees_close(w_seq, w_bat, msg=f"{variant} client {i}")
 
 
+def test_train_on_pre_drawn_plan_matches_drawn():
+    """``train(plan=...)`` (what the sequential engine feeds from the IR)
+    must equal ``train(epochs=, rng=)`` drawing the identical plan — and
+    must leave the RNG untouched."""
+    fl = FLConfig(batch_size=8, momentum=0.5)
+    client = _uneven_clients()[1]
+    trainer = LocalTrainer(CFG, fl)
+    w0 = init_small_model(jax.random.PRNGKey(0), CFG)
+    rng = np.random.default_rng(9)
+    drawn = trainer.train(w0, client, lr=0.05, epochs=2, rng=rng)
+    rng2 = np.random.default_rng(9)
+    plan = plan_epoch_indices(client, fl.batch_size, 2, rng2)
+    state_before = rng2.bit_generator.state
+    planned = trainer.train(w0, client, lr=0.05, plan=plan)
+    assert rng2.bit_generator.state == state_before
+    assert trainer.last_steps == plan.shape[0]
+    _assert_trees_close(drawn, planned, atol=0, msg="plan= path diverged")
+    with pytest.raises(ValueError, match="plan"):
+        trainer.train(w0, client, lr=0.05)      # neither plan nor epochs/rng
+
+
+def test_train_meters_sequential_h2d_bytes():
+    """Per-step host->device batch bytes are metered (ROADMAP open item:
+    the 4-way engine H2D comparison). Labels count at int32 width — jax
+    demotes int64 on transfer while x64 is disabled."""
+    fl = FLConfig(batch_size=8)
+    client = _uneven_clients()[2]               # 24 samples -> 3 full batches
+    trainer = LocalTrainer(CFG, fl)
+    w0 = init_small_model(jax.random.PRNGKey(0), CFG)
+    trainer.h2d_bytes = 0
+    trainer.train(w0, client, lr=0.05, epochs=2, rng=np.random.default_rng(0))
+    steps = trainer.last_steps
+    per_step = 8 * (28 * 28 * 4 + 4)            # images f32 + labels int32
+    assert trainer.h2d_bytes == steps * per_step
+    assert trainer.dispatches == steps
+
+
 def test_valid_mask_blocks_padded_steps():
     """Flipping padded steps' data must not change the result — only the
     valid mask decides what runs."""
@@ -127,55 +161,41 @@ def test_valid_mask_blocks_padded_steps():
     _assert_trees_close(ref, out, atol=0, msg="padded-step data leaked")
 
 
-ROUND_CASES = [
-    # (algorithm, fl overrides) — 2 rounds each so carried state (MOON prev,
-    # SCAFFOLD control variates) must also round-trip between engines
-    ("fedavg", {}),
-    ("fedprox", {}),
-    ("moon", {}),
-    ("scaffold", {}),
-    ("hieravg", {}),
-    ("ring", {}),
-    ("fedsr", {}),
-    ("fedavg", {"participation": 0.5}),
-    ("fedsr", {"participation": 0.75}),   # 6 of 8 -> uneven rings (4, 2)
-]
+def test_train_many_in_jit_agg_matches_host_aggregation():
+    """The in-jit aggregation path (``agg=``) must equal aggregating the
+    returned stack host-side — for the collapsed (C,) vector, the (G, C)
+    group matrix, and the keep_locals combination."""
+    from repro.utils.tree import tree_weighted_sum_stacked
 
-
-@pytest.mark.parametrize("algo,overrides", ROUND_CASES)
-def test_round_parity_batched_vs_sequential(algo, overrides):
-    results = {}
-    for engine in ("sequential", "batched"):
-        fl = FLConfig(algorithm=algo, num_devices=8, num_edges=2, rounds=2,
-                      ring_rounds=2, local_epochs=1, batch_size=8,
-                      momentum=0.5, engine=engine, **overrides)
-        train, _ = make_task("mnist_like", train_per_class=10,
-                             test_per_class=2, seed=0)
-        clients = make_clients(train, scheme="dirichlet", num_devices=8,
-                               rng=np.random.default_rng(0), alpha=0.5)
-        trainer = LocalTrainer(CFG, fl)
-        algo_obj = make_algorithm(algo, trainer, clients, fl)
-        w = init_small_model(jax.random.PRNGKey(0), CFG)
-        meter = CommMeter(model_bytes=1)
-        rng = np.random.default_rng(7)
-        state = {}
-        for t in range(fl.rounds):
-            w, state = algo_obj.run_round(w, t, 0.05, rng, meter, state)
-        results[engine] = (w, meter, rng.bit_generator.state)
-    w_seq, meter_seq, rng_seq = results["sequential"]
-    w_bat, meter_bat, rng_bat = results["batched"]
-    assert rng_seq == rng_bat, "engines must share one RNG stream"
-    _assert_trees_close(w_seq, w_bat, msg=f"{algo} round")
-    for ch in ("cloud_up", "cloud_down", "edge_up", "edge_down", "p2p"):
-        assert getattr(meter_seq, ch) == getattr(meter_bat, ch), ch
-    # parity alone can't catch two equally-wrong meters: pin the corrected
-    # closed-form ring-hop count, R*(K-1) + (R-1) closings per ring per
-    # round (K=8, M=2 -> Q=4, R=2, T=2; see tests/test_comm_golden.py)
-    if not overrides:
-        if algo == "ring":
-            assert meter_bat.p2p == 2 * (2 * 7 + 1)
-        elif algo == "fedsr":
-            assert meter_bat.p2p == 2 * 2 * (2 * 3 + 1)
+    fl = FLConfig(batch_size=8, momentum=0.5)
+    clients = _uneven_clients()
+    trainer = LocalTrainer(CFG, fl)
+    w0 = init_small_model(jax.random.PRNGKey(0), CFG)
+    batches, valid = stack_client_batches(clients, fl.batch_size, 1,
+                                          np.random.default_rng(0))
+    stack = trainer.train_many(tree_broadcast(w0, len(clients)), batches,
+                               valid, lr=0.05)
+    w = np.asarray([0.4, 0.3, 0.2, 0.1], np.float32)
+    red = trainer.train_many(tree_broadcast(w0, len(clients)), batches,
+                             valid, lr=0.05, agg=w)
+    _assert_trees_close(red, tree_weighted_sum_stacked(stack, w), atol=1e-6,
+                        msg="collapsed in-jit agg")
+    # (G, C) group matrix -> (G, ...) stack (HierFAVG's edge reduce)
+    mat = np.asarray([[0.5, 0.5, 0.0, 0.0], [0.0, 0.0, 0.5, 0.5]],
+                     np.float32)
+    groups = trainer.train_many(tree_broadcast(w0, len(clients)), batches,
+                                valid, lr=0.05, agg=mat)
+    want = tree_stack([
+        tree_weighted_sum_stacked(stack, mat[0]),
+        tree_weighted_sum_stacked(stack, mat[1]),
+    ])
+    _assert_trees_close(groups, want, atol=1e-6, msg="grouped in-jit agg")
+    # keep_locals returns BOTH the aggregate and the untouched stack
+    red2, stack2 = trainer.train_many(
+        tree_broadcast(w0, len(clients)), batches, valid, lr=0.05, agg=w,
+        keep_locals=True)
+    _assert_trees_close(red2, red, atol=0, msg="agg_locals aggregate")
+    _assert_trees_close(stack2, stack, atol=0, msg="agg_locals stack")
 
 
 @pytest.mark.parametrize("engine", ["sequential", "batched"])

@@ -25,6 +25,12 @@ def test_benchmark_run_smoke_entrypoint():
     assert any(n.startswith("kernel/fl_round") and n.endswith("_fused")
                for n in names), names
     assert any(n.startswith("kernel/ring_round_fedsr") for n in names), names
+    # the PR-4 acceptance row: the fused FedSR round (train + two-level
+    # aggregation) must record as a SINGLE compiled dispatch
+    one = [l for l in lines[1:]
+           if l.split(",")[0].endswith("_onedispatch")]
+    assert one, names
+    assert "dispatches=1;" in one[0].split(",", 2)[2], one[0]
     assert {"smoke/fedavg_round/sequential",
             "smoke/fedavg_round/batched",
             "smoke/fedavg_round/sharded",

@@ -1,8 +1,10 @@
 """FL executor checkpoint/resume must be EXACT: an interrupted run resumed
 from round k produces the same final model as the uninterrupted run
-(model + numpy RNG + comm counters all restored)."""
+(model + numpy RNG + comm counters + algorithm state all restored)."""
+import os
 import tempfile
 
+import jax
 import numpy as np
 import pytest
 
@@ -54,6 +56,42 @@ def test_resume_is_exact():
     target = full.history[0].accuracy           # hit from round 1
     assert resumed.rounds_to_accuracy(target) == full.rounds_to_accuracy(target)
     assert resumed.comm_to_accuracy(target) == full.comm_to_accuracy(target)
+
+
+@pytest.mark.parametrize("algo", ["moon", "scaffold"])
+def test_resume_restores_algorithm_state(algo):
+    """Regression: ``_save_checkpoint`` used to persist model/rng/comm/
+    history but NOT ``state``, so MOON's prev locals and SCAFFOLD's c/ci
+    control variates silently reset on resume. Both algorithms' resumed
+    runs must now reproduce the uninterrupted final model bit-for-bit."""
+    fl = FLConfig(algorithm=algo, num_devices=4, num_edges=2, rounds=4,
+                  partition="pathological", xi=2, local_epochs=1,
+                  batch_size=16, momentum=0.5, seed=11)
+    train, test = make_task("mnist_like", train_per_class=12,
+                            test_per_class=4, seed=11)
+    full = run_experiment(task="mnist_like", model_cfg=CFG, fl=fl,
+                          eval_every=1, train=train, test=test)
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        run_experiment(task="mnist_like", model_cfg=CFG, fl=fl,
+                       eval_every=1, train=train, test=test,
+                       checkpoint_dir=ckdir, checkpoint_every=2,
+                       stop_after=2)
+        # the checkpoint carries the algorithm's memory alongside the model
+        assert os.path.exists(os.path.join(ckdir, "algo_state.msgpack"))
+        resumed = run_experiment(task="mnist_like", model_cfg=CFG, fl=fl,
+                                 eval_every=1, train=train, test=test,
+                                 checkpoint_dir=ckdir, resume=True)
+
+    assert resumed.history[-1].round == 4
+    for (pa, la), (pb, lb) in zip(
+            jax.tree_util.tree_leaves_with_path(full.final_model),
+            jax.tree_util.tree_leaves_with_path(resumed.final_model)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"{algo} resumed model drifted at {pa}")
+    assert resumed.final_accuracy == pytest.approx(full.final_accuracy,
+                                                   abs=0)
 
 
 def test_resume_without_checkpoint_starts_fresh():

@@ -1,0 +1,60 @@
+"""THE engine-parity matrix: every algorithm x every engine, one test.
+
+All 7 algorithms (plus the ghost-padding participation cases) must produce
+bit-identical RNG streams, <=1e-5-matching round outputs and exactly equal
+comm meters across sequential / batched / sharded / fused — the RoundPlan
+IR makes this structural (one planner per algorithm, engines only
+interpret), and this matrix pins it. The same matrix re-runs under 8 faked
+host devices per mesh-capable engine, so multi-device partitioning, ghost
+padding and the fused engine's sharded data plane are exercised on
+CPU-only CI.
+"""
+import pytest
+
+from engine_parity import (
+    CASES, assert_engine_parity, run_round, run_subprocess_matrix,
+)
+
+ENGINES = ("batched", "sharded", "fused")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("algo,overrides", CASES)
+def test_round_parity(algo, overrides, engine):
+    assert_engine_parity(algo, engine, tuple(overrides.items()))
+
+
+@pytest.mark.parametrize("engine,algo", [("batched", "fedavg"),
+                                         ("fused", "fedsr")])
+def test_mesh_axis_opt_in_matches_sequential(engine, algo):
+    """FLConfig.mesh_data_axis opts the batched/fused engines into the
+    sharded engine's mesh placement without changing results."""
+    assert_engine_parity(algo, engine, (("mesh_data_axis", "data"),))
+
+
+def test_ring_meter_closed_form_pins():
+    """Parity alone can't catch two equally-wrong meters: pin the corrected
+    closed-form ring-hop count, R*(K-1) + (R-1) closings per ring per round
+    (K=8, M=2 -> Q=4, R=2, T=2; see tests/test_comm_golden.py)."""
+    _, m_ring, _, _, _ = run_round("ring", "batched")
+    assert m_ring.p2p == 2 * (2 * 7 + 1)
+    _, m_fedsr, _, _, _ = run_round("fedsr", "fused")
+    assert m_fedsr.p2p == 2 * 2 * (2 * 3 + 1)
+
+
+@pytest.mark.parametrize("engine", ("sharded", "fused"))
+def test_parity_on_8_fake_devices(engine):
+    """The full matrix on 8 faked host devices: the sharded engine's
+    multi-device partitioning (cohorts ghost-padded to mesh multiples) and
+    the fused engine composed with mesh sharding (resident fleet stack AND
+    cohort axis partitioned) both reproduce sequential for all 7
+    algorithms — CPU-only CI's multi-device guarantee."""
+    data = run_subprocess_matrix(engine)
+    assert data["ndev"] == 8, data
+    assert len(data["cases"]) == len(CASES)
+    for name, r in data["cases"].items():
+        assert r["rng_equal"], (engine, name)
+        assert r["meters_equal"], (engine, name)
+        assert r["max_diff"] <= 1e-5, (engine, name, r["max_diff"])
+    # ring meter closed form survives both paths: M*(R*(Q-1)+(R-1))
+    assert data["cases"]["fedsr"]["p2p"] == 2 * (2 * 3 + 1)

@@ -1,129 +1,23 @@
-"""Fused-engine parity: ``engine="fused"`` (device-resident data plane +
-hop-fused ring scan) must reproduce the sequential reference engine — round
-outputs to <=1e-5, comm meters exactly, and an identical RNG stream — for
-every algorithm, while shipping only int32 indices over H2D per visit.
-
-In-process tests run on whatever this host exposes; the subprocess test
-re-runs the same parity matrix under
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` with
-``mesh_data_axis="data"`` set, so the fused engine's composition with mesh
-sharding (fleet stack AND cohort axis partitioned, ghost-padded cohorts) is
-exercised on CPU-only CI.
-
-Run directly (``python tests/test_fused_engine.py``) this file is the
-subprocess payload: it prints one JSON line of parity results.
-"""
-import json
-import os
-import subprocess
-import sys
-
+"""Fused-engine units: the device-resident data plane, the index-only H2D
+contract, and the tentpole one-dispatch claim. Round-level algorithm x
+engine parity — including the 8-faked-device mesh composition — lives in
+``test_engine_matrix.py`` (shared helpers: ``engine_parity.py``)."""
 import numpy as np
 import pytest
 
-COMM_CHANNELS = ("cloud_up", "cloud_down", "edge_up", "edge_down", "p2p")
-
-ALGOS = ["fedavg", "fedprox", "moon", "scaffold", "fedsr", "ring", "hieravg"]
-
-# the participation cases give cohorts/rings that do NOT divide an 8-device
-# mesh (6 clients; rings of 4 and 2), exercising ghost padding + all-invalid
-# ring tails whenever >1 device is visible
-CASES = [(a, {}) for a in ALGOS] + [
-    ("fedavg", {"participation": 0.75}),
-    ("fedsr", {"participation": 0.75}),
-]
-
-_RUNS = {}
-
-
-def _trainer():
-    import jax  # noqa: F401  (deferred so __main__ env vars act first)
-    from repro.configs import get_config
-    from repro.configs.base import FLConfig
-    from repro.core.local import LocalTrainer
-
-    if "trainer" not in _RUNS:
-        _RUNS["trainer"] = LocalTrainer(
-            get_config("fedsr-mlp"),
-            FLConfig(batch_size=8, momentum=0.5))
-    return _RUNS["trainer"]
-
-
-def _run_round(algo, engine, overrides=(), rounds=2):
-    """Cached (final weights, meter, rng state, h2d bytes) of ``rounds``
-    FL rounds."""
-    key = (algo, engine, tuple(sorted(overrides)), rounds)
-    if key in _RUNS:
-        return _RUNS[key]
-    import jax
-    from repro.configs import get_config
-    from repro.configs.base import FLConfig
-    from repro.core.algorithms import make_algorithm
-    from repro.core.comm import CommMeter
-    from repro.data.pipeline import make_clients
-    from repro.data.synthetic import make_task
-    from repro.models.small import init_small_model
-
-    fl = FLConfig(algorithm=algo, num_devices=8, num_edges=2, rounds=rounds,
-                  ring_rounds=2, local_epochs=1, batch_size=8, momentum=0.5,
-                  engine=engine, **dict(overrides))
-    train, _ = make_task("mnist_like", train_per_class=10, test_per_class=2,
-                         seed=0)
-    clients = make_clients(train, scheme="dirichlet", num_devices=8,
-                           rng=np.random.default_rng(0), alpha=0.5)
-    trainer = _trainer()
-    algo_obj = make_algorithm(algo, trainer, clients, fl)
-    w = init_small_model(jax.random.PRNGKey(0), get_config("fedsr-mlp"))
-    meter = CommMeter(model_bytes=1)
-    rng = np.random.default_rng(7)
-    state = {}
-    trainer.h2d_bytes = 0
-    for t in range(fl.rounds):
-        w, state = algo_obj.run_round(w, t, 0.05, rng, meter, state)
-    _RUNS[key] = (w, meter, rng.bit_generator.state, trainer.h2d_bytes)
-    return _RUNS[key]
-
-
-def _max_diff(a, b):
-    import jax
-    return max(float(np.max(np.abs(np.asarray(la) - np.asarray(lb))))
-               for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
-
+from engine_parity import run_round
 
 # ---------------------------------------------------------------------------
-# in-process parity
-
-
-@pytest.mark.parametrize("algo,overrides", CASES)
-def test_fused_round_parity(algo, overrides):
-    w_seq, m_seq, s_seq, _ = _run_round(algo, "sequential",
-                                        tuple(overrides.items()))
-    w_f, m_f, s_f, _ = _run_round(algo, "fused", tuple(overrides.items()))
-    assert s_seq == s_f, "engines must share one RNG stream"
-    assert _max_diff(w_seq, w_f) <= 1e-5, f"{algo} round outputs diverged"
-    for ch in COMM_CHANNELS:
-        assert getattr(m_seq, ch) == getattr(m_f, ch), (algo, ch)
-
-
-def test_fused_engine_composes_with_mesh_axis():
-    """FLConfig.mesh_data_axis on engine="fused" shards the resident fleet
-    stack and the cohort axis over the sim mesh without changing results."""
-    w_seq, m_seq, s_seq, _ = _run_round("fedsr", "sequential")
-    w_f, m_f, s_f, _ = _run_round("fedsr", "fused",
-                                  (("mesh_data_axis", "data"),))
-    assert s_seq == s_f
-    assert _max_diff(w_seq, w_f) <= 1e-5
-    for ch in COMM_CHANNELS:
-        assert getattr(m_seq, ch) == getattr(m_f, ch), ch
+# H2D + dispatch contracts
 
 
 def test_fused_h2d_is_index_only():
-    """The tentpole claim: per-round H2D drops from pixel stacks (batched)
+    """The data-plane claim: per-round H2D drops from pixel stacks (batched)
     to int32 index plans (fused). For the MNIST-like 28x28 float32 images
     an index is 784x smaller than its batch row — require >=50x here to
     stay robust to mask/row overheads."""
-    _, _, _, h2d_bat = _run_round("fedsr", "batched")
-    _, _, _, h2d_fus = _run_round("fedsr", "fused")
+    _, _, _, h2d_bat, _ = run_round("fedsr", "batched")
+    _, _, _, h2d_fus, _ = run_round("fedsr", "fused")
     assert h2d_fus > 0
     assert h2d_fus * 50 < h2d_bat, (h2d_fus, h2d_bat)
 
@@ -135,13 +29,27 @@ def test_fused_ring_round_is_one_h2d_shipment():
     from repro.configs.base import FLConfig
 
     fl = FLConfig(num_devices=8, num_edges=2, ring_rounds=2, batch_size=8)
-    _, _, _, h2d = _run_round("fedsr", "fused", rounds=1)
+    _, _, _, h2d, _ = run_round("fedsr", "fused", rounds=1)
     # 2 rings of 4, R=2 -> H=8 hops; C=2 rings; B=8. S is data-dependent,
     # so recover it from the identity instead of hardcoding:
     # h2d = H*C*4 (rows) + H*C*S*B*4 (plans) + H*C*S (valid)
     H, C, B = fl.ring_rounds * fl.devices_per_edge, fl.num_edges, fl.batch_size
     s = (h2d - H * C * 4) / (H * C * (B * 4 + 1))
     assert s == int(s) and s >= 1, (h2d, s)
+
+
+def test_fused_fedsr_round_is_one_dispatch():
+    """The tentpole: with in-jit aggregation the fused FedSR round —
+    broadcast, H-hop ring lap scan, two-level weighted cloud reduce — is
+    literally ONE compiled dispatch. The batched engine pays one dispatch
+    per hop (+1: its final hop folds the reduce in)."""
+    _, _, _, _, d_fused = run_round("fedsr", "fused", rounds=1)
+    assert d_fused == 1
+    _, _, _, _, d_star = run_round("fedavg", "fused", rounds=1)
+    assert d_star == 1                      # star cohorts too: agg in-jit
+    _, _, _, _, d_bat = run_round("fedsr", "batched", rounds=1)
+    assert d_bat == 2 * 4                   # R*Q hop dispatches, reduce fused
+                                            # into the last one
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +80,13 @@ def test_device_data_plane_flat_layout():
     assert plane.num_clients == 3
 
 
+def test_device_data_plane_needs_clients():
+    from repro.data.pipeline import DeviceDataPlane
+
+    with pytest.raises(ValueError, match="at least one client"):
+        DeviceDataPlane([])
+
+
 def test_stack_plan_indices_ghosts_and_steps():
     from repro.data.pipeline import plan_epoch_indices, stack_plan_indices
 
@@ -193,58 +108,3 @@ def test_stack_plan_indices_ghosts_and_steps():
     # a None plan is an all-invalid row, like stack_plans
     rows2, _, valid2 = stack_plan_indices([plans[0], None], [0, 1])
     assert not valid2[1].any() and rows2[1] == 1
-
-
-# ---------------------------------------------------------------------------
-# multi-device: the same parity matrix, fused + mesh, on 8 faked devices
-
-
-def _parity_payload():
-    """Executed by the subprocess: sequential vs fused-with-mesh parity for
-    every case at the forced device count; one JSON line on stdout."""
-    import jax
-
-    out = {"ndev": len(jax.devices()), "cases": {}}
-    for algo, ov in CASES:
-        w_seq, m_seq, s_seq, _ = _run_round(algo, "sequential",
-                                            tuple(ov.items()), rounds=1)
-        w_f, m_f, s_f, _ = _run_round(
-            algo, "fused",
-            tuple(ov.items()) + (("mesh_data_axis", "data"),), rounds=1)
-        out["cases"]["/".join([algo] + [f"{k}={v}" for k, v in ov.items()])] = {
-            "max_diff": _max_diff(w_seq, w_f),
-            "meters_equal": all(getattr(m_seq, c) == getattr(m_f, c)
-                                for c in COMM_CHANNELS),
-            "rng_equal": s_seq == s_f,
-            "p2p": m_f.p2p,
-        }
-    print(json.dumps(out))
-
-
-def test_fused_parity_on_8_fake_devices():
-    """The fused engine composed with mesh sharding (resident fleet stack
-    sharded along "data", cohorts ghost-padded) reproduces sequential for
-    all 7 algorithms on 8 faked host devices — CPU-only CI's guarantee for
-    the multi-device fused path."""
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
-                         + env.get("PYTHONPATH", ""))
-    proc = subprocess.run(
-        [sys.executable, os.path.abspath(__file__)],
-        cwd=root, env=env, capture_output=True, text=True, timeout=900)
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    data = json.loads(proc.stdout.strip().splitlines()[-1])
-    assert data["ndev"] == 8, data
-    assert len(data["cases"]) == len(CASES)
-    for name, r in data["cases"].items():
-        assert r["rng_equal"], name
-        assert r["meters_equal"], name
-        assert r["max_diff"] <= 1e-5, (name, r["max_diff"])
-    # ring meter closed form survives the fused path: M*(R*(Q-1)+(R-1))
-    assert data["cases"]["fedsr"]["p2p"] == 2 * (2 * 3 + 1)
-
-
-if __name__ == "__main__":
-    _parity_payload()

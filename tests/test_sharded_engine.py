@@ -1,116 +1,11 @@
-"""Sharded-engine parity: ``engine="sharded"`` (the batched engine with the
-stacked (C, ...) client axis placed on a device-mesh "data" axis) must
-reproduce the sequential reference engine — round outputs to <=1e-5, the
-*corrected* comm meters exactly, and an identical RNG stream — for every
-algorithm. In-process tests run on whatever this host exposes (1 device in
-CI: a (1,)-mesh, ghost padding degenerate); the subprocess test re-runs the
-same parity matrix under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-so multi-device partitioning AND ghost-client padding (cohorts not divisible
-by 8) are exercised on CPU-only CI.
-
-Run directly (``python tests/test_sharded_engine.py``) this file is the
-subprocess payload: it prints one JSON line of parity results.
-"""
-import json
-import os
-import subprocess
-import sys
-
+"""Sharded-engine units: ghost-client padding, sim-mesh helpers, and the
+mesh-divisibility contract of ``train_many``. Round-level algorithm x
+engine parity — including the 8-faked-device matrix — lives in
+``test_engine_matrix.py`` (shared helpers: ``engine_parity.py``)."""
 import numpy as np
 import pytest
 
-COMM_CHANNELS = ("cloud_up", "cloud_down", "edge_up", "edge_down", "p2p")
-
-ALGOS = ["fedavg", "fedprox", "moon", "scaffold", "fedsr", "ring", "hieravg"]
-
-# (algo, FLConfig overrides) — the participation cases give cohorts/rings
-# that do NOT divide an 8-device mesh (6 clients; rings of 4 and 2), so the
-# ghost-padding path is exercised whenever >1 device is visible
-CASES = [(a, {}) for a in ALGOS] + [
-    ("fedavg", {"participation": 0.75}),
-    ("fedsr", {"participation": 0.75}),
-]
-
-_RUNS = {}      # (algo, engine, overrides) -> (w, meter, rng_state)
-
-
-def _trainer():
-    """One shared LocalTrainer: its jitted steps are engine-agnostic, so
-    sharing it across every parity case keeps the compile cache warm."""
-    import jax  # noqa: F401  (deferred so __main__ env vars act first)
-    from repro.configs import get_config
-    from repro.configs.base import FLConfig
-    from repro.core.local import LocalTrainer
-
-    if "trainer" not in _RUNS:
-        _RUNS["trainer"] = LocalTrainer(
-            get_config("fedsr-mlp"),
-            FLConfig(batch_size=8, momentum=0.5))
-    return _RUNS["trainer"]
-
-
-def _run_round(algo, engine, overrides=(), rounds=2):
-    """Cached (final weights, meter, rng state) of ``rounds`` FL rounds."""
-    key = (algo, engine, tuple(sorted(overrides)), rounds)
-    if key in _RUNS:
-        return _RUNS[key]
-    import jax
-    from repro.configs import get_config
-    from repro.configs.base import FLConfig
-    from repro.core.algorithms import make_algorithm
-    from repro.core.comm import CommMeter
-    from repro.data.pipeline import make_clients
-    from repro.data.synthetic import make_task
-    from repro.models.small import init_small_model
-
-    fl = FLConfig(algorithm=algo, num_devices=8, num_edges=2, rounds=rounds,
-                  ring_rounds=2, local_epochs=1, batch_size=8, momentum=0.5,
-                  engine=engine, **dict(overrides))
-    train, _ = make_task("mnist_like", train_per_class=10, test_per_class=2,
-                         seed=0)
-    clients = make_clients(train, scheme="dirichlet", num_devices=8,
-                           rng=np.random.default_rng(0), alpha=0.5)
-    algo_obj = make_algorithm(algo, _trainer(), clients, fl)
-    w = init_small_model(jax.random.PRNGKey(0), get_config("fedsr-mlp"))
-    meter = CommMeter(model_bytes=1)
-    rng = np.random.default_rng(7)
-    state = {}
-    for t in range(fl.rounds):
-        w, state = algo_obj.run_round(w, t, 0.05, rng, meter, state)
-    _RUNS[key] = (w, meter, rng.bit_generator.state)
-    return _RUNS[key]
-
-
-def _max_diff(a, b):
-    import jax
-    return max(float(np.max(np.abs(np.asarray(la) - np.asarray(lb))))
-               for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
-
-
-# ---------------------------------------------------------------------------
-# in-process parity (1 device in CI: degenerate mesh, same code path)
-
-
-@pytest.mark.parametrize("algo,overrides", CASES)
-def test_sharded_round_parity(algo, overrides):
-    w_seq, m_seq, s_seq = _run_round(algo, "sequential", tuple(overrides.items()))
-    w_sh, m_sh, s_sh = _run_round(algo, "sharded", tuple(overrides.items()))
-    assert s_seq == s_sh, "engines must share one RNG stream"
-    assert _max_diff(w_seq, w_sh) <= 1e-5, f"{algo} round outputs diverged"
-    for ch in COMM_CHANNELS:
-        assert getattr(m_seq, ch) == getattr(m_sh, ch), (algo, ch)
-
-
-def test_batched_engine_with_mesh_axis_matches_sequential():
-    """FLConfig.mesh_data_axis on engine="batched" opts into the same mesh
-    placement the sharded engine uses."""
-    w_seq, m_seq, s_seq = _run_round("fedavg", "sequential")
-    w_b, m_b, s_b = _run_round("fedavg", "batched",
-                               (("mesh_data_axis", "data"),))
-    assert s_seq == s_b
-    assert _max_diff(w_seq, w_b) <= 1e-5
-    for ch in COMM_CHANNELS:
-        assert getattr(m_seq, ch) == getattr(m_b, ch), ch
+from engine_parity import trainer as _trainer
 
 
 def test_unknown_engine_rejected():
@@ -146,6 +41,50 @@ def test_stack_plans_ghost_padding():
     assert same["images"].shape[0] == 3 and v2.shape[0] == 3
 
 
+def test_agg_matrix_zeroes_ghost_lanes():
+    """AggSpec.matrix pads ghost lanes with weight 0, so the in-jit reduce
+    needs no host-side prefix slice — and collapsed two-level specs fold
+    into one effective per-lane vector."""
+    from repro.core.plan import AggSpec
+
+    flat = AggSpec.flat([0.25, 0.75])
+    m = flat.matrix(4)
+    assert m.shape == (4,)
+    np.testing.assert_allclose(m, [0.25, 0.75, 0.0, 0.0])
+    two = AggSpec(groups=((0, 1), (2,)), lane_weights=(0.5, 0.5, 1.0),
+                  group_weights=None)
+    np.testing.assert_allclose(
+        two.matrix(4), [[0.5, 0.5, 0.0, 0.0], [0.0, 0.0, 1.0, 0.0]])
+    coll = AggSpec(groups=((0, 1), (2,)), lane_weights=(0.5, 0.5, 1.0),
+                   group_weights=(0.4, 0.6))
+    np.testing.assert_allclose(coll.matrix(3), [0.2, 0.2, 0.6])
+    with pytest.raises(ValueError, match="pad_to"):
+        flat.matrix(1)
+
+
+def test_round_plan_validates_group_chain():
+    """A seeded group needs its predecessor's AggSpec (engines index the
+    previous AGGREGATE stack); an unseeded group after an agg-less group is
+    legal (it just broadcasts the global model)."""
+    from repro.core.plan import AggSpec, Hop, RoundPlan, VisitGroup
+
+    plan = np.zeros((1, 4), np.int64)
+    train = VisitGroup(hops=(Hop((0,), (plan,)),))               # agg=None
+    final = VisitGroup(hops=(Hop((0,), (plan,)),),
+                       agg=AggSpec.flat([1.0]))
+    seeded = VisitGroup(hops=(Hop((0,), (plan,)),), seed=(0,),
+                        agg=AggSpec.flat([1.0]))
+    RoundPlan(groups=(train, final))                # unseeded after agg-less
+    with pytest.raises(ValueError, match="missing previous aggregate"):
+        RoundPlan(groups=(train, seeded))
+    with pytest.raises(ValueError, match="group 0"):
+        RoundPlan(groups=(seeded,))
+    with pytest.raises(ValueError, match="collapse"):
+        RoundPlan(groups=(train,))                  # final must collapse
+    with pytest.raises(ValueError, match="hop"):
+        RoundPlan(groups=(VisitGroup(hops=()),))
+
+
 def test_make_sim_mesh_caps_at_fleet_size():
     import jax
     from repro.launch.mesh import make_sim_mesh
@@ -154,16 +93,6 @@ def test_make_sim_mesh_caps_at_fleet_size():
     assert mesh.axis_names == ("clients",)
     assert 1 <= mesh.shape["clients"] <= min(64, len(jax.devices()))
     assert make_sim_mesh(1).shape["data"] == 1
-
-
-def test_host_mesh_shape_strands_no_devices():
-    from repro.launch.mesh import _host_mesh_shape
-
-    for n in range(1, 13):
-        data, model = _host_mesh_shape(n)
-        assert data * model == n, f"{n} devices -> ({data},{model}) strands"
-    assert _host_mesh_shape(4) == (2, 2)
-    assert _host_mesh_shape(5) == (5, 1)        # was (2,2): dropped a device
 
 
 def test_train_many_rejects_indivisible_cohort():
@@ -186,54 +115,11 @@ def test_train_many_rejects_indivisible_cohort():
             np.zeros(3), batches, valid, lr=0.05, broadcast=True, mesh=mesh)
 
 
-# ---------------------------------------------------------------------------
-# multi-device: the same parity matrix under 8 faked host devices
+def test_host_mesh_shape_strands_no_devices():
+    from repro.launch.mesh import _host_mesh_shape
 
-
-def _parity_payload():
-    """Executed by the subprocess: parity of sequential vs sharded for every
-    case at the forced device count; one JSON line on stdout."""
-    import jax
-
-    out = {"ndev": len(jax.devices()), "cases": {}}
-    for algo, ov in CASES:
-        w_seq, m_seq, s_seq = _run_round(algo, "sequential",
-                                         tuple(ov.items()), rounds=1)
-        w_sh, m_sh, s_sh = _run_round(algo, "sharded",
-                                      tuple(ov.items()), rounds=1)
-        out["cases"]["/".join([algo] + [f"{k}={v}" for k, v in ov.items()])] = {
-            "max_diff": _max_diff(w_seq, w_sh),
-            "meters_equal": all(getattr(m_seq, c) == getattr(m_sh, c)
-                                for c in COMM_CHANNELS),
-            "rng_equal": s_seq == s_sh,
-            "p2p": m_sh.p2p,
-        }
-    print(json.dumps(out))
-
-
-def test_sharded_parity_on_8_fake_devices():
-    """One FedSR round (plus the other six algorithms and two ghost-padded
-    participation cases) on 8 faked host devices: the tier-1 guarantee that
-    multi-device sharding is exercised in CPU-only CI."""
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
-                         + env.get("PYTHONPATH", ""))
-    proc = subprocess.run(
-        [sys.executable, os.path.abspath(__file__)],
-        cwd=root, env=env, capture_output=True, text=True, timeout=900)
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    data = json.loads(proc.stdout.strip().splitlines()[-1])
-    assert data["ndev"] == 8, data
-    assert len(data["cases"]) == len(CASES)
-    for name, r in data["cases"].items():
-        assert r["rng_equal"], name
-        assert r["meters_equal"], name
-        assert r["max_diff"] <= 1e-5, (name, r["max_diff"])
-    # corrected ring meter on the fully-sharded path: M*(R*(Q-1)+(R-1))
-    assert data["cases"]["fedsr"]["p2p"] == 2 * (2 * 3 + 1)
-
-
-if __name__ == "__main__":
-    _parity_payload()
+    for n in range(1, 13):
+        data, model = _host_mesh_shape(n)
+        assert data * model == n, f"{n} devices -> ({data},{model}) strands"
+    assert _host_mesh_shape(4) == (2, 2)
+    assert _host_mesh_shape(5) == (5, 1)        # was (2,2): dropped a device
