@@ -9,11 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 from repro.configs.base import FLConfig
 from repro.configs.registry import get_config
-from repro.core.executor import ExperimentResult, run_experiment
+from repro.core.executor import run_experiment
 
 MLP = get_config("fedsr-mlp")
 CNN = get_config("fedsr-cnn")

@@ -12,8 +12,6 @@ projected TPU v5e step time from the dry-run; derived = dominant term.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import sys
 
 
@@ -89,12 +87,14 @@ def run_roofline() -> None:
 
 def run_smoke() -> None:
     """Seconds-fast CI path (--smoke): exercises every entrypoint wiring —
-    one kernel micro-bench, the engine A/Bs (batched and sharded) at reduced
-    size, and one tiny FL round per engine — so the benchmark drivers can't
-    silently rot. Invoked from tier-1 (tests/test_benchmarks_smoke.py)."""
+    one kernel micro-bench, the engine A/Bs (batched/sharded/fused, the
+    one-dispatch round and the chunked schedule block) at reduced size, and
+    one tiny FL round per engine — so the benchmark drivers can't silently
+    rot. Invoked from tier-1 (tests/test_benchmarks_smoke.py)."""
     from benchmarks.kernel_bench import (
         bench_fedsr_onedispatch, bench_fl_engines, bench_fl_engines_fused,
-        bench_fl_engines_sharded, bench_fused_sgd, bench_ring_round_fedsr,
+        bench_fl_engines_sharded, bench_fl_schedule_chunked, bench_fused_sgd,
+        bench_ring_round_fedsr,
     )
 
     name, us, derived = bench_fused_sgd()
@@ -110,6 +110,10 @@ def run_smoke() -> None:
     _emit(f"kernel/{name}", us, derived)
     name, us, derived = bench_fedsr_onedispatch(num_devices=8, ring_rounds=2,
                                                 num_edges=2, iters=1)
+    _emit(f"kernel/{name}", us, derived)
+    name, us, derived = bench_fl_schedule_chunked(num_devices=8,
+                                                  ring_rounds=2, num_edges=2,
+                                                  block=4, iters=1)
     _emit(f"kernel/{name}", us, derived)
 
     from repro.configs import get_config

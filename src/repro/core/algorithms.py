@@ -17,18 +17,29 @@ per-engine discipline. Algorithms with memory (MOON's previous locals,
 SCAFFOLD's control variates) request the final group's per-lane models
 (``keep_locals``) and fold them back into ``state`` in ``update_state``.
 
-``run_round(w_glob, t, lr, rng, meter, state)`` is the driver every
-executor/benchmark calls: plan -> engine.run -> meter from plan.comm ->
-state update. Plans reference the global model only through the ``GLOBAL``
-sentinel, so ``w_glob`` stays device-resident across rounds — with the
-engines' in-jit aggregation there is no per-round unstack/host/restack of
-model trees at all.
+``run_round(w_glob, t, lr, rng, meter, state)`` is the per-round driver
+(benchmarks, parity tests): plan -> engine.run -> meter from plan.comm ->
+state update. ``run_schedule(w_glob, t0, lrs, rng, meter, state)`` is the
+chunked driver the executor uses: it pre-plans ``len(lrs)`` rounds into a
+``Schedule`` (same RNG order — plans reference state only through
+``StateRef`` sentinels, so round r+1 can be planned before round r runs)
+and hands the whole block to the engine; under the fused engine an
+eval-to-eval block is ONE compiled dispatch. Plans reference the global
+model only through the ``GLOBAL`` sentinel, so ``w_glob`` stays
+device-resident across rounds — with the engines' in-jit aggregation
+there is no per-round unstack/host/restack of model trees at all.
+
+Algorithm memory (MOON's previous locals, SCAFFOLD's control variates) is
+device-resident (``core.state``): a (K + 1, ...) client stack plus a host
+``seen`` mask, updated by the same pure function whether the driver steps
+round-by-round or the fused engine scans a whole block.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
@@ -36,11 +47,17 @@ from repro.core.comm import CommMeter
 from repro.core.engines import make_engine
 from repro.core.local import LocalTrainer
 from repro.core.plan import (
-    GLOBAL, ZEROS, AggSpec, Hop, RoundPlan, RoundResult, VisitGroup,
+    GLOBAL, AggSpec, Hop, RoundPlan, RoundResult, Schedule, StateRef,
+    VisitGroup,
 )
 from repro.core.ring import ring_lap_hops
+from repro.core.state import (
+    client_stack, pack_client_rows, scaffold_step, scatter_rows,
+    unpack_client_rows,
+)
 from repro.core.topology import assign_edges, clusters_of, sample_ring
 from repro.data.pipeline import ClientData, plan_epoch_indices
+from repro.utils.tree import tree_stack, tree_zeros_like
 
 Pytree = Any
 
@@ -59,16 +76,44 @@ class _Planner:
         self.engine = make_engine(trainer, clients, fl)
         self.edges = assign_edges(fl.num_devices, fl.num_edges)
 
-    # -- the one execution driver (identical for every algorithm) --------
+    # -- the two execution drivers (identical for every algorithm) -------
     def run_round(self, w_glob, t, lr, rng: np.random.Generator,
                   meter: CommMeter, state: Dict) -> Tuple[Pytree, Dict]:
         plan = self.plan_round(t, rng, state)
-        result = self.engine.run(plan, w_glob, lr)
+        self.ensure_state(state, w_glob)
+        result = self.engine.run(plan, w_glob, lr, state)
         if meter is not None:
             for channel, count in plan.comm:
                 meter.record(channel, count)
         self.update_state(plan, w_glob, result, lr, state)
         return result.w_glob, state
+
+    def run_schedule(self, w_glob, t0, lrs, rng: np.random.Generator,
+                     meter: CommMeter, state: Dict) -> Tuple[Pytree, Dict]:
+        """The chunked driver's block step: pre-plan ``len(lrs)`` rounds
+        (consuming the RNG stream exactly as ``len(lrs)`` ``run_round``
+        calls would) and execute them through the engine's block runner —
+        a python loop of rounds everywhere except the fused engine, where
+        the whole block is one compiled dispatch. Comm is applied from the
+        block's summed closed-form records."""
+        sched = self.plan_schedule(t0, len(lrs), rng, state)
+        self.ensure_state(state, w_glob)
+        w_glob = self.engine.run_schedule(sched, w_glob, lrs, state,
+                                          self.update_state)
+        if meter is not None:
+            for channel, count in sched.comm:
+                meter.record(channel, count)
+        return w_glob, state
+
+    def plan_schedule(self, t0: int, n: int, rng: np.random.Generator,
+                      state: Dict) -> Schedule:
+        """``n`` rounds of plans, drawn in the per-round RNG order."""
+        plans = tuple(self.plan_round(t0 + k, rng, state) for k in range(n))
+        totals: Dict[str, int] = {}
+        for plan in plans:
+            for channel, count in plan.comm:
+                totals[channel] = totals.get(channel, 0) + count
+        return Schedule(plans=plans, comm=tuple(sorted(totals.items())))
 
     def plan_round(self, t: int, rng: np.random.Generator,
                    state: Dict) -> RoundPlan:
@@ -77,6 +122,20 @@ class _Planner:
     def update_state(self, plan: RoundPlan, w_before: Pytree,
                      result: RoundResult, lr: float, state: Dict) -> None:
         pass
+
+    # -- device-resident algorithm state (core.state) --------------------
+    def ensure_state(self, state: Dict, w_glob: Pytree) -> None:
+        """Initialize the algorithm's state carriers (needs the model
+        shape, so it cannot happen at construction)."""
+
+    def state_to_ckpt(self, state: Dict) -> Dict:
+        """State carry -> the per-client-id dict layout of
+        ``algo_state.msgpack`` (stable since PR 4)."""
+        return dict(state)
+
+    def state_from_ckpt(self, ck: Dict, w_glob: Pytree) -> Dict:
+        """Inverse of ``state_to_ckpt`` over a restored checkpoint."""
+        return dict(ck)
 
     # -- planning helpers ------------------------------------------------
     def _batch_plan(self, i: int, rng: np.random.Generator) -> np.ndarray:
@@ -138,7 +197,8 @@ class FedAvg(_Planner):
 
     def _extra_specs(self, ids, state) -> Tuple[Dict, Dict]:
         """(shared, per-lane) extras of one cohort visit; values may use
-        the GLOBAL/ZEROS sentinels — engines resolve them at run time."""
+        the GLOBAL/StateRef sentinels — engines resolve them at run
+        time, so a whole Schedule can be planned up front."""
         return {}, {}
 
 
@@ -151,21 +211,40 @@ class FedProx(FedAvg):
 
 
 class Moon(FedAvg):
-    """Li et al. 2021 — model-contrastive loss. state["prev"][i] holds the
-    previous local model of client i (initialized to the global model)."""
+    """Li et al. 2021 — model-contrastive loss. state["prev"] is the
+    (K + 1, ...) stack of previous local models (``core.state``); a client
+    that has not trained yet contrasts against the current global model
+    (``StateRef.fallback_global`` + the host ``seen`` mask)."""
     variant = "moon"
     keep_locals = True
 
     def _extra_specs(self, ids, state):
-        prev = state.setdefault("prev", {})
         return ({"w_glob": GLOBAL},
-                {"w_prev": tuple(prev.get(i, GLOBAL) for i in ids)})
+                {"w_prev": tuple(StateRef("prev", i, fallback_global=True)
+                                 for i in ids)})
+
+    def ensure_state(self, state, w_glob):
+        if "prev" not in state:
+            state["prev"] = client_stack(w_glob, self.fl.num_devices)
+            state["seen"] = np.zeros(self.fl.num_devices + 1, bool)
 
     def update_state(self, plan, w_before, result, lr, state):
-        ids = plan.groups[0].hops[0].ids
-        prev = state.setdefault("prev", {})
-        for i, w in zip(ids, result.locals_):
-            prev[i] = w
+        ids = np.asarray(plan.groups[0].hops[0].ids, np.int32)
+        state["prev"] = scatter_rows(state["prev"], jnp.asarray(ids),
+                                     tree_stack(result.locals_))
+        state["seen"][ids] = True
+
+    def state_to_ckpt(self, state):
+        if "prev" not in state:
+            return {}
+        return {"prev": pack_client_rows(state["prev"], state["seen"])}
+
+    def state_from_ckpt(self, ck, w_glob):
+        state: Dict = {}
+        if ck.get("prev"):
+            state["prev"], state["seen"] = unpack_client_rows(
+                ck["prev"], w_glob, self.fl.num_devices)
+        return state
 
 
 class Scaffold(_Planner):
@@ -173,8 +252,10 @@ class Scaffold(_Planner):
     cites SCAFFOLD [11] as the canonical variance-reduction answer to client
     drift; included as an extra baseline beyond the paper's own table.
 
-    state["c"] = server control variate; state["ci"][i] = client i's.
-    Option II update for c_i: c_i+ = c_i - c + (w_glob - w_i)/(K_i * lr).
+    state["c"] = server control variate; state["ci"] = the (K + 1, ...)
+    client-variate stack (``core.state``; never-trained rows are the zeros
+    the algorithm initializes c_i to). Option II update for c_i:
+    c_i+ = c_i - c + (w_glob - w_i)/(K_i * lr).
     """
     variant = "scaffold"
     keep_locals = True
@@ -182,42 +263,51 @@ class Scaffold(_Planner):
     def plan_round(self, t, rng, state):
         ids = self._sample(rng)
         plans = tuple(self._batch_plan(i, rng) for i in ids)
-        c = state.get("c", ZEROS)
-        ci_map = state.get("ci", {})
         group = VisitGroup(
             hops=(Hop(tuple(ids), plans),), variant="scaffold",
-            shared_extras={"c_glob": c},
-            stacked_extras={"c_local": tuple(ci_map.get(i, ZEROS)
+            shared_extras={"c_glob": StateRef("c")},
+            stacked_extras={"c_local": tuple(StateRef("ci", i)
                                              for i in ids)},
             agg=AggSpec.flat(self._weights(ids)), keep_locals=True)
         n = 2 * len(ids)                    # model + control variate
         return RoundPlan(groups=(group,),
                          comm=(("cloud_down", n), ("cloud_up", n)))
 
-    def update_state(self, plan, w_before, result, lr, state):
-        from repro.utils.tree import (
-            tree_sub, tree_weighted_sum, tree_zeros_like,
-        )
+    def ensure_state(self, state, w_glob):
+        if "c" not in state:
+            state["c"] = tree_zeros_like(w_glob)
+            state["ci"] = client_stack(w_glob, self.fl.num_devices)
+            state["seen"] = np.zeros(self.fl.num_devices + 1, bool)
 
-        c = state.setdefault("c", tree_zeros_like(w_before))
-        ci_map = state.setdefault("ci", {})
-        ids = plan.groups[0].hops[0].ids
-        steps = plan.groups[0].lane_steps()
-        delta_cs = []
-        for lane, i in enumerate(ids):
-            ci = ci_map.get(i, tree_zeros_like(w_before))
-            k = float(max(steps[lane], 1))
-            ci_new = jax.tree.map(
-                lambda cio, co, wg, wi, k=k: cio - co + (wg - wi) / (k * lr),
-                ci, c, w_before, result.locals_[lane],
-            )
-            delta_cs.append(tree_sub(ci_new, ci))
-            ci_map[i] = ci_new
-        # c += (participants/K) * mean(delta_c)
-        mean_dc = tree_weighted_sum(
-            delta_cs, [1.0 / len(delta_cs)] * len(delta_cs))
-        frac = len(ids) / self.fl.num_devices
-        state["c"] = jax.tree.map(lambda a, b: a + frac * b, c, mean_dc)
+    def update_state(self, plan, w_before, result, lr, state):
+        grp = plan.groups[0]
+        ids = np.asarray(grp.hops[0].ids, np.int32)
+        # K_i * lr per lane, f32-rounded on the host — the fused block
+        # scan ships the identical precomputed divisors, so chunked and
+        # per-round stay bit-exact
+        kl = np.asarray([max(k, 1) * lr for k in grp.lane_steps()],
+                        np.float32)
+        mw = np.full(len(ids), 1.0 / len(ids), np.float32)
+        frac = np.float32(len(ids) / self.fl.num_devices)
+        state["c"], state["ci"] = scaffold_step(
+            state["c"], state["ci"], jnp.asarray(ids),
+            tree_stack(result.locals_), w_before, jnp.asarray(kl),
+            jnp.asarray(mw), frac)
+        state["seen"][ids] = True
+
+    def state_to_ckpt(self, state):
+        if "c" not in state:
+            return {}
+        return {"c": state["c"],
+                "ci": pack_client_rows(state["ci"], state["seen"])}
+
+    def state_from_ckpt(self, ck, w_glob):
+        state: Dict = {}
+        if "c" in ck:
+            state["c"] = jax.tree.map(jnp.asarray, ck["c"])
+            state["ci"], state["seen"] = unpack_client_rows(
+                ck.get("ci") or {}, w_glob, self.fl.num_devices)
+        return state
 
 
 class HierFAVG(_Planner):
@@ -331,6 +421,13 @@ class Centralized(_Planner):
         w = self.trainer.train(w_glob, self.pool, lr=lr,
                                epochs=self.fl.local_epochs, rng=rng)
         return w, state
+
+    def run_schedule(self, w_glob, t0, lrs, rng, meter, state):
+        # no plan to pre-draw: a block is just the per-round loop
+        for k, lr in enumerate(lrs):
+            w_glob, state = self.run_round(w_glob, t0 + k, float(lr), rng,
+                                           meter, state)
+        return w_glob, state
 
 
 ALGORITHMS = {

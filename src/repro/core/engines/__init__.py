@@ -23,6 +23,12 @@ applied from the plan, not the execution path.
   is int32 index plans, and a whole visit group — broadcast, H-hop ring
   scan, weighted cloud reduce — compiles to ONE dispatch
   (``train_many_fused``). ``FLConfig.mesh_data_axis`` composes.
+
+Every engine also exposes ``run_schedule`` over the Schedule IR
+(``core.plan.Schedule``): a per-round reference loop on the base class,
+overridden by the fused engine with ONE compiled dispatch per
+eval-to-eval block (``LocalTrainer.train_schedule`` — a ``lax.scan`` over
+rounds carrying ``(w_glob, algo_state)``).
 """
 from __future__ import annotations
 

@@ -1,10 +1,15 @@
-"""Shared engine plumbing: GLOBAL resolution, group output unpacking."""
+"""Shared engine plumbing: GLOBAL/StateRef resolution, group unpacking,
+and the per-round reference implementation of the Schedule block driver."""
 from __future__ import annotations
 
 from typing import Any, List, Optional, Tuple
 
+import jax
+
 from repro.configs.base import FLConfig
-from repro.core.plan import GLOBAL, ZEROS, RoundPlan, RoundResult, VisitGroup
+from repro.core.plan import (
+    GLOBAL, RoundPlan, RoundResult, Schedule, StateRef, VisitGroup,
+)
 
 Pytree = Any
 
@@ -17,6 +22,9 @@ class Engine:
     the final group's collapsed aggregate as the round output. Engines
     never touch the comm meter (the driver applies ``plan.comm``) and
     never draw from the RNG stream (planners pre-draw every batch plan).
+    ``state`` is the algorithm's device-resident memory (``core.state``):
+    plans reference it only through ``StateRef`` sentinels, resolved here
+    at run time.
     """
 
     def __init__(self, trainer, clients: List, fl: FLConfig):
@@ -27,19 +35,25 @@ class Engine:
         self.mesh = None
 
     @staticmethod
-    def _resolve(value, w_glob: Pytree) -> Pytree:
+    def _resolve(value, w_glob: Pytree, state=None) -> Pytree:
         if value is GLOBAL:
             return w_glob
-        if value is ZEROS:
-            from repro.utils.tree import tree_zeros_like
-            return tree_zeros_like(w_glob)
+        if isinstance(value, StateRef):
+            if value.fallback_global and not bool(
+                    state["seen"][value.client]):
+                return w_glob       # client has no row yet (MOON round 1)
+            entry = state[value.field]
+            if value.client < 0:
+                return entry        # a single unstacked tree (SCAFFOLD c)
+            return jax.tree.map(lambda x: x[value.client], entry)
         return value
 
-    def run(self, plan: RoundPlan, w_glob: Pytree, lr: float) -> RoundResult:
+    def run(self, plan: RoundPlan, w_glob: Pytree, lr: float,
+            state=None) -> RoundResult:
         result = RoundResult(w_glob)
         prev = None     # previous group's (G, ...) aggregate(s)
         for grp in plan.groups:
-            agg_out, locals_ = self._run_group(grp, w_glob, prev, lr)
+            agg_out, locals_ = self._run_group(grp, w_glob, prev, lr, state)
             prev = agg_out if agg_out is not None else locals_
             if grp.agg is not None and grp.agg.collapsed:
                 result.w_glob = agg_out
@@ -47,7 +61,21 @@ class Engine:
                 result.locals_ = self._unstack_locals(locals_, grp.lanes)
         return result
 
-    def _run_group(self, grp: VisitGroup, w_glob: Pytree, prev, lr
+    def run_schedule(self, sched: Schedule, w_glob: Pytree, lrs, state,
+                     update_fn) -> Pytree:
+        """Reference block driver: one ``run`` per plan, threading the
+        global model and applying the algorithm's state update
+        (``update_fn(plan, w_before, result, lr, state)``) between rounds
+        — per-round semantics behind the block API. The fused engine
+        overrides this with ONE compiled dispatch per block."""
+        for plan, lr in zip(sched.plans, lrs):
+            lr = float(lr)
+            result = self.run(plan, w_glob, lr, state)
+            update_fn(plan, w_glob, result, lr, state)
+            w_glob = result.w_glob
+        return w_glob
+
+    def _run_group(self, grp: VisitGroup, w_glob: Pytree, prev, lr, state
                    ) -> Tuple[Optional[Pytree], Optional[Pytree]]:
         """Execute one visit group; returns ``(aggregate, locals)`` —
         either may be None depending on the group's agg/keep_locals."""

@@ -47,15 +47,16 @@ class BatchedEngine(Engine):
         from repro.launch.mesh import round_up_to_mesh
         return round_up_to_mesh(c, self.mesh, self.data_axis)
 
-    def _extras_kwargs(self, grp: VisitGroup, w_glob, padded: int) -> dict:
+    def _extras_kwargs(self, grp: VisitGroup, w_glob, padded: int,
+                       state) -> dict:
         """Resolve the plan's extras for ``train_many``: shared trees stay
         single (broadcast inside the jit), per-lane lists stack along the
         client axis, ghost lanes padded with the global model (they never
         train, so any well-shaped tree serves)."""
-        kw = {k: self._resolve(v, w_glob)
+        kw = {k: self._resolve(v, w_glob, state)
               for k, v in grp.shared_extras.items()}
         for k, vals in grp.stacked_extras.items():
-            lanes = [self._resolve(v, w_glob) for v in vals]
+            lanes = [self._resolve(v, w_glob, state) for v in vals]
             kw[k] = tree_stack(lanes + [w_glob] * (padded - len(lanes)))
         return kw
 
@@ -75,11 +76,11 @@ class BatchedEngine(Engine):
         return out, None
 
     # -- plan interpretation --------------------------------------------
-    def _run_group(self, grp: VisitGroup, w_glob, prev, lr):
+    def _run_group(self, grp: VisitGroup, w_glob, prev, lr, state):
         padded = self._pad(grp.lanes)
         kw = dict(lr=lr, variant=grp.variant, mesh=self.mesh,
                   data_axis=self.data_axis,
-                  **self._extras_kwargs(grp, w_glob, padded))
+                  **self._extras_kwargs(grp, w_glob, padded, state))
         aggm = grp.agg.matrix(padded) if grp.agg is not None else None
         keep = grp.keep_locals
         hops = grp.hops

@@ -1,4 +1,5 @@
-"""Fused engine: a whole visit group as ONE compiled dispatch.
+"""Fused engine: a whole visit group — or a whole block of rounds — as ONE
+compiled dispatch.
 
 The batched schedule against a device-resident data plane
 (``DeviceDataPlane``): client shards upload once per experiment, a visit
@@ -10,13 +11,23 @@ R laps, cloud aggregation, eq. 11) is therefore literally one dispatch;
 star cohorts are the H=1 special case. ``FLConfig.mesh_data_axis``
 composes: the plane's flat sample axis and the lane axis both shard over
 the sim mesh.
+
+``run_schedule`` lifts the same trick one level up the Schedule IR: the
+plans of an eval-to-eval block stack along a leading round axis (ghost
+lanes / invalid hops / invalid steps pad rounds whose participation drew
+different shapes) and ``LocalTrainer.train_schedule`` scans the block with
+``(w_glob, algo_state)`` as the carry — so a block of ``eval_every`` FedSR
+rounds, or a HierFAVG round's R chained edge iterations (times n rounds),
+is ONE compiled dispatch instead of one per round (or per iteration).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core.engines.batched import BatchedEngine
-from repro.core.plan import VisitGroup
+from repro.core.plan import Schedule, VisitGroup
 from repro.data.pipeline import DeviceDataPlane, stack_plan_indices
 
 
@@ -35,11 +46,11 @@ class FusedEngine(BatchedEngine):
                 self.clients, mesh=self.mesh, data_axis=self.data_axis)
         return self._plane
 
-    def _run_group(self, grp: VisitGroup, w_glob, prev, lr):
+    def _run_group(self, grp: VisitGroup, w_glob, prev, lr, state):
         padded = self._pad(grp.lanes)
         kw = dict(lr=lr, variant=grp.variant, mesh=self.mesh,
                   data_axis=self.data_axis,
-                  **self._extras_kwargs(grp, w_glob, padded))
+                  **self._extras_kwargs(grp, w_glob, padded, state))
         aggm = grp.agg.matrix(padded) if grp.agg is not None else None
         keep = grp.keep_locals
         # every hop pads to the group-global max step count S so the hop
@@ -61,3 +72,125 @@ class FusedEngine(BatchedEngine):
             np.stack(valid), broadcast=broadcast, agg=aggm,
             keep_locals=keep, **kw)
         return self._unpack(out, aggm is not None, keep)
+
+    # -- the Schedule block dispatch ------------------------------------
+    def run_schedule(self, sched: Schedule, w_glob, lrs, state, update_fn):
+        plans = sched.plans
+        if not plans or not plans[0].groups:
+            return w_glob       # ring_rounds=0: rounds leave w unchanged
+        hier = len(plans[0].groups) > 1
+        variant = plans[0].groups[0].variant
+        xs = (self._stack_hier_schedule(plans, lrs) if hier
+              else self._stack_cohort_schedule(plans, lrs, variant, state))
+        carry = {}
+        if variant == "moon":
+            carry = {"prev": state["prev"]}
+        elif variant == "scaffold":
+            carry = {"c": state["c"], "ci": state["ci"]}
+        w_glob, carry = self.trainer.train_schedule(
+            w_glob, self.plane, xs, carry, variant=variant, hier=hier,
+            mesh=self.mesh, data_axis=self.data_axis)
+        if variant in ("moon", "scaffold"):
+            state.update(carry)
+            # participation is planner-drawn, so the seen mask advances
+            # host-side — no device readback
+            for plan in plans:
+                ids = np.asarray(plan.groups[0].hops[0].ids)
+                state["seen"][ids] = True
+        return w_glob
+
+    def _schedule_dims(self, groups):
+        """(lane pad, hop pad, step pad, batch width) over a block's
+        groups — ghost lanes / all-invalid hops / invalid steps make the
+        per-round shapes stack along one uniform round axis."""
+        Cp = self._pad(max(g.lanes for g in groups))
+        H = max(len(g.hops) for g in groups)
+        S = max(p.shape[0] for g in groups for hop in g.hops
+                for p in hop.plans if p is not None)
+        B = next(p.shape[1] for g in groups for hop in g.hops
+                 for p in hop.plans if p is not None)
+        return Cp, H, S, B
+
+    def _stack_cohort_schedule(self, plans, lrs, variant, state):
+        """Stack a block of single-group plans along the round axis, plus
+        the variant's state-carry lanes (``core.state``): per-lane client
+        ids (ghosts -> the dump row K), MOON's host-precomputed
+        prev-vs-global masks, SCAFFOLD's f32-rounded K_i*lr divisors and
+        masked mean weights."""
+        K = self.fl.num_devices
+        groups = [p.groups[0] for p in plans]
+        n = len(groups)
+        Cp, H, S, B = self._schedule_dims(groups)
+        rows = np.zeros((n, H, Cp), np.int32)
+        idx = np.zeros((n, H, Cp, S, B), np.int32)
+        valid = np.zeros((n, H, Cp, S), bool)
+        aggv = np.zeros((n, Cp), np.float32)
+        ids = np.full((n, Cp), K, np.int32)
+        for r, g in enumerate(groups):
+            for h, hop in enumerate(g.hops):
+                rw, ix, vl = stack_plan_indices(
+                    list(hop.plans), list(hop.ids), pad_to=Cp, steps=S)
+                rows[r, h], idx[r, h], valid[r, h] = rw, ix, vl
+            # hops past len(g.hops) stay all-invalid: every lane carried
+            # unchanged, exactly the ring-tail rule
+            aggv[r] = g.agg.matrix(Cp)
+            ids[r, :g.lanes] = g.hops[0].ids
+        xs = {"rows": rows, "plans": idx, "valid": valid,
+              "lr": np.asarray(lrs, np.float32), "aggv": aggv}
+        if variant == "moon":
+            seen = np.asarray(state["seen"]).copy()
+            use_prev = np.zeros((n, Cp), bool)
+            for r, g in enumerate(groups):
+                lane_ids = np.asarray(g.hops[0].ids)
+                use_prev[r, :g.lanes] = seen[lane_ids]
+                seen[lane_ids] = True
+            xs.update(ids=ids, use_prev=use_prev)
+        elif variant == "scaffold":
+            kl = np.ones((n, Cp), np.float32)
+            mw = np.zeros((n, Cp), np.float32)
+            frac = np.zeros(n, np.float32)
+            for r, g in enumerate(groups):
+                steps = g.lane_steps()
+                kl[r, :g.lanes] = np.asarray(
+                    [max(k, 1) * float(lrs[r]) for k in steps], np.float32)
+                mw[r, :g.lanes] = 1.0 / g.lanes
+                frac[r] = g.lanes / K
+            xs.update(ids=ids, kl=kl, mw=mw, frac=frac)
+        return xs
+
+    def _stack_hier_schedule(self, plans, lrs):
+        """Stack a block of HierFAVG plans: each round's R chained edge
+        iterations become an iteration axis inside the round axis. The
+        per-iteration (G, C) edge reduce (``wg``) seeds the next
+        iteration's lanes inside the scan; the final iteration applies the
+        collapsed cloud vector (``aggv``) exactly as the per-round engine
+        would."""
+        n = len(plans)
+        R = len(plans[0].groups)
+        groups = [g for p in plans for g in p.groups]
+        Cp, _, S, B = self._schedule_dims(groups)
+        G = len(plans[0].groups[0].agg.groups)
+        rows = np.zeros((n, R, Cp), np.int32)
+        idx = np.zeros((n, R, Cp, S, B), np.int32)
+        valid = np.zeros((n, R, Cp, S), bool)
+        wg = np.zeros((n, G, Cp), np.float32)
+        seed = np.zeros((n, Cp), np.int32)
+        aggv = np.zeros((n, Cp), np.float32)
+        for r, plan in enumerate(plans):
+            for it, g in enumerate(plan.groups):
+                (hop,) = g.hops
+                rows[r, it], idx[r, it], valid[r, it] = stack_plan_indices(
+                    list(hop.plans), list(hop.ids), pad_to=Cp, steps=S)
+            first, last = plan.groups[0], plan.groups[-1]
+            # the un-collapsed (G, C) per-edge reduce, applied after every
+            # iteration but the last (ghost lanes weigh 0 in every row)
+            wg[r] = dataclasses.replace(
+                first.agg, group_weights=None).matrix(Cp)
+            aggv[r] = last.agg.matrix(Cp)
+            if R > 1:
+                seed[r, :last.lanes] = last.seed
+            # ghost lanes seed from row 0 (weight 0, never trained) — same
+            # rule as _seed_stack
+        return {"rows": rows, "plans": idx, "valid": valid,
+                "lr": np.asarray(lrs, np.float32), "wg": wg,
+                "seed": seed, "aggv": aggv}

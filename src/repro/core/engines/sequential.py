@@ -16,14 +16,14 @@ from repro.utils.tree import tree_weighted_sum
 
 class SequentialEngine(Engine):
 
-    def _run_group(self, grp, w_glob, prev, lr):
-        shared = {k: self._resolve(v, w_glob)
+    def _run_group(self, grp, w_glob, prev, lr, state):
+        shared = {k: self._resolve(v, w_glob, state)
                   for k, v in grp.shared_extras.items()}
         lane_out = []
         for c in range(grp.lanes):
             kw = dict(shared)
             for k, vals in grp.stacked_extras.items():
-                kw[k] = self._resolve(vals[c], w_glob)
+                kw[k] = self._resolve(vals[c], w_glob, state)
             w = w_glob if grp.seed is None else prev[grp.seed[c]]
             for hop in grp.hops:
                 if hop.plans[c] is None:        # ring-tail: carried unchanged

@@ -6,6 +6,14 @@ planners reference it only through the GLOBAL sentinel and the engines
 aggregate in-jit (see ``core.plan``), so rounds chain device array ->
 device array with no host unstack/restack; the host only sees it at
 checkpoint time (``jax.device_get`` inside ``checkpoint.io.save``).
+
+The driver is *chunked* (PR 5): rounds run in eval-to-eval blocks —
+plan block -> run block -> eval -> record -> checkpoint — through
+``algo.run_schedule``, so the host re-enters the loop only at eval /
+checkpoint boundaries. Under the fused engine a whole block is ONE
+compiled dispatch (``core.plan.Schedule``); the block boundaries are
+computed from absolute round indices, so a resumed run re-aligns to the
+same blocks and stays bit-exact.
 """
 from __future__ import annotations
 
@@ -32,11 +40,18 @@ Pytree = Any
 
 @dataclasses.dataclass
 class RoundRecord:
+    """One eval point. ``seconds`` covers the wall time since the PREVIOUS
+    record (the whole block of ``rounds`` rounds plus this eval), not just
+    the final round — under ``eval_every > 1`` the old per-round timing
+    silently dropped all but the last round's cost. ``rounds`` is the
+    round count the record covers (old checkpoints default to 1)."""
+
     round: int
     accuracy: float
     comm: Dict[str, int]
     lr: float
     seconds: float
+    rounds: int = 1
 
 
 @dataclasses.dataclass
@@ -110,31 +125,52 @@ def run_experiment(
             history = [RoundRecord(**h) for h in ck.get("history", [])]
             # algorithm memory (MOON's prev locals, SCAFFOLD's control
             # variates) resumes too — dropping it silently resets those
-            # algorithms to round-0 behaviour mid-run
-            state = ck.get("state") or {}
+            # algorithms to round-0 behaviour mid-run. The msgpack layout
+            # is per-client-id dicts; the algorithm unpacks it into its
+            # device-resident carry (core.state)
+            state = algo.state_from_ckpt(ck.get("state") or {}, w_glob)
 
     test_images = jnp.asarray(test.images)
     test_labels = jnp.asarray(test.labels)
     acc_fn = jax.jit(lambda p: classifier_accuracy(p, test_images, test_labels, model_cfg))
-    for t in range(start_round, fl.rounds):
-        t0 = time.perf_counter()
-        lr = float(lr_fn(t))
-        w_glob, state = algo.run_round(w_glob, t, lr, rng, meter, state)
-        if (t + 1) % eval_every == 0 or t == fl.rounds - 1:
+
+    # chunked block driver: run to the next eval / checkpoint / stop
+    # boundary in ONE algo.run_schedule call (one compiled dispatch under
+    # the fused engine), then eval + record + checkpoint. Boundaries are
+    # absolute round indices, so a resumed run re-aligns to the same
+    # blocks regardless of where its checkpoint landed.
+    end = fl.rounds if stop_after is None else min(fl.rounds, stop_after)
+
+    def next_boundary(t: int) -> int:
+        stop = min(end, t - t % eval_every + eval_every)
+        if checkpoint_dir and checkpoint_every:
+            stop = min(stop, t - t % checkpoint_every + checkpoint_every)
+        return stop
+
+    t = start_round
+    last_time = time.perf_counter()
+    last_round = start_round
+    while t < end:
+        stop = next_boundary(t)
+        lrs = np.asarray([float(lr_fn(i)) for i in range(t, stop)])
+        w_glob, state = algo.run_schedule(w_glob, t, lrs, rng, meter, state)
+        t = stop
+        if t % eval_every == 0 or t == fl.rounds:
             acc = float(acc_fn(w_glob))
+            now = time.perf_counter()
             history.append(RoundRecord(
-                round=t + 1, accuracy=acc, comm=meter.snapshot(),
-                lr=lr, seconds=time.perf_counter() - t0,
+                round=t, accuracy=acc, comm=meter.snapshot(),
+                lr=float(lrs[-1]), seconds=now - last_time,
+                rounds=t - last_round,
             ))
+            last_time, last_round = now, t
             if not quiet:
-                print(f"  [{fl.algorithm:>12}] round {t+1:>3} "
-                      f"acc={acc:.4f} lr={lr:.5f} "
+                print(f"  [{fl.algorithm:>12}] round {t:>3} "
+                      f"acc={acc:.4f} lr={lrs[-1]:.5f} "
                       f"transfers={meter.total_transfers}")
-        if checkpoint_dir and checkpoint_every and (t + 1) % checkpoint_every == 0:
-            _save_checkpoint(checkpoint_dir, w_glob, t + 1, rng, meter,
-                             history, state)
-        if stop_after is not None and (t + 1) >= stop_after:
-            break
+        if checkpoint_dir and checkpoint_every and t % checkpoint_every == 0:
+            _save_checkpoint(checkpoint_dir, w_glob, t, rng, meter,
+                             history, algo.state_to_ckpt(state))
     return ExperimentResult(fl.algorithm, task, fl.partition, history,
                             final_model=w_glob)
 

@@ -33,6 +33,14 @@ rule through three entry points:
   carrying the model stack, so a whole ring lap sequence (R*K visits) is
   ONE compiled dispatch; the non-broadcast family donates the params stack
   to the computation (in-place update on accelerator backends).
+* ``train_schedule`` — one level further: a whole eval-to-eval BLOCK of
+  rounds as one compiled call. A ``lax.scan`` over the round axis carries
+  ``(w_glob, algo_state)`` — each round body broadcasts the carried
+  global, reruns the fused hop scan, contracts the round's aggregation
+  vector and updates the device-resident algorithm state (``core.state``)
+  in place. Per-round lr ships as one (n,) device array; HierFAVG's R
+  chained edge iterations run as an inner scan with the per-edge reduce
+  in the body.
 
 **In-jit aggregation** (``agg=``): both stacked entry points accept the
 reduction array of an ``AggSpec`` (see ``core.plan``) and contract it
@@ -93,6 +101,54 @@ def _tree_agg(stack, w):
     return jax.tree.map(
         lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=[[-1], [0]]),
         stack)
+
+
+def _tree_bcast(tree, n: int):
+    """Stack ``n`` copies of a tree along a new leading axis, in-jit."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+
+def _run_hops(vgrad, update, n_loss_extras, params, images, labels, offsets,
+              rows, plans, valid, lr, extras):
+    """The flat H*S-step gathered-SGD scan over one visit group, shared by
+    ``train_many_fused`` and the schedule dispatch (``train_schedule``).
+
+    ``params`` is the already-stacked (C, ...) lane stack; ``rows`` (H, C),
+    ``plans`` (H, C, S, B) and ``valid`` (H, C, S) index the device-resident
+    fleet arrays. The (hop, step) axes flatten into ONE scan: a nested
+    scan-in-scan pays per-hop setup (inner scan machinery, fresh zero
+    momentum buffers) every hop, which dominates in the dispatch-bound S=1
+    regime. Instead the momentum carry is zeroed by a per-step reset flag
+    wherever a new client visit begins — same math, one flat scan of H*S
+    gathered SGD steps. Returns the trained (C, ...) stack."""
+    H, _, S = valid.shape
+    flat_rows = jnp.repeat(rows, S, axis=0)
+    flat_ix = jnp.transpose(plans, (0, 2, 1, 3)).reshape(
+        (H * S,) + plans.shape[1:2] + plans.shape[3:])
+    flat_ok = jnp.transpose(valid, (0, 2, 1)).reshape(
+        H * S, -1).astype(jnp.float32)
+    reset = (jnp.arange(H * S) % S == 0).astype(jnp.float32)
+    m = jax.tree.map(jnp.zeros_like, params)
+
+    def body(carry, x):
+        pc, mc = carry
+        row_s, ix, ok, rs = x   # (C,), (C, B), (C,), scalar
+        mc = jax.tree.map(lambda mi: (1.0 - rs) * mi, mc)
+        # fleet row r, sample i -> flat row offsets[r] + i: ONE
+        # (C, B)-indexed gather per leaf, so a step reads C*B rows — a
+        # per-lane take-of-take would materialize (C, N_max, ...)
+        # intermediates and all-gather the sharded plane instead
+        gidx = jnp.take(offsets, row_s)[:, None] + ix
+        batch = {"images": jnp.take(images, gidx, axis=0),
+                 "labels": jnp.take(labels, gidx, axis=0)}
+        g = vgrad(pc, batch, *extras[:n_loss_extras])
+        return update(pc, mc, g, lr,
+                      *extras[n_loss_extras:], ok), None
+
+    (p, _), _ = jax.lax.scan(
+        body, (params, m), (flat_rows, flat_ix, flat_ok, reset))
+    return p
 
 
 class LocalTrainer:
@@ -223,10 +279,7 @@ class LocalTrainer:
                 aggm, extras = ((None, rest) if mode == "stack"
                                 else (rest[0], rest[1:]))
                 if broadcast_params:
-                    C = valid.shape[0]
-                    params = jax.tree.map(
-                        lambda x: jnp.broadcast_to(x[None], (C,) + x.shape),
-                        params)
+                    params = _tree_bcast(params, valid.shape[0])
                 m = jax.tree.map(jnp.zeros_like, params)
                 xs = (jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), batches),
                       jnp.moveaxis(valid, 0, 1).astype(jnp.float32))
@@ -278,44 +331,9 @@ class LocalTrainer:
                 aggm, extras = ((None, rest) if mode == "stack"
                                 else (rest[0], rest[1:]))
                 if broadcast_params:
-                    C = valid.shape[1]
-                    params = jax.tree.map(
-                        lambda x: jnp.broadcast_to(x[None], (C,) + x.shape),
-                        params)
-                H, _, S = valid.shape
-                # The (hop, step) axes flatten into ONE scan: a nested
-                # scan-in-scan pays per-hop setup (inner scan machinery,
-                # fresh zero momentum buffers) every hop, which dominates
-                # in the dispatch-bound S=1 regime. Instead the momentum
-                # carry is zeroed by a per-step reset flag wherever a new
-                # client visit begins — same math, one flat scan of H*S
-                # gathered SGD steps.
-                flat_rows = jnp.repeat(rows, S, axis=0)
-                flat_ix = jnp.transpose(plans, (0, 2, 1, 3)).reshape(
-                    (H * S,) + plans.shape[1:2] + plans.shape[3:])
-                flat_ok = jnp.transpose(valid, (0, 2, 1)).reshape(
-                    H * S, -1).astype(jnp.float32)
-                reset = (jnp.arange(H * S) % S == 0).astype(jnp.float32)
-                m = jax.tree.map(jnp.zeros_like, params)
-
-                def body(carry, x):
-                    pc, mc = carry
-                    row_s, ix, ok, rs = x   # (C,), (C, B), (C,), scalar
-                    mc = jax.tree.map(lambda mi: (1.0 - rs) * mi, mc)
-                    # fleet row r, sample i -> flat row offsets[r] + i: ONE
-                    # (C, B)-indexed gather per leaf, so a step reads C*B
-                    # rows — a per-lane take-of-take would materialize
-                    # (C, N_max, ...) intermediates and all-gather the
-                    # sharded plane instead
-                    gidx = jnp.take(offsets, row_s)[:, None] + ix
-                    batch = {"images": jnp.take(images, gidx, axis=0),
-                             "labels": jnp.take(labels, gidx, axis=0)}
-                    g = vgrad(pc, batch, *extras[:n_loss_extras])
-                    return update(pc, mc, g, lr,
-                                  *extras[n_loss_extras:], ok), None
-
-                (p, _), _ = jax.lax.scan(
-                    body, (params, m), (flat_rows, flat_ix, flat_ok, reset))
+                    params = _tree_bcast(params, valid.shape[1])
+                p = _run_hops(vgrad, update, n_loss_extras, params, images,
+                              labels, offsets, rows, plans, valid, lr, extras)
                 if mode == "stack":
                     return p
                 red = _tree_agg(p, aggm)
@@ -332,6 +350,9 @@ class LocalTrainer:
         # reduced aggregate; "agg_locals": (aggregate, stack).
         self._many_fns: Dict = {}
         self._fused_fns: Dict = {}
+        # jitted whole-block schedule dispatches, keyed (variant, hier) —
+        # see train_schedule
+        self._sched_fns: Dict = {}
 
         # data-plane H2D bytes shipped per engine (sequential per-step
         # batches, batched/sharded pixel stacks, fused int32 index plans) —
@@ -570,6 +591,172 @@ class LocalTrainer:
         return fam(params, plane.images, plane.labels, plane.offsets,
                    jnp.asarray(rows), jnp.asarray(plans), jnp.asarray(valid),
                    jnp.asarray(lr, jnp.float32), *head, *extras)
+
+    # ------------------------------------------------------------------
+    # Schedule dispatch: a whole eval-to-eval block of rounds in ONE
+    # compiled call (see core.plan.Schedule / engines.fused.run_schedule)
+
+    # leading replicated axes of each schedule array before the sharded
+    # lane axis C (None: fully replicated — no lane axis)
+    _SCHED_LEAD = {
+        "rows": 2, "plans": 2, "valid": 2,          # (n, H|R, C, ...)
+        "ids": 1, "aggv": 1, "kl": 1, "mw": 1,
+        "use_prev": 1, "seed": 1,                   # (n, C)
+        "lr": None, "frac": None,                   # (n,)
+        "wg": 2,                                    # (n, G, C)
+    }
+
+    def _make_schedule(self, variant: str, hier: bool):
+        """Build the jitted block dispatch: an outer ``lax.scan`` over the
+        round axis whose carry is ``(w_glob, algo_state)``. Each round body
+        broadcasts the carried global, runs the flat hop scan
+        (``_run_hops``), contracts the round's aggregation vector and
+        updates the state carry in place — so MOON's prev-locals and
+        SCAFFOLD's variates live on device across the whole block. With
+        ``hier`` (HierFAVG) the body is instead R chained edge iterations:
+        a scan over the first R-1 (in-scan (G, C) per-edge reduce seeding
+        the next iteration's lanes) plus a peeled final iteration that
+        applies the collapsed cloud weights exactly like the per-round
+        engine does — keeping chunked vs per-round bit-parity."""
+        from repro.core.state import gather_rows, scaffold_step, scatter_rows
+
+        loss_fn, update, n_loss = self._many_spec[variant]
+        axes = tuple(0 if stacked else None
+                     for stacked in self._EXTRA_STACKED[variant][:n_loss])
+        vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + axes)
+
+        def round_extras(w, st, x):
+            """The plan's extras, resolved from the scan carry: GLOBAL is
+            the carried ``w``; StateRefs gather their lanes' rows."""
+            if variant == "prox":
+                return (w,)                         # FedProx anchor
+            if variant == "moon":
+                rows = gather_rows(st["prev"], x["ids"])
+                w_prev = jax.tree.map(
+                    lambda r, wl: jnp.where(_expand_mask(x["use_prev"], r),
+                                            r, wl[None]),
+                    rows, w)
+                return (w, w_prev)
+            if variant == "scaffold":
+                return (st["c"], gather_rows(st["ci"], x["ids"]))
+            return ()
+
+        def update_carry(w_before, st, x, p):
+            if variant == "moon":
+                return dict(st, prev=scatter_rows(st["prev"], x["ids"], p))
+            if variant == "scaffold":
+                c, ci = scaffold_step(st["c"], st["ci"], x["ids"], p,
+                                      w_before, x["kl"], x["mw"], x["frac"])
+                return dict(st, c=c, ci=ci)
+            return st
+
+        def sched(w0, carry, images, labels, offsets, xs):
+            def train_group(params, rows, plans, valid, lr, extras):
+                return _run_hops(vgrad, update, n_loss, params, images,
+                                 labels, offsets, rows, plans, valid, lr,
+                                 extras)
+
+            if hier:
+                def body(rc, x):
+                    w, st = rc
+                    seed = x["seed"]
+
+                    def one_iter(E, xi, aggm):
+                        params = jax.tree.map(lambda t: t[seed], E)
+                        p = train_group(params, xi["rows"][None],
+                                        xi["plans"][None], xi["valid"][None],
+                                        x["lr"], ())
+                        return _tree_agg(p, aggm)
+
+                    E = _tree_bcast(w, x["wg"].shape[0])
+                    head = {k: x[k][:-1]
+                            for k in ("rows", "plans", "valid")}
+                    E, _ = jax.lax.scan(
+                        lambda E, xi: (one_iter(E, xi, x["wg"]), None),
+                        E, head)
+                    last = {k: x[k][-1] for k in ("rows", "plans", "valid")}
+                    return (one_iter(E, last, x["aggv"]), st), None
+            else:
+                def body(rc, x):
+                    w, st = rc
+                    params = _tree_bcast(w, x["valid"].shape[1])
+                    p = train_group(params, x["rows"], x["plans"],
+                                    x["valid"], x["lr"],
+                                    round_extras(w, st, x))
+                    w_new = _tree_agg(p, x["aggv"])
+                    return (w_new, update_carry(w, st, x, p)), None
+
+            (w, out), _ = jax.lax.scan(body, (w0, carry), xs)
+            return w, out
+
+        return jax.jit(sched)
+
+    def train_schedule(
+        self,
+        params: Pytree,
+        plane,
+        xs: Dict[str, np.ndarray],
+        carry: Dict[str, Pytree],
+        *,
+        variant: str = "plain",
+        hier: bool = False,
+        mesh: Optional[Mesh] = None,
+        data_axis: str = "data",
+    ) -> Pytree:
+        """An entire block of FL rounds as ONE compiled dispatch.
+
+        ``xs`` stacks the block's per-round schedule along a leading round
+        axis ``n`` (built by ``engines.fused.FusedEngine.run_schedule``):
+        ``rows``/``plans``/``valid`` as in ``train_many_fused`` but
+        (n, H, C, ...), per-round ``lr`` (n,) and collapsed aggregation
+        vectors ``aggv`` (n, C) — plus the variant's state-carry lanes
+        (``ids``, MOON's ``use_prev``, SCAFFOLD's ``kl``/``mw``/``frac``).
+        These int32/bool/f32 arrays are the block's ENTIRE H2D payload.
+
+        ``carry`` is the algorithm's device-resident state (``core.state``
+        client stacks); the compiled scan threads ``(w_glob, carry)``
+        round to round, so a block of ``n`` fused FedSR rounds — broadcast,
+        hop scan, cloud reduce, n times — is literally one compiled call
+        (``dispatches`` records 1). Returns ``(w_glob, carry)``.
+
+        ``mesh`` shards every lane axis C over ``data_axis`` exactly like
+        ``train_many_fused`` (the round axis n stays unsharded — it is a
+        sequential scan); the state carry is replicated (its K + 1 rows
+        need not divide the mesh).
+        """
+        self.h2d_bytes += sum(np.asarray(v).nbytes for v in xs.values())
+        self.dispatches += 1
+        key = (variant, hier)
+        if key not in self._sched_fns:
+            self._sched_fns[key] = self._make_schedule(variant, hier)
+        fn = self._sched_fns[key]
+        if mesh is not None:
+            C = xs["valid"].shape[2]
+            if C % mesh.shape[data_axis] != 0:
+                raise ValueError(
+                    f"schedule lane axis C={C} must be a multiple of mesh "
+                    f"axis {data_axis!r}={mesh.shape[data_axis]}")
+            repl = NamedSharding(mesh, PartitionSpec())
+
+            def put(tree, sharding):
+                return jax.tree.map(
+                    lambda x: jax.device_put(jnp.asarray(x), sharding), tree)
+
+            placed = {}
+            for k, v in xs.items():
+                lead = self._SCHED_LEAD[k]
+                if lead is None:
+                    placed[k] = put(v, repl)
+                else:
+                    spec = PartitionSpec(*([None] * lead + [data_axis]))
+                    placed[k] = put(v, NamedSharding(mesh, spec))
+            xs = placed
+            params = put(params, repl)
+            carry = put(carry, repl)
+        else:
+            xs = {k: jnp.asarray(v) for k, v in xs.items()}
+        return fn(params, carry, plane.images, plane.labels, plane.offsets,
+                  xs)
 
     # which extras carry a leading client axis (True) vs are cohort-shared
     # single trees (False) — order matches ``_extras``

@@ -7,8 +7,9 @@ topology (star cohort, edge ring, hierarchy), and how the cloud aggregates
 the config and their host-side state and emit a ``RoundPlan``; the engines
 (``core.engines``) interpret plans against whatever execution substrate the
 hardware affords — a python loop of jitted steps, one vmap-compiled visit
-stack, a device mesh, or a device-resident data plane with the whole round
-fused into a single dispatch.
+stack, a device mesh, a device-resident data plane with the whole round
+fused into a single dispatch, or (``Schedule``) a whole eval-to-eval block
+of rounds fused into one.
 
 Separating the two buys three things:
 
@@ -63,8 +64,30 @@ class _Symbol:
 
 
 GLOBAL = _Symbol("GLOBAL")      # the current global model
-ZEROS = _Symbol("ZEROS")        # a zeros tree of the global model's shape
-                                # (SCAFFOLD's uninitialized control variates)
+
+
+@dataclasses.dataclass(frozen=True)
+class StateRef:
+    """Symbolic reference into the algorithm's device-resident state
+    (``core.state``), resolved by the engine at run time.
+
+    ``field`` names a state entry; ``client`` selects a row of a
+    ``(K + 1, ...)`` client-stacked tree (``-1``: the entry is a single
+    unstacked tree, e.g. SCAFFOLD's server variate). With
+    ``fallback_global`` the reference resolves to the current global model
+    until the client's row has been written (MOON's "previous local
+    defaults to w_glob" rule) — the state's host-side ``seen`` mask
+    decides, so resolution never reads back from device.
+
+    Like ``GLOBAL``, this keeps plans free of concrete parameter trees —
+    which is what lets ``plan_schedule`` pre-draw a whole block of rounds
+    before any of them executes: round r+1's plan can name state that only
+    exists once round r has run.
+    """
+
+    field: str
+    client: int = -1
+    fallback_global: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,7 +162,8 @@ class VisitGroup:
     Extras are the algorithm-specific side inputs of ``LocalTrainer``:
     ``shared_extras`` are cohort-shared single trees (broadcast inside the
     jit), ``stacked_extras`` hold one entry per lane. Either may use
-    ``GLOBAL`` for the current global model.
+    ``GLOBAL`` for the current global model or a ``StateRef`` into the
+    algorithm's device-resident state.
 
     ``keep_locals`` asks the engine to also return the per-lane trained
     models (MOON's prev memory, SCAFFOLD's variate update need them).
@@ -198,6 +222,36 @@ class RoundPlan:
                 raise ValueError(
                     "the final group must collapse to ONE model "
                     "(AggSpec with group_weights)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A block of pre-planned rounds — the unit the chunked executor
+    dispatches between evals (``eval_every`` rounds per block).
+
+    Plans are drawn by ``plan_schedule`` in the exact per-round RNG order,
+    so chunked and per-round drivers consume bit-identical streams; state
+    is referenced only through ``StateRef``/``GLOBAL`` sentinels, so every
+    plan of the block exists before its first round runs. ``comm`` is the
+    block sum of the plans' closed-form records, applied to the meter once
+    per block. All plans of a block come from ONE planner, so they share
+    group count and variant by construction (the fused engine's block scan
+    relies on that; per-round lane/step counts may differ — engines pad).
+    """
+
+    plans: Tuple[RoundPlan, ...]
+    comm: Tuple[Tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        shapes = {(len(p.groups),) + tuple(g.variant for g in p.groups)
+                  for p in self.plans}
+        if len(shapes) > 1:
+            raise ValueError(
+                f"a Schedule's plans must share group structure: {shapes}")
+
+    @property
+    def rounds(self) -> int:
+        return len(self.plans)
 
 
 @dataclasses.dataclass

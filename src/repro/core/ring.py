@@ -4,7 +4,7 @@ the inner loop of FedSR's ring clusters (Algorithm 1).
 """
 from __future__ import annotations
 
-from typing import Any, List, Sequence
+from typing import Any, Sequence
 
 import numpy as np
 

@@ -1,0 +1,102 @@
+"""Device-resident algorithm state (MOON prev-locals, SCAFFOLD variates).
+
+Algorithm memory used to live in host dicts keyed by client id and was
+rewritten by host tree ops after every round. The Schedule IR
+(``core.plan``) runs whole eval-to-eval blocks of rounds as ONE compiled
+dispatch, so that memory must ride the round scan as a device carry
+instead: a ``(K + 1, ...)`` client-stacked pytree — row ``K`` is a write
+dump for ghost lanes, so mesh padding never needs a masked scatter — plus
+a host-side ``(K + 1,)`` ``seen`` mask (participation is planner-drawn, so
+which rows are live is host-knowable without a device readback).
+
+One pure update function per algorithm serves BOTH drivers: ``run_round``
+applies it eagerly once per round, ``run_schedule``'s fused engine traces
+the identical function inside the block scan — chunked-vs-per-round parity
+is therefore structural, not a second implementation's discipline.
+
+``pack_client_rows`` / ``unpack_client_rows`` convert between the carry
+and the per-client-id dict layout ``algo_state.msgpack`` has used since
+PR 4, so old checkpoints restore exactly and new ones keep the same
+on-disk format.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _lane(v, x):
+    """Broadcast a (C,) per-lane vector against a (C, ...) leaf."""
+    return v.reshape(v.shape + (1,) * (x.ndim - 1))
+
+
+def client_stack(w_like: Pytree, num_clients: int) -> Pytree:
+    """A zeroed ``(K + 1, ...)`` per-client stack of ``w_like``'s shape.
+    Row ``K`` is the ghost-lane dump: padded lanes gather/scatter it, so
+    its value is never read back into a real client's math (zeros keep the
+    masked no-op updates finite)."""
+    return jax.tree.map(
+        lambda x: jnp.zeros((num_clients + 1,) + x.shape, x.dtype), w_like)
+
+
+def gather_rows(stack: Pytree, ids) -> Pytree:
+    """Rows ``ids`` of a client stack as a (C, ...) lane stack."""
+    return jax.tree.map(lambda x: x[ids], stack)
+
+
+def scatter_rows(stack: Pytree, ids, rows: Pytree) -> Pytree:
+    """Write the (C, ...) lane stack back into rows ``ids``. Duplicate ids
+    (every ghost lane aims at the dump row) resolve last-write-wins."""
+    return jax.tree.map(lambda x, r: x.at[ids].set(r), stack, rows)
+
+
+def scaffold_step(c: Pytree, ci: Pytree, ids, locals_: Pytree,
+                  w_before: Pytree, kl, mw, frac) -> Tuple[Pytree, Pytree]:
+    """One round of SCAFFOLD's Option-II control-variate update, as data-
+    parallel lane math (Karimireddy et al. 2020):
+
+        ci+ = ci - c + (w_glob - w_i) / (K_i * lr)
+        c  += (participants / K) * mean_i(ci+ - ci)
+
+    ``ids`` (C,) are the lane client ids (ghosts -> dump row), ``locals_``
+    the trained (C, ...) lane stack, ``kl`` (C,) the float32-rounded
+    ``K_i * lr`` per lane (1 for ghosts), ``mw`` (C,) the mean weights
+    (1/cohort for real lanes, 0 for ghosts) and ``frac`` the participation
+    fraction. Pure: called eagerly by the per-round driver and traced
+    inside the fused block scan — the two paths share this exact math.
+    """
+    rows = gather_rows(ci, ids)
+    ci_new = jax.tree.map(
+        lambda cio, co, wg, wi: cio - co[None] + (wg[None] - wi)
+        / _lane(kl, wi),
+        rows, c, w_before, locals_)
+    delta = jax.tree.map(jnp.subtract, ci_new, rows)
+    mean_dc = jax.tree.map(
+        lambda d: jnp.tensordot(mw.astype(d.dtype), d, axes=1), delta)
+    c = jax.tree.map(lambda a, b: a + frac * b, c, mean_dc)
+    return c, scatter_rows(ci, ids, ci_new)
+
+
+def pack_client_rows(stack: Pytree, seen: np.ndarray) -> Dict[int, Pytree]:
+    """Carry -> checkpoint layout: the live rows of a client stack as a
+    {client_id: tree} dict (the ``algo_state.msgpack`` format)."""
+    return {int(i): jax.tree.map(lambda x, i=int(i): x[i], stack)
+            for i in np.flatnonzero(np.asarray(seen)[:-1])}
+
+
+def unpack_client_rows(rows: Dict[int, Pytree], w_like: Pytree,
+                       num_clients: int) -> Tuple[Pytree, np.ndarray]:
+    """Checkpoint layout -> carry: rebuild the (K + 1, ...) stack and the
+    host ``seen`` mask from a {client_id: tree} dict."""
+    stack = client_stack(w_like, num_clients)
+    seen = np.zeros(num_clients + 1, bool)
+    for i, tree in rows.items():
+        stack = jax.tree.map(
+            lambda x, t, i=int(i): x.at[i].set(jnp.asarray(t)), stack, tree)
+        seen[int(i)] = True
+    return stack, seen

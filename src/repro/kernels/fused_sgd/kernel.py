@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 # one VMEM tile: 8 sublanes x 128 lanes is the float32 native tile; we use a

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the fused momentum-SGD update."""
 from __future__ import annotations
 
-import jax
 
 
 def sgd_reference(p, g, m, lr, *, momentum: float, nesterov: bool = False):

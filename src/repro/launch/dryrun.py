@@ -11,7 +11,8 @@ import json              # noqa: E402
 import time              # noqa: E402
 import traceback         # noqa: E402
 
-import jax               # noqa: E402
+import jax               # noqa: E402,F401  (imported HERE so the faked
+                         # device count above binds before first jax init)
 
 from repro.configs.registry import ARCH_IDS, get_config          # noqa: E402
 from repro.configs.shapes import SHAPES                          # noqa: E402

@@ -9,7 +9,8 @@ import dataclasses     # noqa: E402
 import json            # noqa: E402
 import time            # noqa: E402
 
-import jax             # noqa: E402
+import jax             # noqa: E402,F401  (first jax init must see the
+                       # XLA_FLAGS set above)
 
 from repro.configs.base import TrainConfig                      # noqa: E402
 from repro.configs.registry import get_config                   # noqa: E402

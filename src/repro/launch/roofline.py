@@ -17,9 +17,8 @@ recorded as an approximation in EXPERIMENTS.md.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Dict, List, Optional
+from typing import Dict
 
 # --- TPU v5e hardware constants (per chip) ---------------------------------
 PEAK_FLOPS = 197e12          # bf16

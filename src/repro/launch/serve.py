@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.registry import get_smoke_config
-from repro.models.transformer import decode_step, forward, init_cache, init_model
+from repro.models.transformer import decode_step, init_cache, init_model
 
 
 def prefill_and_decode(

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,6 @@ from repro.models.transformer import (
     lm_loss,
     model_specs,
 )
-from repro.nn.module import abstract_params
 from repro.sharding.rules import cache_pspec, param_pspecs
 
 Pytree = Any

@@ -10,7 +10,6 @@ paper's setting — heterogeneous private shards — is preserved.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import math
 import time
 from typing import Dict

@@ -24,9 +24,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.mamba2 import mamba_block, mamba_dims, mamba_specs
+from repro.models.mamba2 import mamba_block, mamba_specs
 from repro.models.moe import moe_block, moe_specs
-from repro.nn.module import ParamSpec, init_params
+from repro.nn.module import init_params
 
 Pytree = Any
 

@@ -7,7 +7,6 @@ test-suite checks the RM properties numerically.
 """
 from __future__ import annotations
 
-import math
 
 import jax.numpy as jnp
 

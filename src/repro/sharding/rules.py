@@ -14,7 +14,7 @@ from typing import Any, List, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.nn.module import ParamSpec, axes_tree
+from repro.nn.module import ParamSpec
 
 Pytree = Any
 

@@ -49,12 +49,7 @@ def trainer():
     return _RUNS["trainer"]
 
 
-def run_round(algo, engine, overrides=(), rounds=2):
-    """Cached ``(final weights, meter, rng state, h2d bytes, dispatches)``
-    of ``rounds`` FL rounds of ``algo`` under ``engine``."""
-    key = (algo, engine, tuple(sorted(overrides)), rounds)
-    if key in _RUNS:
-        return _RUNS[key]
+def _run(algo, engine, overrides, rounds, chunked):
     import jax
     from repro.configs import get_config
     from repro.configs.base import FLConfig
@@ -80,10 +75,31 @@ def run_round(algo, engine, overrides=(), rounds=2):
     state = {}
     tr.h2d_bytes = 0
     tr.dispatches = 0
-    for t in range(fl.rounds):
-        w, state = algo_obj.run_round(w, t, 0.05, rng, meter, state)
-    _RUNS[key] = (w, meter, rng.bit_generator.state, tr.h2d_bytes,
-                  tr.dispatches)
+    if chunked:
+        w, state = algo_obj.run_schedule(w, 0, np.full(fl.rounds, 0.05),
+                                         rng, meter, state)
+    else:
+        for t in range(fl.rounds):
+            w, state = algo_obj.run_round(w, t, 0.05, rng, meter, state)
+    return (w, meter, rng.bit_generator.state, tr.h2d_bytes, tr.dispatches)
+
+
+def run_round(algo, engine, overrides=(), rounds=2):
+    """Cached ``(final weights, meter, rng state, h2d bytes, dispatches)``
+    of ``rounds`` FL rounds of ``algo`` under ``engine``, driven
+    round-by-round (``run_round``)."""
+    key = (algo, engine, tuple(sorted(overrides)), rounds)
+    if key not in _RUNS:
+        _RUNS[key] = _run(algo, engine, overrides, rounds, chunked=False)
+    return _RUNS[key]
+
+
+def run_schedule(algo, engine, overrides=(), rounds=2):
+    """Like ``run_round`` but driven as ONE chunked ``run_schedule`` block
+    — under the fused engine that is a single compiled dispatch."""
+    key = ("sched", algo, engine, tuple(sorted(overrides)), rounds)
+    if key not in _RUNS:
+        _RUNS[key] = _run(algo, engine, overrides, rounds, chunked=True)
     return _RUNS[key]
 
 
@@ -104,6 +120,20 @@ def assert_engine_parity(algo, engine, overrides=(), rounds=2):
     assert diff <= 1e-5, f"{algo}/{engine} round outputs diverged: {diff}"
     for ch in COMM_CHANNELS:
         assert getattr(m_seq, ch) == getattr(m_eng, ch), (algo, engine, ch)
+
+
+def assert_chunked_parity(algo, engine, overrides=(), rounds=2):
+    """The chunked contract: ONE ``run_schedule`` block must reproduce the
+    per-round driver BIT-exactly under the same engine — same RNG stream,
+    identical final weights (the fused engine's block scan re-traces the
+    identical per-round math), exactly equal meters."""
+    w_r, m_r, s_r, _, _ = run_round(algo, engine, overrides, rounds)
+    w_c, m_c, s_c, _, _ = run_schedule(algo, engine, overrides, rounds)
+    assert s_r == s_c, f"{algo}/{engine}: chunked RNG stream diverged"
+    diff = max_diff(w_r, w_c)
+    assert diff == 0.0, f"{algo}/{engine} chunked output drifted: {diff}"
+    for ch in COMM_CHANNELS:
+        assert getattr(m_r, ch) == getattr(m_c, ch), (algo, engine, ch)
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +161,12 @@ def _payload(engine):
             "rng_equal": s_seq == s_e,
             "p2p": m_e.p2p,
         }
+    # the chunked block dispatch composed with the multi-device mesh: a
+    # 2-round FedSR schedule must reproduce its own per-round driver
+    # bit-exactly and run as ONE dispatch even with the lane axis sharded
+    w_r, _, _, _, _ = run_round("fedsr", engine, extra)
+    w_c, _, _, _, d_c = run_schedule("fedsr", engine, extra)
+    out["chunked"] = {"max_diff": max_diff(w_r, w_c), "dispatches": d_c}
     print(json.dumps(out))
 
 

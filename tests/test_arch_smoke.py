@@ -2,7 +2,6 @@
 assigned family (2 pattern periods, d_model<=512, <=4 experts) runs one
 forward and one train step on CPU; output shapes + no NaNs asserted.
 The FULL configs are exercised only via the dry-run (no allocation)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -4,15 +4,18 @@ All 7 algorithms (plus the ghost-padding participation cases) must produce
 bit-identical RNG streams, <=1e-5-matching round outputs and exactly equal
 comm meters across sequential / batched / sharded / fused — the RoundPlan
 IR makes this structural (one planner per algorithm, engines only
-interpret), and this matrix pins it. The same matrix re-runs under 8 faked
-host devices per mesh-capable engine, so multi-device partitioning, ghost
-padding and the fused engine's sharded data plane are exercised on
-CPU-only CI.
+interpret), and this matrix pins it. The Schedule IR adds a second axis:
+the same rounds driven as one chunked ``run_schedule`` block must be
+BIT-exact against the per-round driver (``assert_chunked_parity``). The
+same matrix re-runs under 8 faked host devices per mesh-capable engine,
+so multi-device partitioning, ghost padding and the fused engine's
+sharded data plane are exercised on CPU-only CI.
 """
 import pytest
 
 from engine_parity import (
-    CASES, assert_engine_parity, run_round, run_subprocess_matrix,
+    CASES, assert_chunked_parity, assert_engine_parity, run_round,
+    run_subprocess_matrix,
 )
 
 ENGINES = ("batched", "sharded", "fused")
@@ -22,6 +25,16 @@ ENGINES = ("batched", "sharded", "fused")
 @pytest.mark.parametrize("algo,overrides", CASES)
 def test_round_parity(algo, overrides, engine):
     assert_engine_parity(algo, engine, tuple(overrides.items()))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("algo,overrides", CASES)
+def test_chunked_schedule_parity(algo, overrides, engine):
+    """The Schedule IR contract: driving the same rounds as ONE
+    ``run_schedule`` block is BIT-exact against the per-round driver for
+    every algorithm x engine — including the fused engine, whose block is
+    a single compiled scan carrying (w_glob, algo_state)."""
+    assert_chunked_parity(algo, engine, tuple(overrides.items()))
 
 
 @pytest.mark.parametrize("engine,algo", [("batched", "fedavg"),
@@ -58,3 +71,8 @@ def test_parity_on_8_fake_devices(engine):
         assert r["max_diff"] <= 1e-5, (engine, name, r["max_diff"])
     # ring meter closed form survives both paths: M*(R*(Q-1)+(R-1))
     assert data["cases"]["fedsr"]["p2p"] == 2 * (2 * 3 + 1)
+    # the chunked block stays bit-exact with the lane axis mesh-sharded,
+    # and under the fused engine it is still ONE dispatch
+    assert data["chunked"]["max_diff"] == 0.0, (engine, data["chunked"])
+    if engine == "fused":
+        assert data["chunked"]["dispatches"] == 1, data["chunked"]

@@ -13,7 +13,7 @@ from repro.core.executor import run_experiment
 from repro.core.local import LocalTrainer
 from repro.core.ring import ring_optimization
 from repro.core.topology import assign_edges, clusters_of, sample_ring
-from repro.data.pipeline import ClientData, make_clients
+from repro.data.pipeline import make_clients
 from repro.data.synthetic import make_task
 from repro.models.small import init_small_model
 from repro.utils.tree import tree_norm, tree_sub, tree_weighted_sum

@@ -1,0 +1,149 @@
+"""Schedule IR units: the one-dispatch-per-block contract, the chunked
+executor's history semantics (block-invariant records, seconds/rounds
+covering whole blocks), and resume landing mid-schedule at a block
+boundary. Algorithm x engine chunked parity lives in the matrix
+(``test_engine_matrix.py``); shared helpers in ``engine_parity.py``."""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from engine_parity import run_round, run_schedule
+
+from repro.configs import get_config
+from repro.configs.base import FLConfig
+from repro.core.executor import run_experiment
+from repro.data.synthetic import make_task
+
+CFG = get_config("fedsr-mlp")
+
+
+# ---------------------------------------------------------------------------
+# dispatch contracts
+
+
+def test_fused_fedsr_block_is_one_dispatch():
+    """The tentpole: a whole eval-to-eval block of fused FedSR rounds —
+    broadcast, H-hop ring scan, cloud reduce, n times over, with per-round
+    lr as a device array — is ONE compiled dispatch, where the per-round
+    driver pays one per round."""
+    _, _, _, _, d_block = run_schedule("fedsr", "fused", rounds=8)
+    assert d_block == 1
+    _, _, _, _, d_per_round = run_round("fedsr", "fused", rounds=8)
+    assert d_per_round == 8
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "moon", "scaffold", "hieravg"])
+def test_fused_block_dispatch_counts(algo):
+    """State-ful algorithms ride the block scan as device carries (MOON
+    prev-locals, SCAFFOLD variates), and HierFAVG's R per-edge iterations
+    fuse into the same scan — every algorithm's block is one dispatch."""
+    _, _, _, _, d = run_schedule(algo, "fused", rounds=2)
+    assert d == 1
+
+
+def test_hieravg_per_round_pays_one_dispatch_per_iteration():
+    """The ROADMAP open item this closes: per-round fused HierFAVG pays R
+    dispatches (one per chained edge iteration); the schedule path folds
+    them into the block scan. R=2, 2 rounds: 4 vs 1."""
+    _, _, _, _, d_per_round = run_round("hieravg", "fused", rounds=2)
+    assert d_per_round == 2 * 2
+    _, _, _, _, d_block = run_schedule("hieravg", "fused", rounds=2)
+    assert d_block == 1
+
+
+def test_schedule_h2d_is_index_only():
+    """The block ships int32/bool/f32 schedule arrays only — same
+    index-only data-plane contract as the per-round fused engine."""
+    _, _, _, h2d_bat, _ = run_round("fedsr", "batched", rounds=2)
+    _, _, _, h2d_sched, _ = run_schedule("fedsr", "fused", rounds=2)
+    assert 0 < h2d_sched * 50 < h2d_bat, (h2d_sched, h2d_bat)
+
+
+# ---------------------------------------------------------------------------
+# chunked executor: history semantics + block invariance
+
+
+def _fl(algo, rounds=4, engine="fused", **kw):
+    return FLConfig(algorithm=algo, num_devices=4, num_edges=2,
+                    rounds=rounds, partition="pathological", xi=2,
+                    ring_rounds=2, local_epochs=1, seed=11, engine=engine,
+                    **kw)
+
+
+def _task():
+    return make_task("mnist_like", train_per_class=12, test_per_class=4,
+                     seed=11)
+
+
+def test_executor_history_is_block_invariant():
+    """Chunking must be invisible to the results: the same run under
+    eval_every = 1 / 2 / 4 produces bit-identical accuracy, comm and
+    final model at the shared eval rounds — only the record granularity
+    (``rounds`` per record) changes."""
+    train, test = _task()
+    res = {k: run_experiment(task="mnist_like", model_cfg=CFG,
+                             fl=_fl("fedsr"), eval_every=k,
+                             train=train, test=test)
+           for k in (1, 2, 4)}
+    assert [r.rounds for r in res[1].history] == [1, 1, 1, 1]
+    assert [r.rounds for r in res[2].history] == [2, 2]
+    assert [r.rounds for r in res[4].history] == [4]
+    # round-4 record: bit-equal accuracy/comm across block sizes
+    assert (res[1].history[-1].accuracy == res[2].history[-1].accuracy
+            == res[4].history[-1].accuracy)
+    assert res[1].history[-1].comm == res[4].history[-1].comm
+    # round-2 record shared by eval_every 1 and 2
+    assert res[1].history[1].accuracy == res[2].history[0].accuracy
+    assert res[1].history[1].comm == res[2].history[0].comm
+    for a, b in zip(jax.tree.leaves(res[1].final_model),
+                    jax.tree.leaves(res[4].final_model)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_round_record_covers_whole_block():
+    """The PR-4 timing bug: under eval_every > 1 ``seconds`` measured only
+    the last round before the eval. Each record now covers the wall time
+    and round count since the previous record."""
+    train, test = _task()
+    res = run_experiment(task="mnist_like", model_cfg=CFG,
+                         fl=_fl("fedsr", rounds=5, engine="sequential"),
+                         eval_every=2, train=train, test=test)
+    # records at rounds 2, 4 and (final) 5 — the tail block is short
+    assert [r.round for r in res.history] == [2, 4, 5]
+    assert [r.rounds for r in res.history] == [2, 2, 1]
+    assert all(r.seconds > 0 for r in res.history)
+    assert sum(r.rounds for r in res.history) == 5
+
+
+# ---------------------------------------------------------------------------
+# resume mid-schedule at a block boundary
+
+
+@pytest.mark.parametrize("algo", ["scaffold", "moon", "fedsr"])
+def test_resume_mid_schedule_is_exact(algo):
+    """checkpoint_every=2 splits the eval_every=4 block: the checkpoint
+    lands mid-schedule at a block boundary, the algorithm state carry is
+    packed to the stable ``algo_state.msgpack`` dict layout, and the
+    resumed run reproduces the uninterrupted final model bit-for-bit."""
+    train, test = _task()
+    full = run_experiment(task="mnist_like", model_cfg=CFG, fl=_fl(algo),
+                          eval_every=4, train=train, test=test)
+    with tempfile.TemporaryDirectory() as ckdir:
+        run_experiment(task="mnist_like", model_cfg=CFG, fl=_fl(algo),
+                       eval_every=4, train=train, test=test,
+                       checkpoint_dir=ckdir, checkpoint_every=2,
+                       stop_after=2)
+        resumed = run_experiment(task="mnist_like", model_cfg=CFG,
+                                 fl=_fl(algo), eval_every=4, train=train,
+                                 test=test, checkpoint_dir=ckdir,
+                                 resume=True)
+    assert resumed.history[-1].round == 4
+    # the resumed record covers only the rounds run since resume
+    assert resumed.history[-1].rounds == 2
+    assert resumed.history[-1].accuracy == full.history[-1].accuracy
+    assert resumed.history[-1].comm == full.history[-1].comm
+    for a, b in zip(jax.tree.leaves(full.final_model),
+                    jax.tree.leaves(resumed.final_model)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -3,7 +3,6 @@ checkpointing, synthetic data, comm meter."""
 import os
 import tempfile
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -19,7 +18,7 @@ from repro.optim.adamw import AdamW
 from repro.optim.schedules import cosine_decay, warmup_cosine
 from repro.optim.sgd import SGD
 from repro.utils.tree import (
-    tree_add, tree_bytes, tree_count_params, tree_dot, tree_norm,
+    tree_add, tree_bytes, tree_count_params, tree_norm,
     tree_scale, tree_sub, tree_weighted_sum,
 )
 

@@ -1,12 +1,7 @@
 """End-to-end behaviour tests for the FedSR system (replaces scaffold)."""
-import subprocess
-import sys
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import FLConfig, TrainConfig
