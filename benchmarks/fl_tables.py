@@ -9,9 +9,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
-from repro.configs.base import FLConfig
+from repro.configs.base import FLConfig, ScenarioConfig
 from repro.configs.registry import get_config
 from repro.core.executor import run_experiment
 
@@ -106,6 +106,56 @@ def table3_comm_cost(rounds: int = 15, target: float = 0.8) -> List[dict]:
             "final_accuracy": res.final_accuracy,
             "seconds": time.perf_counter() - t0,
         })
+    return rows
+
+
+SCENARIOS: Dict[str, ScenarioConfig] = {
+    # the perfectly synchronous rounds every other table assumes
+    "sync": ScenarioConfig(),
+    # 30% of each round's participants never report back
+    "drop30": ScenarioConfig(drop_rate=0.3),
+    # 30% of the fleet computes at half pace AND per-client rates span 4x,
+    # so the simulated round clock waits on the slowest participant
+    "straggle": ScenarioConfig(train_slow_frac=0.3, slow_step_factor=0.5,
+                               rate_min=0.5, rate_max=2.0,
+                               transfer_seconds=0.05),
+    # 30% of the fleet uploads 1-4 rounds late; their updates decay by the
+    # FedAsync polynomial before aggregation
+    "stale": ScenarioConfig(send_slow_frac=0.3, staleness_horizon=4,
+                            staleness_decay=0.5, rate_min=0.5, rate_max=2.0,
+                            transfer_seconds=0.05),
+}
+
+
+def scenario_curves(rounds: int = 12, eval_every: int = 3,
+                    algorithms: Optional[List[str]] = None,
+                    scenarios: Optional[Dict[str, ScenarioConfig]] = None,
+                    ) -> List[dict]:
+    """Rounds-, comm- and simulated-wall-to-accuracy curves per algorithm
+    x scenario (ROADMAP item 2's claim): one row per eval point with the
+    round index, accuracy, total model transfers and the simulated clock
+    (``CommMeter.sim_seconds``). Under ``sync`` the curves reproduce the
+    scenario-free tables bit-exactly — the transform never runs."""
+    algorithms = algorithms or ["fedavg", "hieravg", "fedsr"]
+    scenarios = scenarios or SCENARIOS
+    rows = []
+    for scen_name, scen in scenarios.items():
+        for algo in algorithms:
+            fl = _fl(algo, partition="pathological", rounds=rounds, xi=2,
+                     scenario=scen)
+            t0 = time.perf_counter()
+            res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
+                                 eval_every=eval_every)
+            wall = time.perf_counter() - t0
+            for rec in res.history:
+                rows.append({
+                    "table": "scenario", "scenario": scen_name,
+                    "algorithm": algo, "round": rec.round,
+                    "accuracy": rec.accuracy,
+                    "total_transfers": rec.comm["total_transfers"],
+                    "sim_seconds": rec.comm["sim_seconds"],
+                    "seconds": wall,
+                })
     return rows
 
 

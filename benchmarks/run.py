@@ -52,6 +52,15 @@ def run_fl_tables(rounds: int, only: set) -> None:
                 r["seconds"] / max(rounds // 2, 4) * 1e6,
                 f"acc={r['accuracy']:.4f}",
             )
+    if "scenarios" in only:
+        for r in fl_tables.scenario_curves(rounds=rounds):
+            _emit(
+                f"scenario/{r['scenario']}/{r['algorithm']}/r{r['round']}",
+                r["seconds"] / rounds * 1e6,
+                f"acc={r['accuracy']:.4f}"
+                f";transfers={r['total_transfers']}"
+                f";sim_s={r['sim_seconds']:.2f}",
+            )
 
 
 def run_kernels() -> None:
@@ -136,7 +145,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=10,
                     help="FL rounds per benchmark run")
-    ap.add_argument("--only", default="table1,table2,table3,table4,kernels,roofline",
+    ap.add_argument("--only",
+                    default="table1,table2,table3,table4,scenarios,"
+                            "kernels,roofline",
                     help="comma-separated subset")
     ap.add_argument("--quick", action="store_true",
                     help="tables 1+3 + kernels + roofline only, fewer rounds")
@@ -158,7 +169,7 @@ def main() -> None:
         run_kernels()
     if "roofline" in only:
         run_roofline()
-    if only & {"table1", "table2", "table3", "table4"}:
+    if only & {"table1", "table2", "table3", "table4", "scenarios"}:
         run_fl_tables(rounds, only)
 
 

@@ -1,9 +1,12 @@
-from repro.configs.base import FLConfig, MeshConfig, ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.base import (
+    FLConfig, MeshConfig, ModelConfig, ScenarioConfig, ShapeConfig,
+    TrainConfig,
+)
 from repro.configs.registry import ARCH_IDS, all_configs, get_config, get_smoke_config
 from repro.configs.shapes import SHAPES, get_shape
 
 __all__ = [
     "ARCH_IDS", "FLConfig", "MeshConfig", "ModelConfig", "SHAPES",
-    "ShapeConfig", "TrainConfig", "all_configs", "get_config",
-    "get_shape", "get_smoke_config",
+    "ScenarioConfig", "ShapeConfig", "TrainConfig", "all_configs",
+    "get_config", "get_shape", "get_smoke_config",
 ]

@@ -130,6 +130,81 @@ class MeshConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Straggler/dropout realism knobs (ROADMAP: the async scenario axis).
+
+    All knobs act at the *planner* level (``core.scenario``): dropped
+    clients become all-invalid lanes with aggregation weight 0, train-slow
+    clients get truncated valid-step masks, and send-slow clients' uploads
+    carry a FedAsync-style staleness decay folded into the ``AggSpec``
+    lane weights — so every algorithm x engine inherits the scenario
+    without any engine change, and a fused eval-to-eval block stays ONE
+    compiled dispatch. The default config is inactive: it draws nothing
+    from the experiment RNG stream and leaves every plan untouched, so
+    scenario-off runs are bit-exact to pre-scenario outputs.
+
+    Per-client traits (which clients are slow, their compute rates) are
+    drawn ONCE per experiment from ``seed`` — a dedicated stream, separate
+    from ``FLConfig.seed`` — while per-round outcomes (who drops, how
+    stale an upload is) consume the shared planner RNG only when the
+    scenario is active.
+    """
+    drop_rate: float = 0.0          # fraction of each round's participants
+                                    # that drop (never all: >= 1 survives)
+    train_slow_frac: float = 0.0    # fraction of the fleet that is compute-
+                                    # bound: they finish only slow_step_factor
+                                    # of their planned local steps
+    send_slow_frac: float = 0.0     # fraction of the fleet whose uploads
+                                    # arrive stale (weight-decayed)
+    slow_step_factor: float = 0.5   # fraction of planned steps a train-slow
+                                    # client completes (ceil, >= 1 step)
+    staleness_horizon: int = 4      # max staleness s (rounds) of a send-slow
+                                    # upload; s ~ Uniform{1..horizon}
+    staleness_decay: float = 0.5    # FedAsync polynomial exponent a:
+                                    # stale lane weight *= (1 + s)^-a
+    rate_min: float = 1.0           # per-client compute rates (local steps
+    rate_max: float = 1.0           # per simulated second), drawn once per
+                                    # experiment from Uniform[rate_min, rate_max]
+    transfer_seconds: float = 0.0   # simulated seconds per model transfer
+    time_threshold: float = 0.0     # simulated-clock cap per round
+                                    # (0 = wait for the slowest participant)
+    seed: int = 0                   # the scenario's own stream: per-client
+                                    # slow flags + compute rates
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop_rate < 1.0:
+            raise ValueError(f"drop_rate={self.drop_rate} must be in [0, 1)")
+        for name in ("train_slow_frac", "send_slow_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} must be in [0, 1]")
+        if not 0.0 < self.slow_step_factor <= 1.0:
+            raise ValueError(
+                f"slow_step_factor={self.slow_step_factor} must be in (0, 1]")
+        if self.staleness_horizon < 0:
+            raise ValueError(
+                f"staleness_horizon={self.staleness_horizon} must be >= 0")
+        if self.staleness_decay < 0:
+            raise ValueError(
+                f"staleness_decay={self.staleness_decay} must be >= 0")
+        if not 0.0 < self.rate_min <= self.rate_max:
+            raise ValueError(
+                f"need 0 < rate_min <= rate_max, got "
+                f"[{self.rate_min}, {self.rate_max}]")
+        if self.transfer_seconds < 0 or self.time_threshold < 0:
+            raise ValueError("transfer_seconds/time_threshold must be >= 0")
+
+    @property
+    def active(self) -> bool:
+        """True when any knob perturbs training (clock-only knobs — rates,
+        transfer_seconds, time_threshold — never touch plans, so they do
+        not count: the plan transform must stay a no-op without drops,
+        slowdowns or staleness)."""
+        return (self.drop_rate > 0 or self.train_slow_frac > 0
+                or self.send_slow_frac > 0)
+
+
+@dataclasses.dataclass(frozen=True)
 class FLConfig:
     """Hyper-parameters of Algorithm 1 and of all baselines (paper §IV-C/D)."""
     algorithm: str = "fedsr"         # fedsr | fedavg | fedprox | moon | hieravg | ring | centralized
@@ -178,6 +253,18 @@ class FLConfig:
                                      # fused Pallas pass over the raveled
                                      # parameter vector instead of per-leaf
                                      # tree.map ops (plain/prox/moon variants)
+    scenario: ScenarioConfig = dataclasses.field(
+        default_factory=ScenarioConfig)
+                                     # straggler/dropout realism (drop, slow,
+                                     # stale, simulated clock); the default is
+                                     # inactive and bit-exact to scenario-free
+                                     # runs
+
+    def __post_init__(self):
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"participation={self.participation} must be in (0, 1] "
+                "(a fraction of devices sampled per round)")
 
     @property
     def devices_per_edge(self) -> int:

@@ -36,6 +36,7 @@ round-by-round or the fused engine scans a whole block.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, List, Tuple
 
 import jax
@@ -51,8 +52,9 @@ from repro.core.plan import (
     VisitGroup,
 )
 from repro.core.ring import ring_lap_hops
+from repro.core.scenario import ScenarioState
 from repro.core.state import (
-    client_stack, pack_client_rows, scaffold_step, scatter_rows,
+    client_stack, pack_client_rows, scaffold_step_compiled, scatter_rows,
     unpack_client_rows,
 )
 from repro.core.topology import assign_edges, clusters_of, sample_ring
@@ -67,6 +69,7 @@ class _Planner:
 
     variant = "plain"
     keep_locals = False
+    _transfers_per_client = 1       # model each way (SCAFFOLD ships 2)
 
     def __init__(self, trainer: LocalTrainer, clients: List[ClientData],
                  fl: FLConfig):
@@ -75,6 +78,7 @@ class _Planner:
         self.fl = fl
         self.engine = make_engine(trainer, clients, fl)
         self.edges = assign_edges(fl.num_devices, fl.num_edges)
+        self.scenario = ScenarioState(fl.scenario, fl.num_devices)
 
     # -- the two execution drivers (identical for every algorithm) -------
     def run_round(self, w_glob, t, lr, rng: np.random.Generator,
@@ -85,6 +89,7 @@ class _Planner:
         if meter is not None:
             for channel, count in plan.comm:
                 meter.record(channel, count)
+            meter.record_time(plan.sim_seconds)
         self.update_state(plan, w_glob, result, lr, state)
         return result.w_glob, state
 
@@ -103,6 +108,10 @@ class _Planner:
         if meter is not None:
             for channel, count in sched.comm:
                 meter.record(channel, count)
+            # accumulate round-by-round (NOT a pre-summed block total) so
+            # the float stream matches the per-round driver bit-exactly
+            for plan in sched.plans:
+                meter.record_time(plan.sim_seconds)
         return w_glob, state
 
     def plan_schedule(self, t0: int, n: int, rng: np.random.Generator,
@@ -117,7 +126,35 @@ class _Planner:
 
     def plan_round(self, t: int, rng: np.random.Generator,
                    state: Dict) -> RoundPlan:
+        """Template step: the algorithm's pure plan (``_plan_round``),
+        then — only when a scenario is active — the drop/slow/stale
+        transform (``core.scenario``) plus rebuilt comm records, and
+        finally the simulated-clock stamp. Scenario-off the transform
+        never runs and never draws, so plans (and the RNG stream) are
+        bit-identical to a scenario-free build."""
+        plan = self._plan_round(t, rng, state)
+        if self.scenario.active:
+            plan, dropped = self.scenario.transform(plan, rng)
+            plan = dataclasses.replace(
+                plan, comm=self._scenario_comm(plan, dropped))
+        return dataclasses.replace(
+            plan, sim_seconds=self.scenario.plan_seconds(plan))
+
+    def _plan_round(self, t: int, rng: np.random.Generator,
+                    state: Dict) -> RoundPlan:
         raise NotImplementedError
+
+    def _scenario_comm(self, plan: RoundPlan,
+                       dropped: set) -> Tuple[Tuple[str, int], ...]:
+        """Closed-form comm of the TRANSFORMED plan. Default = star
+        semantics: the cloud broadcasts to every sampled client (a drop is
+        only discovered when the upload never arrives), survivors upload."""
+        if not plan.groups:
+            return plan.comm
+        grp = plan.groups[0]
+        live = sum(1 for p in grp.hops[0].plans if p is not None)
+        tpc = self._transfers_per_client
+        return (("cloud_down", tpc * grp.lanes), ("cloud_up", tpc * live))
 
     def update_state(self, plan: RoundPlan, w_before: Pytree,
                      result: RoundResult, lr: float, state: Dict) -> None:
@@ -180,9 +217,7 @@ class FedAvg(_Planner):
     """McMahan et al. 2017 — the star baseline (paper Fig. 1): one cohort
     visit group, flat |D_i|/|D| aggregation."""
 
-    _transfers_per_client = 1       # model each way (SCAFFOLD ships 2)
-
-    def plan_round(self, t, rng, state):
+    def _plan_round(self, t, rng, state):
         ids = self._sample(rng)
         plans = tuple(self._batch_plan(i, rng) for i in ids)
         shared, stacked = self._extra_specs(ids, state)
@@ -229,10 +264,16 @@ class Moon(FedAvg):
             state["seen"] = np.zeros(self.fl.num_devices + 1, bool)
 
     def update_state(self, plan, w_before, result, lr, state):
-        ids = np.asarray(plan.groups[0].hops[0].ids, np.int32)
-        state["prev"] = scatter_rows(state["prev"], jnp.asarray(ids),
+        grp = plan.groups[0]
+        ids = np.asarray(grp.hops[0].ids, np.int32)
+        # a lane that executed 0 steps (scenario drop) scatters to the
+        # ghost dump row K and stays unseen — its prev memory must not
+        # become this round's untouched broadcast
+        live = np.asarray(grp.lane_steps()) > 0
+        rows = np.where(live, ids, self.fl.num_devices).astype(np.int32)
+        state["prev"] = scatter_rows(state["prev"], jnp.asarray(rows),
                                      tree_stack(result.locals_))
-        state["seen"][ids] = True
+        state["seen"][ids[live]] = True
 
     def state_to_ckpt(self, state):
         if "prev" not in state:
@@ -259,8 +300,9 @@ class Scaffold(_Planner):
     """
     variant = "scaffold"
     keep_locals = True
+    _transfers_per_client = 2       # model + control variate each way
 
-    def plan_round(self, t, rng, state):
+    def _plan_round(self, t, rng, state):
         ids = self._sample(rng)
         plans = tuple(self._batch_plan(i, rng) for i in ids)
         group = VisitGroup(
@@ -282,18 +324,23 @@ class Scaffold(_Planner):
     def update_state(self, plan, w_before, result, lr, state):
         grp = plan.groups[0]
         ids = np.asarray(grp.hops[0].ids, np.int32)
+        steps = np.asarray(grp.lane_steps())
         # K_i * lr per lane, f32-rounded on the host — the fused block
         # scan ships the identical precomputed divisors, so chunked and
         # per-round stay bit-exact
-        kl = np.asarray([max(k, 1) * lr for k in grp.lane_steps()],
-                        np.float32)
-        mw = np.full(len(ids), 1.0 / len(ids), np.float32)
-        frac = np.float32(len(ids) / self.fl.num_devices)
-        state["c"], state["ci"] = scaffold_step(
-            state["c"], state["ci"], jnp.asarray(ids),
+        kl = np.asarray([max(k, 1) * lr for k in steps], np.float32)
+        # 0-step lanes (scenario drops) scatter to the dump row and are
+        # excluded from the server-variate mean and the |S|/K fraction
+        live = steps > 0
+        rows = np.where(live, ids, self.fl.num_devices).astype(np.int32)
+        n_live = int(live.sum())
+        mw = np.where(live, np.float32(1.0 / n_live), np.float32(0.0))
+        frac = np.float32(n_live / self.fl.num_devices)
+        state["c"], state["ci"] = scaffold_step_compiled(
+            state["c"], state["ci"], jnp.asarray(rows),
             tree_stack(result.locals_), w_before, jnp.asarray(kl),
             jnp.asarray(mw), frac)
-        state["seen"][ids] = True
+        state["seen"][ids[live]] = True
 
     def state_to_ckpt(self, state):
         if "c" not in state:
@@ -317,7 +364,7 @@ class HierFAVG(_Planner):
     pairs, seeded from iteration r-1's per-edge aggregates; only the final
     group collapses edge models into the cloud model."""
 
-    def plan_round(self, t, rng, state):
+    def _plan_round(self, t, rng, state):
         fl = self.fl
         edge_ids, plans = [], {}
         for e, edge_devices in enumerate(self.edges):
@@ -354,12 +401,49 @@ class HierFAVG(_Planner):
                      ("cloud_up", 1)]
         return RoundPlan(groups=groups, comm=tuple(comm))
 
+    def _scenario_comm(self, plan, dropped):
+        """Per edge: the cloud still broadcasts, the edge exchanges R
+        iterations with its surviving devices, and only edges with any
+        survivor upload back."""
+        if not plan.groups:
+            return plan.comm
+        grp = plan.groups[0]
+        R = self.fl.ring_rounds
+        comm = []
+        for lanes in grp.agg.groups:
+            live = sum(1 for c in lanes if grp.hops[0].plans[c] is not None)
+            comm.append(("cloud_down", 1))
+            if live:
+                comm += [("edge_down", R * live), ("edge_up", R * live),
+                         ("cloud_up", 1)]
+        return tuple(comm)
+
+
+def _ring_scenario_comm(self, plan, dropped):
+    """Comm of a transformed ring plan (shared by the FedSR and Ring
+    planners — both emit one group whose lanes are rings): each ring still
+    receives the broadcast, its survivors pass the model around a ring
+    shrunk to them, and only lanes with any survivor upload."""
+    if not plan.groups:
+        return plan.comm
+    grp = plan.groups[0]
+    R = self.fl.ring_rounds
+    p2p, live_lanes = 0, 0
+    for c in range(grp.lanes):
+        members = {hop.ids[c] for hop in grp.hops
+                   if hop.plans[c] is not None}
+        if members:
+            live_lanes += 1
+            p2p += ring_lap_hops(len(members), R)
+    return (("cloud_down", grp.lanes), ("p2p", p2p),
+            ("cloud_up", live_lanes))
+
 
 class RingOptimization(_Planner):
     """Paper §III-B standalone baseline: ONE global ring over all sampled
     devices, R laps per round; no cloud aggregation inside the ring."""
 
-    def plan_round(self, t, rng, state):
+    def _plan_round(self, t, rng, state):
         fl = self.fl
         ring = self._sample(rng)
         if fl.reshuffle_ring:
@@ -373,6 +457,8 @@ class RingOptimization(_Planner):
                                  agg=AggSpec.flat([1.0])),)
         return RoundPlan(groups=groups, comm=comm)
 
+    _scenario_comm = _ring_scenario_comm
+
 
 class FedSR(_Planner):
     """Algorithm 1 — semi-decentralized star-ring.
@@ -385,7 +471,7 @@ class FedSR(_Planner):
     are the rings — under the fused engine the whole round (broadcast,
     H-hop lap scan, weighted cloud reduce) is a single compiled dispatch."""
 
-    def plan_round(self, t, rng, state):
+    def _plan_round(self, t, rng, state):
         fl = self.fl
         if fl.participation >= 1.0:
             rings = [sample_ring(e, rng, reshuffle=fl.reshuffle_ring)
@@ -404,6 +490,8 @@ class FedSR(_Planner):
                 hops=self._ring_hops(rings, rng),
                 agg=AggSpec.flat([s / total for s in sizes])),)
         return RoundPlan(groups=groups, comm=comm)
+
+    _scenario_comm = _ring_scenario_comm
 
 
 class Centralized(_Planner):

@@ -4,6 +4,11 @@ All quantities are counted in units of **M** — one full model transfer —
 exactly as the paper reports them, with byte totals derived from the param
 count. Channels are tracked separately so the semi-decentralized claim
 (cloud sees M edge models, not K device models) is directly observable.
+
+``sim_seconds`` is the simulated clock: each round's closed-form time
+(``core.scenario.ScenarioState.plan_seconds`` — slowest participant, or
+the ``time_threshold`` cutoff) accumulates here, giving the wall-time
+axis of the scenario curves without ever timing real execution.
 """
 from __future__ import annotations
 
@@ -19,9 +24,13 @@ class CommMeter:
     edge_up: int = 0        # device -> edge server
     edge_down: int = 0      # edge server -> device
     p2p: int = 0            # device -> device (ring hop)
+    sim_seconds: float = 0.0
 
     def record(self, channel: str, count: int = 1) -> None:
         setattr(self, channel, getattr(self, channel) + count)
+
+    def record_time(self, seconds: float) -> None:
+        self.sim_seconds += seconds
 
     @property
     def total_transfers(self) -> int:
@@ -36,11 +45,12 @@ class CommMeter:
     def total_bytes(self) -> int:
         return self.total_transfers * self.model_bytes
 
-    def snapshot(self) -> Dict[str, int]:
+    def snapshot(self) -> Dict[str, float]:
         return {
             "total_transfers": self.total_transfers,
             "cloud_transfers": self.cloud_transfers,
             "p2p_transfers": self.p2p,
             "edge_transfers": self.edge_up + self.edge_down,
             "total_bytes": self.total_bytes,
+            "sim_seconds": self.sim_seconds,
         }

@@ -84,9 +84,12 @@ class BatchedEngine(Engine):
         aggm = grp.agg.matrix(padded) if grp.agg is not None else None
         keep = grp.keep_locals
         hops = grp.hops
+        # group-wide batch width: under scenario drops a single hop can
+        # lose every real plan, so the width cannot come from the hop alone
+        B = next(p.shape[1] for h in hops for p in h.plans if p is not None)
         if grp.seed is None and len(hops) == 1:
             # star cohort: the global model broadcasts inside the jit
-            out = self._train_hop(hops[0], padded, w_glob, broadcast=True,
+            out = self._train_hop(hops[0], padded, B, w_glob, broadcast=True,
                                   agg=aggm, keep_locals=keep, **kw)
         else:
             # ring lap sequence / seeded edge iteration: carry the lane
@@ -95,15 +98,15 @@ class BatchedEngine(Engine):
                       else self._seed_stack(prev, grp.seed, padded))
             for j, hop in enumerate(hops):
                 last = j == len(hops) - 1
-                out = self._train_hop(hop, padded, models, broadcast=False,
+                out = self._train_hop(hop, padded, B, models, broadcast=False,
                                       agg=aggm if last else None,
                                       keep_locals=keep and last, **kw)
                 if not last:
                     models = out
         return self._unpack(out, aggm is not None, keep)
 
-    def _train_hop(self, hop: Hop, padded: int, params, **kw):
+    def _train_hop(self, hop: Hop, padded: int, width: int, params, **kw):
         batches, valid = stack_plans(
             [self.clients[i] for i in hop.ids], list(hop.plans),
-            pad_to=padded)
+            pad_to=padded, width=width)
         return self.trainer.train_many(params, batches, valid, **kw)

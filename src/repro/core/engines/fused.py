@@ -54,12 +54,15 @@ class FusedEngine(BatchedEngine):
         aggm = grp.agg.matrix(padded) if grp.agg is not None else None
         keep = grp.keep_locals
         # every hop pads to the group-global max step count S so the hop
-        # axis stacks uniformly (H, C, S, B)
+        # axis stacks uniformly (H, C, S, B); B is group-wide too, since a
+        # scenario drop can empty a whole hop of real plans
         S = max(p.shape[0] for hop in grp.hops for p in hop.plans
                 if p is not None)
+        B = next(p.shape[1] for hop in grp.hops for p in hop.plans
+                 if p is not None)
         rows, idx, valid = zip(*(
             stack_plan_indices(list(hop.plans), list(hop.ids),
-                               pad_to=padded, steps=S)
+                               pad_to=padded, steps=S, width=B)
             for hop in grp.hops))
         if grp.seed is None:
             params, broadcast = w_glob, True
@@ -93,10 +96,13 @@ class FusedEngine(BatchedEngine):
         if variant in ("moon", "scaffold"):
             state.update(carry)
             # participation is planner-drawn, so the seen mask advances
-            # host-side — no device readback
+            # host-side — no device readback; 0-step lanes (scenario
+            # drops) stay unseen, matching the per-round driver
             for plan in plans:
-                ids = np.asarray(plan.groups[0].hops[0].ids)
-                state["seen"][ids] = True
+                g = plan.groups[0]
+                ids = np.asarray(g.hops[0].ids)
+                live = np.asarray(g.lane_steps()) > 0
+                state["seen"][ids[live]] = True
         return w_glob
 
     def _schedule_dims(self, groups):
@@ -129,12 +135,16 @@ class FusedEngine(BatchedEngine):
         for r, g in enumerate(groups):
             for h, hop in enumerate(g.hops):
                 rw, ix, vl = stack_plan_indices(
-                    list(hop.plans), list(hop.ids), pad_to=Cp, steps=S)
+                    list(hop.plans), list(hop.ids), pad_to=Cp, steps=S,
+                    width=B)
                 rows[r, h], idx[r, h], valid[r, h] = rw, ix, vl
             # hops past len(g.hops) stay all-invalid: every lane carried
             # unchanged, exactly the ring-tail rule
             aggv[r] = g.agg.matrix(Cp)
-            ids[r, :g.lanes] = g.hops[0].ids
+            # 0-step lanes (scenario drops) point at the dump row K so the
+            # in-scan state scatter discards them — same rule as ghosts
+            live = np.asarray(g.lane_steps()) > 0
+            ids[r, :g.lanes] = np.where(live, np.asarray(g.hops[0].ids), K)
         xs = {"rows": rows, "plans": idx, "valid": valid,
               "lr": np.asarray(lrs, np.float32), "aggv": aggv}
         if variant == "moon":
@@ -142,19 +152,23 @@ class FusedEngine(BatchedEngine):
             use_prev = np.zeros((n, Cp), bool)
             for r, g in enumerate(groups):
                 lane_ids = np.asarray(g.hops[0].ids)
+                live = np.asarray(g.lane_steps()) > 0
                 use_prev[r, :g.lanes] = seen[lane_ids]
-                seen[lane_ids] = True
+                seen[lane_ids[live]] = True
             xs.update(ids=ids, use_prev=use_prev)
         elif variant == "scaffold":
             kl = np.ones((n, Cp), np.float32)
             mw = np.zeros((n, Cp), np.float32)
             frac = np.zeros(n, np.float32)
             for r, g in enumerate(groups):
-                steps = g.lane_steps()
+                steps = np.asarray(g.lane_steps())
+                live = steps > 0
+                n_live = int(live.sum())
                 kl[r, :g.lanes] = np.asarray(
                     [max(k, 1) * float(lrs[r]) for k in steps], np.float32)
-                mw[r, :g.lanes] = 1.0 / g.lanes
-                frac[r] = g.lanes / K
+                mw[r, :g.lanes] = np.where(live, np.float32(1.0 / n_live),
+                                           np.float32(0.0))
+                frac[r] = np.float32(n_live / K)
             xs.update(ids=ids, kl=kl, mw=mw, frac=frac)
         return xs
 
@@ -180,7 +194,8 @@ class FusedEngine(BatchedEngine):
             for it, g in enumerate(plan.groups):
                 (hop,) = g.hops
                 rows[r, it], idx[r, it], valid[r, it] = stack_plan_indices(
-                    list(hop.plans), list(hop.ids), pad_to=Cp, steps=S)
+                    list(hop.plans), list(hop.ids), pad_to=Cp, steps=S,
+                    width=B)
             first, last = plan.groups[0], plan.groups[-1]
             # the un-collapsed (G, C) per-edge reduce, applied after every
             # iteration but the last (ghost lanes weigh 0 in every row)

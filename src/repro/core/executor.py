@@ -48,7 +48,7 @@ class RoundRecord:
 
     round: int
     accuracy: float
-    comm: Dict[str, int]
+    comm: Dict[str, float]
     lr: float
     seconds: float
     rounds: int = 1
@@ -119,7 +119,8 @@ def run_experiment(
             start_round = int(ck["round"])
             rng.bit_generator.state = ck["rng_state"]
             for k, v in ck["comm"].items():
-                setattr(meter, k, int(v))
+                setattr(meter, k,
+                        float(v) if k == "sim_seconds" else int(v))
             # pre-checkpoint history rides along so rounds_to_accuracy /
             # comm_to_accuracy see the full run, not just the resumed tail
             history = [RoundRecord(**h) for h in ck.get("history", [])]
@@ -155,7 +156,10 @@ def run_experiment(
         lrs = np.asarray([float(lr_fn(i)) for i in range(t, stop)])
         w_glob, state = algo.run_schedule(w_glob, t, lrs, rng, meter, state)
         t = stop
-        if t % eval_every == 0 or t == fl.rounds:
+        # `t == end` (not fl.rounds): a stop_after/rounds not aligned to
+        # eval_every still gets its final partial block evaluated, so
+        # history always reaches the returned final_model
+        if t % eval_every == 0 or t == end:
             acc = float(acc_fn(w_glob))
             now = time.perf_counter()
             history.append(RoundRecord(
@@ -214,6 +218,7 @@ def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter,
     comm = {f: int(getattr(meter, f)) for f in
             ("model_bytes", "cloud_up", "cloud_down", "edge_up",
              "edge_down", "p2p")}
+    comm["sim_seconds"] = float(meter.sim_seconds)
     with open(f"{ckdir}/state.json", "w") as f:
         _json.dump({"round": round_, "rng_state": rng.bit_generator.state,
                     "comm": comm,

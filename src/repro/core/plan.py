@@ -199,11 +199,14 @@ class RoundPlan:
     The round's output is the final group's collapsed aggregate (an empty
     ``groups`` tuple — e.g. ring_rounds=0 — leaves the global model
     unchanged). ``comm`` is applied to the meter once per round by the
-    driver; engines never touch the meter.
+    driver; engines never touch the meter. ``sim_seconds`` is the round's
+    closed-form simulated wall time (``core.scenario``), accumulated on
+    the meter the same way.
     """
 
     groups: Tuple[VisitGroup, ...]
     comm: Tuple[Tuple[str, int], ...] = ()
+    sim_seconds: float = 0.0
 
     def __post_init__(self):
         for g, grp in enumerate(self.groups):

@@ -1,0 +1,200 @@
+"""Straggler/dropout scenarios as a RoundPlan transform (ROADMAP item 2).
+
+Real IoT fleets drop, lag, and send stale updates (Khan et al.'s core
+deployment obstacle; Ni et al.'s first-class design constraint — see
+PAPERS.md). The RoundPlan IR already expresses everything those behaviours
+need — varying participation is lane padding, partial work is a valid-step
+mask, aggregation weights are data — so the whole scenario axis lives HERE,
+as a pure transform the planner base applies to every emitted plan:
+
+* **drop** — a per-round draw removes clients from the round: every one of
+  their visits becomes a ``None`` plan (the existing all-invalid rule, so
+  rings simply skip them and cohort lanes carry the seed unchanged) and
+  lanes that lose all members get aggregation weight 0, with the surviving
+  weights renormalized. At least one participant always survives.
+* **train-slow** — a fixed subset of the fleet (drawn once per experiment)
+  completes only ``slow_step_factor`` of each planned visit: their batch
+  plans are truncated, which every engine already understands as a shorter
+  valid-step mask. Truncation happens AFTER the plan is drawn, so the RNG
+  stream is untouched.
+* **send-slow / stale** — another fixed subset uploads late: each round
+  their update is ``s ~ Uniform{1..staleness_horizon}`` rounds stale and
+  its lane weight decays by the FedAsync polynomial ``(1 + s)^-a`` before
+  renormalization. Staleness is AggSpec data, so the decayed reduce still
+  runs inside the compiled dispatch.
+
+Because the transform only rewrites plan *data* (plans, weights), engines
+are untouched: a fused eval-to-eval block under an active scenario is
+still ONE compiled dispatch, and the scenario-off transform is the
+identity (no RNG draws, no plan changes) — pinned bit-exact in
+``tests/test_engine_matrix.py``.
+
+The simulated clock (``plan_seconds``) is closed-form on the final plan:
+per-client compute time is executed steps over a per-client rate (drawn
+once per experiment), each real visit ends in one model transfer, a
+group's time is its slowest lane (rings serialize hop by hop; cohorts are
+concurrent), and the round adds the cloud broadcast + upload. With
+``time_threshold`` the round clock is capped at the cutoff. The driver
+accumulates it on ``CommMeter.sim_seconds``, giving simulated-wall-to-
+accuracy curves next to the rounds- and transfers-to-accuracy ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.configs.base import ScenarioConfig
+from repro.core.plan import AggSpec, Hop, RoundPlan, VisitGroup
+
+
+class ScenarioState:
+    """Per-experiment scenario realization: which clients are train-slow /
+    send-slow and how fast each computes — all drawn ONCE from the
+    scenario's own seed, so constructing it never touches the experiment
+    RNG stream (scenario-off stays bit-exact, resume stays exact)."""
+
+    def __init__(self, cfg: ScenarioConfig, num_devices: int):
+        self.cfg = cfg
+        self.num_devices = num_devices
+        rng = np.random.default_rng(cfg.seed)
+        self.train_slow = np.zeros(num_devices, bool)
+        self.send_slow = np.zeros(num_devices, bool)
+        if cfg.train_slow_frac > 0:
+            n = int(round(num_devices * cfg.train_slow_frac))
+            self.train_slow[rng.choice(num_devices, size=n, replace=False)] = True
+        if cfg.send_slow_frac > 0:
+            n = int(round(num_devices * cfg.send_slow_frac))
+            self.send_slow[rng.choice(num_devices, size=n, replace=False)] = True
+        self.rates = rng.uniform(cfg.rate_min, cfg.rate_max, size=num_devices)
+
+    @property
+    def active(self) -> bool:
+        return self.cfg.active
+
+    # -- per-round outcome draws (consume the shared planner RNG) --------
+    def draw_round(self, plan: RoundPlan, rng: np.random.Generator,
+                   ) -> Tuple[Set[int], Dict[int, int]]:
+        """This round's ``(dropped ids, {id: staleness})``. Draw order is
+        fixed (drops, then staleness over sorted survivors) so every
+        driver consumes an identical stream; a fixed fraction of the
+        round's participants drops (HyperFed's ``client_drop_rate``
+        semantics), clamped so at least one always survives."""
+        cfg = self.cfg
+        participants = plan_participants(plan)
+        dropped: Set[int] = set()
+        if cfg.drop_rate > 0 and len(participants) > 1:
+            n_drop = min(int(round(len(participants) * cfg.drop_rate)),
+                         len(participants) - 1)
+            if n_drop > 0:
+                dropped = {int(i) for i in rng.choice(
+                    participants, size=n_drop, replace=False)}
+        stale: Dict[int, int] = {}
+        if cfg.send_slow_frac > 0 and cfg.staleness_horizon > 0:
+            for i in participants:
+                if self.send_slow[i] and i not in dropped:
+                    stale[i] = int(rng.integers(1, cfg.staleness_horizon + 1))
+        return dropped, stale
+
+    # -- the plan transform ---------------------------------------------
+    def transform(self, plan: RoundPlan, rng: np.random.Generator,
+                  ) -> Tuple[RoundPlan, Set[int]]:
+        """Apply the scenario to one plan; returns the rewritten plan and
+        the dropped-client set (planners rebuild comm records from it)."""
+        if not plan.groups:
+            return plan, set()
+        dropped, stale = self.draw_round(plan, rng)
+        groups = tuple(self._transform_group(g, dropped, stale)
+                       for g in plan.groups)
+        return dataclasses.replace(plan, groups=groups), dropped
+
+    def _transform_group(self, grp: VisitGroup, dropped: Set[int],
+                         stale: Dict[int, int]) -> VisitGroup:
+        cfg = self.cfg
+        hops = []
+        for hop in grp.hops:
+            plans = []
+            for i, p in zip(hop.ids, hop.plans):
+                if p is None or i in dropped:
+                    plans.append(None)
+                elif self.train_slow[i]:
+                    keep = max(1, int(np.ceil(p.shape[0]
+                                              * cfg.slow_step_factor)))
+                    plans.append(p[:keep])
+                else:
+                    plans.append(p)
+            hops.append(Hop(ids=hop.ids, plans=tuple(plans)))
+        hops = tuple(hops)
+        agg = grp.agg
+        if agg is not None:
+            # per-lane factor: 0 for lanes that lost every member, else the
+            # FedAsync decay of the lane's stalest surviving member
+            factor = np.ones(grp.lanes)
+            for c in range(grp.lanes):
+                members = {hop.ids[c] for hop in hops
+                           if hop.plans[c] is not None}
+                if not members:
+                    factor[c] = 0.0
+                elif stale:
+                    s = max((stale.get(i, 0) for i in members), default=0)
+                    if s:
+                        factor[c] = (1.0 + s) ** (-cfg.staleness_decay)
+            agg = _rescale_agg(agg, factor)
+        return dataclasses.replace(grp, hops=hops, agg=agg)
+
+    # -- the simulated clock --------------------------------------------
+    def plan_seconds(self, plan: RoundPlan) -> float:
+        """Closed-form simulated round time: a lane accumulates (steps /
+        client rate + one transfer) per real visit, a group takes as long
+        as its slowest lane, the round adds the cloud broadcast + upload,
+        and ``time_threshold`` (if set) caps the round clock — the server
+        cuts the round off rather than waiting for stragglers."""
+        if not plan.groups:
+            return 0.0
+        cfg = self.cfg
+        total = 0.0
+        for grp in plan.groups:
+            lane_t = np.zeros(grp.lanes)
+            for hop in grp.hops:
+                for c, (i, p) in enumerate(zip(hop.ids, hop.plans)):
+                    if p is not None:
+                        lane_t[c] += (p.shape[0] / self.rates[i]
+                                      + cfg.transfer_seconds)
+            total += float(lane_t.max())
+        total += 2 * cfg.transfer_seconds       # cloud down + up
+        if cfg.time_threshold > 0:
+            total = min(total, cfg.time_threshold)
+        return total
+
+
+def plan_participants(plan: RoundPlan) -> List[int]:
+    """Sorted client ids with at least one real visit in the plan."""
+    out = {int(hop.ids[c])
+           for grp in plan.groups for hop in grp.hops
+           for c in range(grp.lanes) if hop.plans[c] is not None}
+    return sorted(out)
+
+
+def _rescale_agg(agg: AggSpec, factor: np.ndarray) -> AggSpec:
+    """Scale lane weights by ``factor`` and renormalize within each group
+    (a group's surviving lanes re-share its mass); groups that lost every
+    lane get group weight 0, with the group weights renormalized in turn.
+    The round's at-least-one-survivor guarantee keeps some group alive, so
+    a collapsed spec always still sums to one model's worth of weight."""
+    lw = np.asarray(agg.lane_weights, np.float64) * factor
+    sums = np.asarray([lw[list(g)].sum() for g in agg.groups])
+    for g, lanes in enumerate(agg.groups):
+        if sums[g] > 0:
+            for lane in lanes:
+                lw[lane] /= sums[g]
+    gw: Optional[Tuple[float, ...]] = agg.group_weights
+    if gw is not None:
+        gv = np.asarray(gw, np.float64) * (sums > 0)
+        total = gv.sum()
+        if total <= 0:
+            raise ValueError(
+                "scenario dropped every lane of a collapsed aggregation")
+        gw = tuple((gv / total).tolist())
+    return dataclasses.replace(
+        agg, lane_weights=tuple(lw.tolist()), group_weights=gw)

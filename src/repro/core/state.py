@@ -82,6 +82,14 @@ def scaffold_step(c: Pytree, ci: Pytree, ids, locals_: Pytree,
     return c, scatter_rows(ci, ids, ci_new)
 
 
+# The per-round driver must call the COMPILED step: the fused block scan
+# traces ``scaffold_step`` into its own program, and XLA's compiled
+# reduction can round differently from the op-by-op eager dispatch once
+# scenario drops put zeros in ``mw`` — compiling the eager call site too
+# keeps chunked vs per-round bit-exact under every scenario.
+scaffold_step_compiled = jax.jit(scaffold_step)
+
+
 def pack_client_rows(stack: Pytree, seen: np.ndarray) -> Dict[int, Pytree]:
     """Carry -> checkpoint layout: the live rows of a client stack as a
     {client_id: tree} dict (the ``algo_state.msgpack`` format)."""

@@ -38,6 +38,11 @@ def dirichlet_partition(
     labels: np.ndarray, k: int, alpha: float, rng: np.random.Generator,
     min_per_device: int = 2,
 ) -> List[np.ndarray]:
+    if len(labels) < k * min_per_device:
+        raise ValueError(
+            f"dirichlet partition needs >= k*min_per_device = "
+            f"{k * min_per_device} samples to give every device "
+            f"{min_per_device}, got {len(labels)}")
     classes = np.unique(labels)
     buckets: List[list] = [[] for _ in range(k)]
     for c in classes:
@@ -48,10 +53,15 @@ def dirichlet_partition(
         splits = (np.cumsum(p) * len(idx_c)).astype(int)[:-1]
         for d, part in enumerate(np.split(idx_c, splits)):
             buckets[d].extend(part.tolist())
-    # re-balance empties (rare at small alpha): steal from the largest bucket
+    # re-balance deficits (rare at small alpha): steal from the largest
+    # OTHER bucket — argmax over all buckets could pick the deficient
+    # bucket itself (infinite self-steal loop). With total >= k*min, some
+    # other bucket always holds > min samples, so donors never sink below
+    # min_per_device
     for d in range(k):
         while len(buckets[d]) < min_per_device:
-            donor = int(np.argmax([len(b) for b in buckets]))
+            sizes = [len(b) if i != d else -1 for i, b in enumerate(buckets)]
+            donor = int(np.argmax(sizes))
             buckets[d].append(buckets[donor].pop())
     return [np.sort(np.asarray(b, dtype=np.int64)) for b in buckets]
 
@@ -60,9 +70,20 @@ def partition(
     labels: np.ndarray, *, scheme: str, k: int, rng: np.random.Generator,
     xi: int = 2, alpha: float = 0.3,
 ) -> List[np.ndarray]:
+    if k < 1:
+        raise ValueError(f"need at least one device, got k={k}")
+    if len(labels) < k:
+        raise ValueError(
+            f"cannot give {k} devices non-empty shards from "
+            f"{len(labels)} samples")
     if scheme == "iid":
         return iid_partition(labels, k, rng)
     if scheme == "pathological":
+        if len(labels) < k * xi:
+            raise ValueError(
+                f"pathological partition slices {k}*xi={k * xi} shards "
+                f"but only {len(labels)} samples exist — some shards "
+                "would be empty")
         return pathological_partition(labels, k, xi, rng)
     if scheme == "dirichlet":
         return dirichlet_partition(labels, k, alpha, rng)

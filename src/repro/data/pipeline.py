@@ -58,21 +58,29 @@ def plan_epoch_indices(
     return np.concatenate(rows, axis=0)
 
 
-def _plan_batch_width(plans: Sequence[Optional[np.ndarray]]) -> int:
-    """Batch width B shared by every real plan in a stack; a stack of only
-    ``None`` plans has no batch shape to pad to, so it is a caller error."""
+def _plan_batch_width(plans: Sequence[Optional[np.ndarray]],
+                      width: Optional[int] = None) -> int:
+    """Batch width B shared by every real plan in a stack. A stack of only
+    ``None`` plans has no batch shape of its own, so the caller must supply
+    ``width`` (engines pass the group-wide width — under scenario drops a
+    whole hop can lose every real plan); without it, all-``None`` is a
+    caller error."""
+    if width is not None:
+        return width
     for p in plans:
         if p is not None:
             return p.shape[1]
     raise ValueError(
         "cannot stack batch plans: every plan is None (at least one client "
-        "in the stack must have a real (steps, batch) index plan)")
+        "in the stack must have a real (steps, batch) index plan, or pass "
+        "an explicit batch width)")
 
 
 def stack_plans(
     clients: Sequence["ClientData"],
     plans: Sequence[Optional[np.ndarray]],
     pad_to: Optional[int] = None,
+    width: Optional[int] = None,
 ) -> Tuple[dict, np.ndarray]:
     """Materialize per-client batch plans into client-stacked arrays.
 
@@ -86,9 +94,10 @@ def stack_plans(
     until the client axis reaches ``pad_to``. The sharded engine uses this
     to round every cohort/ring count up to a multiple of the device-mesh
     size so the ``(C, ...)`` stack shards evenly; ghost rows never train
-    (every step invalid) and never draw from the RNG stream.
+    (every step invalid) and never draw from the RNG stream. ``width``
+    supplies the batch width when the stack might be all-``None``.
     """
-    B = _plan_batch_width(plans)
+    B = _plan_batch_width(plans, width)
     real = [p if p is not None else np.zeros((1, B), np.int64) for p in plans]
     S = max(p.shape[0] for p in real)
     imgs, labs = [], []
@@ -130,6 +139,7 @@ def stack_plan_indices(
     client_rows: Sequence[int],
     pad_to: Optional[int] = None,
     steps: Optional[int] = None,
+    width: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Index-only analogue of ``stack_plans`` for the fused engine.
 
@@ -145,12 +155,15 @@ def stack_plan_indices(
     ``steps`` forces the step axis to at least S (the fused ring runner
     pads every hop to the round-global maximum so hops stack along a
     uniform (H, C, S, B) axis); ``pad_to`` appends ghost rows (row 0,
-    all-invalid) like ``stack_plans(pad_to=...)``.
+    all-invalid) like ``stack_plans(pad_to=...)``; ``width`` supplies the
+    batch width when the stack might be all-``None``.
     """
-    B = _plan_batch_width(plans)
-    S = max(p.shape[0] for p in plans if p is not None)
+    B = _plan_batch_width(plans, width)
+    S = max((p.shape[0] for p in plans if p is not None), default=0)
     if steps is not None:
         S = max(S, steps)
+    if S == 0:
+        raise ValueError("cannot stack an all-None hop without `steps`")
     C = len(plans)
     rows = np.asarray(client_rows, np.int32)
     idx = np.zeros((C, S, B), np.int32)

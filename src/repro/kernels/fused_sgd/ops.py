@@ -33,11 +33,16 @@ def fused_sgd_update(
     shape = p.shape
     n = p.size
     pad = (-n) % block
-    flat = lambda x: jnp.pad(x.reshape(-1), (0, pad))
+    def flat(x):
+        return jnp.pad(x.reshape(-1), (0, pad))
+
     lr_arr = jnp.asarray(lr, p.dtype).reshape(1)
     p_new, m_new = fused_sgd_flat(
         flat(p), flat(g), flat(m), lr_arr,
         momentum=momentum, nesterov=nesterov, block=block, interpret=interpret,
     )
-    unflat = lambda x: x[:n].reshape(shape)
+
+    def unflat(x):
+        return x[:n].reshape(shape)
+
     return unflat(p_new), unflat(m_new)

@@ -14,9 +14,11 @@ sharded data plane are exercised on CPU-only CI.
 import pytest
 
 from engine_parity import (
-    CASES, assert_chunked_parity, assert_engine_parity, run_round,
-    run_subprocess_matrix,
+    CASES, COMM_CHANNELS, assert_chunked_parity, assert_engine_parity,
+    max_diff, run_round, run_subprocess_matrix,
 )
+
+from repro.configs.base import ScenarioConfig
 
 ENGINES = ("batched", "sharded", "fused")
 
@@ -35,6 +37,26 @@ def test_chunked_schedule_parity(algo, overrides, engine):
     every algorithm x engine — including the fused engine, whose block is
     a single compiled scan carrying (w_glob, algo_state)."""
     assert_chunked_parity(algo, engine, tuple(overrides.items()))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("algo,overrides", CASES)
+def test_scenario_off_row_is_bitexact(algo, overrides, engine):
+    """The scenario-off pin: running with an EXPLICIT default
+    ``ScenarioConfig()`` must be bit-identical — same RNG stream, same
+    weights, same meters — to the rows above, which carry the pre-scenario
+    behaviour. The inactive transform draws nothing and rewrites nothing;
+    only the (new, deterministic) simulated clock is additionally stamped.
+    """
+    base = tuple(overrides.items())
+    off = base + (("scenario", ScenarioConfig()),)
+    w_b, m_b, s_b, _, _ = run_round(algo, engine, base)
+    w_o, m_o, s_o, _, _ = run_round(algo, engine, off)
+    assert s_b == s_o, (algo, engine)
+    assert max_diff(w_b, w_o) == 0.0, (algo, engine)
+    for ch in COMM_CHANNELS:
+        assert getattr(m_b, ch) == getattr(m_o, ch), (algo, engine, ch)
+    assert m_b.sim_seconds == m_o.sim_seconds, (algo, engine)
 
 
 @pytest.mark.parametrize("engine,algo", [("batched", "fedavg"),

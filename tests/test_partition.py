@@ -14,6 +14,7 @@ except ModuleNotFoundError:              # ... fixed examples otherwise
 from repro.data.partition import (
     dirichlet_partition,
     iid_partition,
+    partition,
     pathological_partition,
 )
 
@@ -110,6 +111,42 @@ def test_pathological_is_label_skewed():
     classes_per_device = [len(np.unique(labels[p])) for p in parts]
     # xi=2: most devices should see very few classes — the paper's Fig. 8(b)
     assert np.median(classes_per_device) <= 3
+
+
+def test_dirichlet_too_few_samples_raises_not_hangs():
+    """Regression: with fewer than k*min_per_device samples the re-balance
+    loop could never satisfy every device — and its argmax could pick the
+    deficient bucket itself, self-stealing forever. Now a clear ValueError
+    up front."""
+    with pytest.raises(ValueError, match="min_per_device"):
+        dirichlet_partition(np.zeros(3, dtype=np.int64), 2, 0.1,
+                            np.random.default_rng(0))
+
+
+def test_dirichlet_rebalance_respects_min_per_device():
+    """Regression: stealing from the globally-largest bucket could drag a
+    donor below min_per_device. Alpha tiny + many devices forces heavy
+    re-balancing; every device must still end with >= min_per_device."""
+    labels = np.repeat(np.arange(2), 15)   # 30 samples, 12 devices, min 2
+    for seed in range(10):
+        parts = dirichlet_partition(labels, 12, 0.01,
+                                    np.random.default_rng(seed))
+        _check_disjoint_cover(parts, 30)
+        assert min(len(p) for p in parts) >= 2, seed
+
+
+def test_partition_validates_inputs():
+    rng = np.random.default_rng(0)
+    labels = np.zeros(10, dtype=np.int64)
+    with pytest.raises(ValueError, match="at least one device"):
+        partition(labels, scheme="iid", k=0, rng=rng)
+    with pytest.raises(ValueError, match="non-empty"):
+        partition(labels, scheme="iid", k=11, rng=rng)
+    # pathological slices k*xi shards; 10 samples cannot fill 6*2 shards
+    with pytest.raises(ValueError, match="shards"):
+        partition(labels, scheme="pathological", k=6, xi=2, rng=rng)
+    with pytest.raises(ValueError, match="unknown partition"):
+        partition(labels, scheme="sorted", k=2, rng=rng)
 
 
 def test_dirichlet_alpha_controls_skew():

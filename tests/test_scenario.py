@@ -1,0 +1,293 @@
+"""Straggler/dropout scenario axis (core.scenario + the planner seam).
+
+The scenario transform rewrites plan DATA only (None plans, truncated
+valid-step masks, AggSpec weights), so the guarantees it owes the rest of
+the system are: (1) every engine still reproduces sequential under an
+active scenario, (2) the chunked ``run_schedule`` block stays BIT-exact
+against the per-round driver and — under the fused engine — still runs as
+ONE compiled dispatch, (3) the scenario-off transform is the identity
+(pinned in test_engine_matrix.py), and (4) the simulated clock and the
+drop/staleness draws follow their closed-form definitions.
+"""
+import numpy as np
+import pytest
+
+from engine_parity import (
+    ALGOS, COMM_CHANNELS, assert_chunked_parity, assert_engine_parity,
+    run_round, run_schedule, trainer,
+)
+
+from repro.configs.base import FLConfig, ScenarioConfig
+from repro.core.scenario import ScenarioState, _rescale_agg, plan_participants
+from repro.core.plan import AggSpec
+
+# every knob at once: drops, truncated steps, staleness decay, a 4x rate
+# spread and per-transfer cost on the simulated clock
+FULL = ScenarioConfig(drop_rate=0.25, train_slow_frac=0.25,
+                      send_slow_frac=0.25, slow_step_factor=0.5,
+                      staleness_horizon=3, staleness_decay=0.5,
+                      rate_min=0.5, rate_max=2.0, transfer_seconds=0.01,
+                      seed=3)
+
+ENGINES = ("batched", "sharded", "fused")
+
+
+# ---------------------------------------------------------------------------
+# config validation (satellite: clear errors instead of silent nonsense)
+
+
+@pytest.mark.parametrize("bad", [
+    {"drop_rate": 1.0}, {"drop_rate": -0.1}, {"train_slow_frac": 1.5},
+    {"send_slow_frac": -0.5}, {"slow_step_factor": 0.0},
+    {"staleness_horizon": -1}, {"rate_min": 0.0},
+    {"rate_min": 2.0, "rate_max": 1.0}, {"transfer_seconds": -1.0},
+])
+def test_scenario_config_rejects_bad_knobs(bad):
+    with pytest.raises(ValueError):
+        ScenarioConfig(**bad)
+
+
+def test_participation_validated():
+    with pytest.raises(ValueError, match="participation"):
+        FLConfig(participation=0.0)
+    with pytest.raises(ValueError, match="participation"):
+        FLConfig(participation=1.5)
+
+
+def test_default_scenario_is_inactive():
+    assert not ScenarioConfig().active
+    assert FULL.active
+    # rate spread / transfer cost alone don't activate the transform: they
+    # only shape the always-on simulated clock
+    assert not ScenarioConfig(rate_min=0.5, rate_max=2.0,
+                              transfer_seconds=1.0).active
+
+
+# ---------------------------------------------------------------------------
+# unit: the draw + transform on a real planner's plans
+
+
+def _planner(algo="fedavg", scenario=FULL, **overrides):
+    from repro.core.algorithms import make_algorithm
+    from repro.data.pipeline import make_clients
+    from repro.data.synthetic import make_task
+
+    fl = FLConfig(algorithm=algo, num_devices=8, num_edges=2, rounds=2,
+                  ring_rounds=2, local_epochs=1, batch_size=8, momentum=0.5,
+                  scenario=scenario, **overrides)
+    train, _ = make_task("mnist_like", train_per_class=10, test_per_class=2,
+                         seed=0)
+    clients = make_clients(train, scheme="dirichlet", num_devices=8,
+                           rng=np.random.default_rng(0), alpha=0.5)
+    return make_algorithm(algo, trainer(), clients, fl)
+
+
+def test_drop_rate_drops_that_fraction_with_survivors():
+    algo = _planner(scenario=ScenarioConfig(drop_rate=0.25))
+    plan = algo.plan_round(0, np.random.default_rng(7), {})
+    # 8 participants * 0.25 -> exactly 2 dropped: their visits are None
+    live = plan_participants(plan)
+    assert len(live) == 6
+    grp = plan.groups[0]
+    dead = [c for c in range(grp.lanes) if grp.hops[0].plans[c] is None]
+    assert len(dead) == 2
+    # dead lanes carry weight 0 and the survivors renormalize to 1
+    lw = np.asarray(grp.agg.lane_weights)
+    assert all(lw[c] == 0.0 for c in dead)
+    assert np.isclose(lw.sum(), 1.0)
+
+
+def test_drop_always_leaves_a_survivor():
+    # drop_rate .9 on 8 participants rounds to 7 dropped, never 8
+    algo = _planner(scenario=ScenarioConfig(drop_rate=0.9))
+    for t in range(4):
+        plan = algo.plan_round(t, np.random.default_rng(t), {})
+        assert len(plan_participants(plan)) >= 1
+
+
+def test_train_slow_truncates_steps_only():
+    sc = ScenarioConfig(train_slow_frac=0.5, slow_step_factor=0.5, seed=3)
+    slow = ScenarioState(sc, 8).train_slow
+    assert slow.sum() == 4
+    base = _planner(scenario=ScenarioConfig()).plan_round(
+        0, np.random.default_rng(7), {})
+    plan = _planner(scenario=sc).plan_round(0, np.random.default_rng(7), {})
+    hop0, hop1 = base.groups[0].hops[0], plan.groups[0].hops[0]
+    assert hop0.ids == hop1.ids  # the cohort draw itself is untouched
+    for i, p0, p1 in zip(hop0.ids, hop0.plans, hop1.plans):
+        if slow[i]:
+            assert p1.shape[0] == max(1, int(np.ceil(p0.shape[0] * 0.5)))
+            np.testing.assert_array_equal(p1, p0[: p1.shape[0]])
+        else:
+            np.testing.assert_array_equal(p1, p0)
+    # slow clients still aggregate at full weight (they're late-ish, not
+    # stale: only send-slow clients decay)
+    assert plan.groups[0].agg.lane_weights == base.groups[0].agg.lane_weights
+
+
+def test_staleness_decays_and_renormalizes_weights():
+    sc = ScenarioConfig(send_slow_frac=0.5, staleness_horizon=3,
+                        staleness_decay=0.5, seed=3)
+    st = ScenarioState(sc, 8)
+    algo = _planner(scenario=sc)
+    rng = np.random.default_rng(7)
+    base = _planner(scenario=ScenarioConfig()).plan_round(
+        0, np.random.default_rng(7), {})
+    plan = algo.plan_round(0, rng, {})
+    grp, grp0 = plan.groups[0], base.groups[0]
+    lw, lw0 = np.asarray(grp.agg.lane_weights), np.asarray(grp0.agg.lane_weights)
+    assert np.isclose(lw.sum(), 1.0)
+    stale_lanes = [c for c in range(grp.lanes)
+                   if st.send_slow[grp.hops[0].ids[c]]]
+    assert stale_lanes, "seed 3 must mark some cohort member send-slow"
+    # stale lanes lost relative mass, fresh lanes gained it
+    for c in range(grp.lanes):
+        if c in stale_lanes:
+            assert lw[c] < lw0[c]
+        else:
+            assert lw[c] > lw0[c]
+
+
+def test_rescale_agg_zeroes_dead_groups_and_renormalizes():
+    agg = AggSpec(groups=((0, 1), (2, 3)), lane_weights=(0.5, 0.5, 0.5, 0.5),
+                  group_weights=(0.5, 0.5))
+    out = _rescale_agg(agg, np.array([1.0, 0.0, 0.0, 0.0]))
+    assert out.lane_weights[0] == 1.0          # survivor takes its group
+    assert out.group_weights == (1.0, 0.0)     # dead group zeroed, renorm
+    with pytest.raises(ValueError):
+        _rescale_agg(agg, np.zeros(4))
+
+
+def test_inactive_scenario_is_identity():
+    """Scenario-off plan_round = _plan_round + sim_seconds stamp: no extra
+    RNG draws (the stream is what pre-scenario code consumed) and no plan
+    rewrites — the root of the bit-exactness guarantee pinned in
+    test_engine_matrix.py."""
+    algo = _planner(scenario=ScenarioConfig())
+    r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+    p_tpl = algo.plan_round(0, r1, {})
+    p_raw = algo._plan_round(0, r2, {})
+    assert r1.bit_generator.state == r2.bit_generator.state
+    g_tpl, g_raw = p_tpl.groups[0], p_raw.groups[0]
+    assert g_tpl.hops[0].ids == g_raw.hops[0].ids
+    assert g_tpl.agg.lane_weights == g_raw.agg.lane_weights
+    for a, b in zip(g_tpl.hops[0].plans, g_raw.hops[0].plans):
+        np.testing.assert_array_equal(a, b)
+    assert p_tpl.sim_seconds > 0 and p_raw.sim_seconds == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the simulated clock
+
+
+def test_sim_clock_closed_form():
+    # rates=1, transfer_seconds=0.5: a cohort round is max(steps) + 0.5 per
+    # visit + 2*0.5 for the cloud broadcast/upload
+    sc = ScenarioConfig(transfer_seconds=0.5)
+    algo = _planner(scenario=sc)
+    plan = algo._plan_round(0, np.random.default_rng(7), {})
+    steps = [p.shape[0] for p in plan.groups[0].hops[0].plans]
+    expect = max(steps) + 0.5 + 2 * 0.5
+    assert np.isclose(algo.scenario.plan_seconds(plan), expect)
+    got = algo.plan_round(0, np.random.default_rng(7), {})
+    assert np.isclose(got.sim_seconds, expect)
+
+
+def test_sim_clock_waits_for_slowest_rate():
+    fast = ScenarioState(ScenarioConfig(), 8)
+    slow = ScenarioState(ScenarioConfig(rate_min=0.25, rate_max=0.25), 8)
+    algo = _planner(scenario=ScenarioConfig())
+    plan = algo._plan_round(0, np.random.default_rng(7), {})
+    assert np.isclose(slow.plan_seconds(plan), 4 * fast.plan_seconds(plan))
+
+
+def test_time_threshold_caps_round_clock():
+    st = ScenarioState(ScenarioConfig(time_threshold=1.5), 8)
+    algo = _planner(scenario=ScenarioConfig())
+    plan = algo._plan_round(0, np.random.default_rng(7), {})
+    assert st.plan_seconds(plan) == 1.5
+
+
+def test_meter_accumulates_sim_seconds():
+    _, meter, _, _, _ = run_round("fedavg", "sequential",
+                                  (("scenario", FULL),))
+    assert meter.sim_seconds > 0
+    assert meter.snapshot()["sim_seconds"] == meter.sim_seconds
+
+
+# ---------------------------------------------------------------------------
+# the system contracts: parity + one-dispatch under an active scenario
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("algo", ALGOS)
+def test_active_scenario_engine_parity(algo, engine):
+    """Every engine reproduces sequential under the full scenario: same
+    RNG stream (drops/staleness are planner draws), <=1e-5 outputs, equal
+    meters INCLUDING the simulated clock."""
+    ov = (("scenario", FULL),)
+    assert_engine_parity(algo, engine, ov)
+    _, m_seq, _, _, _ = run_round(algo, "sequential", ov)
+    _, m_eng, _, _, _ = run_round(algo, engine, ov)
+    assert m_seq.sim_seconds == m_eng.sim_seconds, (algo, engine)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_active_scenario_chunked_bitexact_one_dispatch(algo):
+    """The acceptance criterion: a fused eval-to-eval block under an
+    ACTIVE scenario is still bit-exact against the per-round driver and
+    still executes as ONE compiled dispatch."""
+    ov = (("scenario", FULL),)
+    assert_chunked_parity(algo, "fused", ov)
+    _, m_r, _, _, _ = run_round(algo, "fused", ov)
+    _, m_c, _, _, dispatches = run_schedule(algo, "fused", ov)
+    assert m_r.sim_seconds == m_c.sim_seconds, algo
+    assert dispatches == 1, (algo, dispatches)
+
+
+def test_drop_reduces_upload_comm():
+    ov = (("scenario", ScenarioConfig(drop_rate=0.25)),)
+    _, m, _, _, _ = run_round("fedavg", "sequential", ov)
+    _, m0, _, _, _ = run_round("fedavg", "sequential")
+    # broadcasts unchanged (the server doesn't know who will drop), uploads
+    # only from the 6 survivors: 2 rounds x (8 down, 6 up)
+    assert m.cloud_down == m0.cloud_down == 16
+    assert m.cloud_up == 12 and m0.cloud_up == 16
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: run_experiment under a scenario + the executor eval fix
+
+
+def _tiny_run(fl, **kw):
+    from repro.configs import get_config
+    from repro.core.executor import run_experiment
+    from repro.data.synthetic import make_task
+
+    train, test = make_task("mnist_like", train_per_class=16,
+                            test_per_class=4, seed=0)
+    return run_experiment(task="mnist_like",
+                          model_cfg=get_config("fedsr-mlp"), fl=fl,
+                          train=train, test=test, **kw)
+
+
+def test_run_experiment_under_scenario_records_sim_clock():
+    fl = FLConfig(algorithm="fedsr", num_devices=8, num_edges=2, rounds=4,
+                  ring_rounds=2, local_epochs=1, batch_size=8,
+                  engine="fused", scenario=FULL)
+    res = _tiny_run(fl, eval_every=2)
+    sims = [r.comm["sim_seconds"] for r in res.history]
+    assert len(sims) == 2 and 0 < sims[0] < sims[1]
+    assert np.isfinite(res.final_accuracy)
+
+
+def test_final_partial_block_gets_evaluated():
+    """Regression (executor): rounds=5 with eval_every=2 used to drop the
+    final odd round's eval — history must reach the returned final_model."""
+    fl = FLConfig(algorithm="fedavg", num_devices=4, num_edges=2, rounds=5,
+                  local_epochs=1, batch_size=8)
+    res = _tiny_run(fl, eval_every=2)
+    assert [r.round for r in res.history] == [2, 4, 5]
+    # same off the stop_after path (simulated interruption mid-run)
+    res = _tiny_run(fl, eval_every=2, stop_after=3)
+    assert [r.round for r in res.history] == [2, 3]
