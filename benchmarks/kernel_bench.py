@@ -322,7 +322,48 @@ def bench_fl_schedule_chunked(num_devices: int = 64, ring_rounds: int = 4,
             f";per_round_dispatches={disp['per_round']}")
 
 
+def bench_fleet_scale_hoststore(fleet_sizes=(2048, 50_000), cohort: int = 8,
+                                rounds: int = 2) -> Tuple[str, float, str]:
+    """The client-virtualization A/B (PR 7): FedSR at growing fleet size K
+    with a FIXED per-round cohort (``participation = cohort/K`` -> two
+    rings of 4), ``store="host"`` vs ``store="device"``, fused engine.
+    Per K, ``derived`` reports both stores' peak device bytes
+    (``ExperimentResult.peak_device_bytes``: block cohort arena + staged
+    state) and their ratio — the device store's footprint grows O(K)
+    while the host store's stays O(cohort), which is what lets the
+    default sizes reach a K=50,000-client massive-IoT fleet end-to-end on
+    one host. us_per_call is the host store's wall time per round at the
+    LARGEST K (staging included)."""
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.executor import run_experiment
+    from repro.data.synthetic import make_task
+
+    cfg = get_config("fedsr-mlp")
+    parts, us = [], 0.0
+    for K in fleet_sizes:
+        # >= 1 sample per client so every shard is trainable
+        train, test = make_task("mnist_like",
+                                train_per_class=K // 10 + 1,
+                                test_per_class=2, seed=0)
+        peaks = {}
+        for store in ("host", "device"):
+            fl = FLConfig(algorithm="fedsr", num_devices=K,
+                          num_edges=K // 4, participation=cohort / K,
+                          rounds=rounds, ring_rounds=2, local_epochs=1,
+                          batch_size=8, engine="fused", store=store)
+            t0 = time.perf_counter()
+            res = run_experiment(task="mnist_like", model_cfg=cfg, fl=fl,
+                                 eval_every=rounds, train=train, test=test)
+            if store == "host":
+                us = (time.perf_counter() - t0) / rounds * 1e6
+            peaks[store] = res.peak_device_bytes
+        parts.append(f"K{K}:host={peaks['host']};device={peaks['device']}"
+                     f";ratio={peaks['host'] / peaks['device']:.4f}")
+    return ("fleet_scale_fedsr_hoststore", us, "|".join(parts))
+
+
 ALL = [bench_attention, bench_ssd, bench_fused_sgd, bench_decode_attention,
        bench_fl_engines, bench_fl_engines_sharded, bench_fl_engines_fused,
        bench_ring_round_fedsr, bench_fedsr_onedispatch,
-       bench_fl_schedule_chunked]
+       bench_fl_schedule_chunked, bench_fleet_scale_hoststore]

@@ -102,8 +102,8 @@ def run_smoke() -> None:
     rot. Invoked from tier-1 (tests/test_benchmarks_smoke.py)."""
     from benchmarks.kernel_bench import (
         bench_fedsr_onedispatch, bench_fl_engines, bench_fl_engines_fused,
-        bench_fl_engines_sharded, bench_fl_schedule_chunked, bench_fused_sgd,
-        bench_ring_round_fedsr,
+        bench_fl_engines_sharded, bench_fl_schedule_chunked,
+        bench_fleet_scale_hoststore, bench_fused_sgd, bench_ring_round_fedsr,
     )
 
     name, us, derived = bench_fused_sgd()
@@ -123,6 +123,11 @@ def run_smoke() -> None:
     name, us, derived = bench_fl_schedule_chunked(num_devices=8,
                                                   ring_rounds=2, num_edges=2,
                                                   block=4, iters=1)
+    _emit(f"kernel/{name}", us, derived)
+    # the PR-7 acceptance row at reduced K: host-store peak device bytes
+    # must stay O(cohort) while the device store's grow with the fleet
+    name, us, derived = bench_fleet_scale_hoststore(fleet_sizes=(256, 2048),
+                                                    cohort=8, rounds=2)
     _emit(f"kernel/{name}", us, derived)
 
     from repro.configs import get_config

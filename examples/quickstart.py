@@ -1,11 +1,17 @@
 """Quickstart: FedSR vs FedAvg on a non-IID synthetic image task.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--store host]
 
 Runs ~1 minute on CPU. Demonstrates the paper's two claims:
 (1) FedSR tolerates pathological label skew far better than FedAvg;
 (2) FedSR's cloud only talks to M edge servers, not K devices.
+
+``--store host`` keeps client shards host-resident and stages only each
+round's cohort onto the device (bit-identical results; see README
+"Client stores & fleet scale") — the peak-device-bytes line shows what
+that buys at scale.
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -16,21 +22,29 @@ from repro.core.executor import run_experiment
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", default="device", choices=("device", "host"),
+                    help="client shard residency (FLConfig.store)")
+    ap.add_argument("--engine", default="sequential",
+                    help="round engine: sequential|batched|sharded|fused")
+    args = ap.parse_args()
     cfg = get_config("fedsr-mlp")
     print("== FedSR quickstart: 20 devices, 5 edge servers, "
-          "pathological non-IID (xi=2) ==")
+          f"pathological non-IID (xi=2), store={args.store} ==")
     for algo, local_e, ring_r in [("fedavg", 5, 1), ("fedsr", 1, 5)]:
         fl = FLConfig(
             algorithm=algo, num_devices=20, num_edges=5, rounds=10,
             partition="pathological", xi=2,
             local_epochs=local_e, ring_rounds=ring_r,
+            engine=args.engine, store=args.store,
         )
         res = run_experiment(task="mnist_like", model_cfg=cfg, fl=fl,
                              eval_every=5, quiet=False)
         comm = res.history[-1].comm
         print(f"--> {algo:8s} final acc {res.final_accuracy:.4f} | "
               f"cloud transfers {comm['cloud_transfers']} | "
-              f"P2P transfers {comm['p2p_transfers']}\n")
+              f"P2P transfers {comm['p2p_transfers']} | "
+              f"peak device bytes {res.peak_device_bytes}\n")
 
 
 if __name__ == "__main__":

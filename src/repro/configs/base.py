@@ -249,6 +249,18 @@ class FLConfig:
                                      # engine="sharded", no sharding otherwise.
                                      # Setting it on engine="batched" opts that
                                      # engine into the same mesh placement.
+    store: str = "device"            # client residency (data.store):
+                                     # device: fleet shards + algorithm state
+                                     #   live on device for the whole run
+                                     #   (upload-once; today's semantics
+                                     #   bit-for-bit);
+                                     # host: the fleet stays host-resident and
+                                     #   each schedule block stages only its
+                                     #   visited clients' shards + state rows
+                                     #   onto device (a CohortArena), so peak
+                                     #   device memory scales with the cohort
+                                     #   instead of K — massive-IoT fleets
+                                     #   (K ~ 10^5) run on one host.
     use_fused_sgd: bool = False      # opt-in: apply the momentum update as one
                                      # fused Pallas pass over the raveled
                                      # parameter vector instead of per-leaf
@@ -265,6 +277,9 @@ class FLConfig:
             raise ValueError(
                 f"participation={self.participation} must be in (0, 1] "
                 "(a fraction of devices sampled per round)")
+        if self.store not in ("device", "host"):
+            raise ValueError(
+                f"store={self.store!r} must be 'device' or 'host'")
 
     @property
     def devices_per_edge(self) -> int:

@@ -17,15 +17,16 @@ per-engine discipline. Algorithms with memory (MOON's previous locals,
 SCAFFOLD's control variates) request the final group's per-lane models
 (``keep_locals``) and fold them back into ``state`` in ``update_state``.
 
-``run_round(w_glob, t, lr, rng, meter, state)`` is the per-round driver
-(benchmarks, parity tests): plan -> engine.run -> meter from plan.comm ->
-state update. ``run_schedule(w_glob, t0, lrs, rng, meter, state)`` is the
-chunked driver the executor uses: it pre-plans ``len(lrs)`` rounds into a
-``Schedule`` (same RNG order — plans reference state only through
-``StateRef`` sentinels, so round r+1 can be planned before round r runs)
-and hands the whole block to the engine; under the fused engine an
-eval-to-eval block is ONE compiled dispatch. Plans reference the global
-model only through the ``GLOBAL`` sentinel, so ``w_glob`` stays
+``run_schedule(w_glob, t0, lrs, rng, meter, state)`` is THE driver: it
+pre-plans ``len(lrs)`` rounds into a ``Schedule`` (same RNG order — plans
+reference state only through ``StateRef`` sentinels, so round r+1 can be
+planned before round r runs) and hands the whole block to the engine;
+under the fused engine an eval-to-eval block is ONE compiled dispatch.
+``run_round(w_glob, t, lr, rng, meter, state)`` (benchmarks, parity
+tests) is just a length-1 block through the same path — there is no
+separate per-round driver to keep in sync, and even a lone HierFAVG
+round fuses its R per-edge iterations. Plans reference the global model
+only through the ``GLOBAL`` sentinel, so ``w_glob`` stays
 device-resident across rounds — with the engines' in-jit aggregation
 there is no per-round unstack/host/restack of model trees at all.
 
@@ -33,6 +34,17 @@ Algorithm memory (MOON's previous locals, SCAFFOLD's control variates) is
 device-resident (``core.state``): a (K + 1, ...) client stack plus a host
 ``seen`` mask, updated by the same pure function whether the driver steps
 round-by-round or the fused engine scans a whole block.
+
+Client virtualization (``FLConfig.store="host"``): the block boundary is
+also the residency protocol's boundary. ``run_schedule`` computes the
+block's visited set from the pre-drawn plans (``Schedule.visited`` —
+participation is planner-drawn, so no device readback), stages the
+visited clients' state rows as a ``(V + 1, ...)`` cohort carry plus the
+fleet→cohort rowmap engines consume, asks the engine to stage the
+cohort's data (``Engine.stage_data`` — the fused engine's per-block
+``CohortArena``), records peak residency on ``self.residency``, runs the
+block, and scatters the trained rows back into the host arena. Peak
+device bytes for data + state therefore scale with the cohort, not K.
 """
 from __future__ import annotations
 
@@ -44,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.comm import CommMeter
+from repro.core.comm import CommMeter, ResidencyMeter
 from repro.core.engines import make_engine
 from repro.core.local import LocalTrainer
 from repro.core.plan import (
@@ -54,12 +66,13 @@ from repro.core.plan import (
 from repro.core.ring import ring_lap_hops
 from repro.core.scenario import ScenarioState
 from repro.core.state import (
-    client_stack, pack_client_rows, scaffold_step_compiled, scatter_rows,
-    unpack_client_rows,
+    client_stack, host_stack, pack_client_rows, rowmap_for,
+    scaffold_step_compiled, scatter_rows, stage_rows, unpack_client_rows,
+    unstage_rows,
 )
 from repro.core.topology import assign_edges, clusters_of, sample_ring
 from repro.data.pipeline import ClientData, plan_epoch_indices
-from repro.utils.tree import tree_stack, tree_zeros_like
+from repro.utils.tree import tree_bytes, tree_stack, tree_zeros_like
 
 Pytree = Any
 
@@ -70,6 +83,10 @@ class _Planner:
     variant = "plain"
     keep_locals = False
     _transfers_per_client = 1       # model each way (SCAFFOLD ships 2)
+    _client_fields: Tuple[str, ...] = ()    # per-client state arenas (staged
+                                            # per block under store="host")
+    _shared_fields: Tuple[str, ...] = ()    # unstacked device trees
+                                            # (SCAFFOLD's server variate)
 
     def __init__(self, trainer: LocalTrainer, clients: List[ClientData],
                  fl: FLConfig):
@@ -79,40 +96,92 @@ class _Planner:
         self.engine = make_engine(trainer, clients, fl)
         self.edges = assign_edges(fl.num_devices, fl.num_edges)
         self.scenario = ScenarioState(fl.scenario, fl.num_devices)
+        self.residency = ResidencyMeter()
 
-    # -- the two execution drivers (identical for every algorithm) -------
+    # -- THE execution driver (identical for every algorithm) ------------
     def run_round(self, w_glob, t, lr, rng: np.random.Generator,
                   meter: CommMeter, state: Dict) -> Tuple[Pytree, Dict]:
-        plan = self.plan_round(t, rng, state)
-        self.ensure_state(state, w_glob)
-        result = self.engine.run(plan, w_glob, lr, state)
-        if meter is not None:
-            for channel, count in plan.comm:
-                meter.record(channel, count)
-            meter.record_time(plan.sim_seconds)
-        self.update_state(plan, w_glob, result, lr, state)
-        return result.w_glob, state
+        """One round = a length-1 schedule block. The single block driver
+        serves both cadences (the old separate per-round driver is gone),
+        so the RNG stream, meters and state updates are shared by
+        construction — and under the fused engine even a lone HierFAVG
+        round fuses its R per-edge iterations into one dispatch."""
+        return self.run_schedule(w_glob, t, np.asarray([lr], np.float64),
+                                 rng, meter, state)
 
     def run_schedule(self, w_glob, t0, lrs, rng: np.random.Generator,
                      meter: CommMeter, state: Dict) -> Tuple[Pytree, Dict]:
-        """The chunked driver's block step: pre-plan ``len(lrs)`` rounds
-        (consuming the RNG stream exactly as ``len(lrs)`` ``run_round``
-        calls would) and execute them through the engine's block runner —
-        a python loop of rounds everywhere except the fused engine, where
-        the whole block is one compiled dispatch. Comm is applied from the
-        block's summed closed-form records."""
+        """The block driver: pre-plan ``len(lrs)`` rounds (consuming the
+        RNG stream exactly as ``len(lrs)`` single-round calls would) and
+        execute them through the engine's block runner — a python loop of
+        rounds everywhere except the fused engine, where the whole block
+        is one compiled dispatch. Comm is applied from the block's summed
+        closed-form records.
+
+        The block boundary doubles as the residency protocol's boundary
+        (``FLConfig.store="host"``): stage the visited clients' state
+        rows + cohort data, run, write the trained rows back — peak
+        device bytes recorded on ``self.residency``."""
         sched = self.plan_schedule(t0, len(lrs), rng, state)
         self.ensure_state(state, w_glob)
+        visited = sched.visited()
+        self._stage_state(state, visited)
+        data_bytes = self.engine.stage_data(visited)
+        self.residency.record(data_bytes, self._staged_state_bytes(state))
         w_glob = self.engine.run_schedule(sched, w_glob, lrs, state,
                                           self.update_state)
+        self._unstage_state(state)
         if meter is not None:
             for channel, count in sched.comm:
                 meter.record(channel, count)
             # accumulate round-by-round (NOT a pre-summed block total) so
-            # the float stream matches the per-round driver bit-exactly
+            # the float stream is block-size invariant bit-exactly
             for plan in sched.plans:
                 meter.record_time(plan.sim_seconds)
         return w_glob, state
+
+    # -- the residency protocol (client virtualization, core.state) ------
+    def _stage_state(self, state: Dict, visited: np.ndarray) -> None:
+        """Host store: upload the block's visited state rows as
+        ``(V + 1, ...)`` cohort carries and publish the fleet→cohort
+        rowmap that engines consume (``_resolve``, the fused engine's
+        in-scan scatter ids)."""
+        if self.fl.store != "host" or "_host" not in state:
+            return
+        state["_visited"] = visited
+        state["_rowmap"] = rowmap_for(visited, self.fl.num_devices)
+        for f in self._client_fields:
+            state[f] = stage_rows(state["_host"][f], visited)
+
+    def _unstage_state(self, state: Dict) -> None:
+        """Scatter the block's trained cohort rows back into the host
+        arena (one readback per field) and drop the staged carries."""
+        if "_visited" not in state:
+            return
+        visited = state.pop("_visited")
+        state.pop("_rowmap")
+        for f in self._client_fields:
+            state["_host"][f] = unstage_rows(state["_host"][f], visited,
+                                             state.pop(f))
+
+    def _staged_state_bytes(self, state: Dict) -> int:
+        """Device-resident algorithm-state bytes during the current block
+        (full (K + 1, ...) stacks under the device store, the staged
+        (V + 1, ...) carries under the host store)."""
+        return sum(tree_bytes(state[f])
+                   for f in self._client_fields + self._shared_fields
+                   if f in state)
+
+    def _state_rows(self, state: Dict, ids: np.ndarray,
+                    live: np.ndarray) -> np.ndarray:
+        """Scatter targets of a round's state update: live lanes write
+        their client row, dead lanes (scenario drops) the dump row —
+        remapped to cohort-local rows when a host-store block is staged."""
+        rows = np.where(live, ids, self.fl.num_devices).astype(np.int32)
+        rowmap = state.get("_rowmap")
+        if rowmap is not None:
+            rows = rowmap[rows]
+        return rows
 
     def plan_schedule(self, t0: int, n: int, rng: np.random.Generator,
                       state: Dict) -> Schedule:
@@ -252,6 +321,7 @@ class Moon(FedAvg):
     (``StateRef.fallback_global`` + the host ``seen`` mask)."""
     variant = "moon"
     keep_locals = True
+    _client_fields = ("prev",)
 
     def _extra_specs(self, ids, state):
         return ({"w_glob": GLOBAL},
@@ -259,32 +329,44 @@ class Moon(FedAvg):
                                  for i in ids)})
 
     def ensure_state(self, state, w_glob):
-        if "prev" not in state:
+        if "seen" in state:
+            return
+        if self.fl.store == "host":
+            state["_host"] = {"prev": host_stack(w_glob,
+                                                 self.fl.num_devices)}
+        else:
             state["prev"] = client_stack(w_glob, self.fl.num_devices)
-            state["seen"] = np.zeros(self.fl.num_devices + 1, bool)
+        state["seen"] = np.zeros(self.fl.num_devices + 1, bool)
 
     def update_state(self, plan, w_before, result, lr, state):
         grp = plan.groups[0]
         ids = np.asarray(grp.hops[0].ids, np.int32)
         # a lane that executed 0 steps (scenario drop) scatters to the
-        # ghost dump row K and stays unseen — its prev memory must not
+        # ghost dump row and stays unseen — its prev memory must not
         # become this round's untouched broadcast
         live = np.asarray(grp.lane_steps()) > 0
-        rows = np.where(live, ids, self.fl.num_devices).astype(np.int32)
+        rows = self._state_rows(state, ids, live)
         state["prev"] = scatter_rows(state["prev"], jnp.asarray(rows),
                                      tree_stack(result.locals_))
         state["seen"][ids[live]] = True
 
     def state_to_ckpt(self, state):
-        if "prev" not in state:
+        stack = (state["_host"]["prev"] if "_host" in state
+                 else state.get("prev"))
+        if stack is None:
             return {}
-        return {"prev": pack_client_rows(state["prev"], state["seen"])}
+        return {"prev": pack_client_rows(stack, state["seen"])}
 
     def state_from_ckpt(self, ck, w_glob):
         state: Dict = {}
         if ck.get("prev"):
-            state["prev"], state["seen"] = unpack_client_rows(
-                ck["prev"], w_glob, self.fl.num_devices)
+            if self.fl.store == "host":
+                arena, state["seen"] = unpack_client_rows(
+                    ck["prev"], w_glob, self.fl.num_devices, device=False)
+                state["_host"] = {"prev": arena}
+            else:
+                state["prev"], state["seen"] = unpack_client_rows(
+                    ck["prev"], w_glob, self.fl.num_devices)
         return state
 
 
@@ -301,6 +383,8 @@ class Scaffold(_Planner):
     variant = "scaffold"
     keep_locals = True
     _transfers_per_client = 2       # model + control variate each way
+    _client_fields = ("ci",)
+    _shared_fields = ("c",)
 
     def _plan_round(self, t, rng, state):
         ids = self._sample(rng)
@@ -316,10 +400,14 @@ class Scaffold(_Planner):
                          comm=(("cloud_down", n), ("cloud_up", n)))
 
     def ensure_state(self, state, w_glob):
-        if "c" not in state:
-            state["c"] = tree_zeros_like(w_glob)
+        if "c" in state:
+            return
+        state["c"] = tree_zeros_like(w_glob)
+        if self.fl.store == "host":
+            state["_host"] = {"ci": host_stack(w_glob, self.fl.num_devices)}
+        else:
             state["ci"] = client_stack(w_glob, self.fl.num_devices)
-            state["seen"] = np.zeros(self.fl.num_devices + 1, bool)
+        state["seen"] = np.zeros(self.fl.num_devices + 1, bool)
 
     def update_state(self, plan, w_before, result, lr, state):
         grp = plan.groups[0]
@@ -332,7 +420,7 @@ class Scaffold(_Planner):
         # 0-step lanes (scenario drops) scatter to the dump row and are
         # excluded from the server-variate mean and the |S|/K fraction
         live = steps > 0
-        rows = np.where(live, ids, self.fl.num_devices).astype(np.int32)
+        rows = self._state_rows(state, ids, live)
         n_live = int(live.sum())
         mw = np.where(live, np.float32(1.0 / n_live), np.float32(0.0))
         frac = np.float32(n_live / self.fl.num_devices)
@@ -345,15 +433,22 @@ class Scaffold(_Planner):
     def state_to_ckpt(self, state):
         if "c" not in state:
             return {}
+        stack = state["_host"]["ci"] if "_host" in state else state["ci"]
         return {"c": state["c"],
-                "ci": pack_client_rows(state["ci"], state["seen"])}
+                "ci": pack_client_rows(stack, state["seen"])}
 
     def state_from_ckpt(self, ck, w_glob):
         state: Dict = {}
         if "c" in ck:
             state["c"] = jax.tree.map(jnp.asarray, ck["c"])
-            state["ci"], state["seen"] = unpack_client_rows(
-                ck.get("ci") or {}, w_glob, self.fl.num_devices)
+            if self.fl.store == "host":
+                arena, state["seen"] = unpack_client_rows(
+                    ck.get("ci") or {}, w_glob, self.fl.num_devices,
+                    device=False)
+                state["_host"] = {"ci": arena}
+            else:
+                state["ci"], state["seen"] = unpack_client_rows(
+                    ck.get("ci") or {}, w_glob, self.fl.num_devices)
         return state
 
 

@@ -54,3 +54,27 @@ class CommMeter:
             "total_bytes": self.total_bytes,
             "sim_seconds": self.sim_seconds,
         }
+
+
+@dataclasses.dataclass
+class ResidencyMeter:
+    """Peak device-resident bytes of the client-virtualization protocol
+    (``FLConfig.store``): the block's cohort data arena plus its staged
+    algorithm-state rows, recorded once per schedule block by the driver.
+    The fleet-scale guarantee is read off ``peak_bytes``: under
+    ``store="host"`` it must scale with the cohort, never with K."""
+
+    data_bytes: int = 0     # latest block's cohort data arena
+    state_bytes: int = 0    # latest block's staged state rows
+    peak_bytes: int = 0     # max over blocks of data + state
+
+    def record(self, data_bytes: int, state_bytes: int) -> None:
+        self.data_bytes = int(data_bytes)
+        self.state_bytes = int(state_bytes)
+        self.peak_bytes = max(self.peak_bytes,
+                              self.data_bytes + self.state_bytes)
+
+    def snapshot(self) -> Dict[str, int]:
+        return {"data_bytes": self.data_bytes,
+                "state_bytes": self.state_bytes,
+                "peak_bytes": self.peak_bytes}

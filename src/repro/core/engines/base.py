@@ -45,8 +45,21 @@ class Engine:
             entry = state[value.field]
             if value.client < 0:
                 return entry        # a single unstacked tree (SCAFFOLD c)
-            return jax.tree.map(lambda x: x[value.client], entry)
+            row = value.client
+            rowmap = state.get("_rowmap")
+            if rowmap is not None:  # host store: a staged (V + 1, ...)
+                row = int(rowmap[row])  # cohort carry, fleet ids remapped
+            return jax.tree.map(lambda x: x[row], entry)
         return value
+
+    def stage_data(self, visited) -> int:
+        """Residency-protocol hook, called once per schedule block with
+        the block's visited fleet ids: make their data resident and
+        return the resident byte count. Only the fused engine keeps a
+        device arena; the host-fed engines read shards where they already
+        live (the ``stack_plans`` materialization), so there is nothing
+        to stage and no device residency to report."""
+        return 0
 
     def run(self, plan: RoundPlan, w_glob: Pytree, lr: float,
             state=None) -> RoundResult:

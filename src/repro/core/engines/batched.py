@@ -13,6 +13,13 @@ ghost-padded to the next mesh-size multiple (all-invalid zero-data lanes
 that never train, never draw RNG, and carry aggregation weight 0).
 ``FLConfig.mesh_data_axis`` opts the plain batched/fused engines into the
 same placement.
+
+This engine is host-fed — batch stacks cross H2D every hop — so
+``FLConfig.store="host"`` changes nothing about its data path
+(``stage_data`` inherits the 0-byte default). The store still virtualizes
+algorithm memory: MOON/SCAFFOLD rows arrive as a staged cohort carry and
+``Engine._resolve`` remaps ``StateRef`` clients through the block's
+``_rowmap`` table (``core.state``).
 """
 from __future__ import annotations
 

@@ -29,22 +29,44 @@ import numpy as np
 from repro.core.engines.batched import BatchedEngine
 from repro.core.plan import Schedule, VisitGroup
 from repro.data.pipeline import DeviceDataPlane, stack_plan_indices
+from repro.data.store import make_store
 
 
 class FusedEngine(BatchedEngine):
 
     def __init__(self, trainer, clients, fl):
         super().__init__(trainer, clients, fl)
-        self._plane = None
+        # where the fleet lives between blocks is the store's policy
+        # (FLConfig.store): upload-once fleet plane, or per-block cohort
+        # arenas that keep peak device bytes O(cohort) — see data.store
+        self.store = make_store(fl.store, clients, mesh=self.mesh,
+                                data_axis=self.data_axis)
+        self._arena: DeviceDataPlane = None
 
     @property
     def plane(self) -> DeviceDataPlane:
-        """Device-resident fleet stack, built on the first visit so ONE
-        upload serves every round of the experiment."""
-        if self._plane is None:
-            self._plane = DeviceDataPlane(
-                self.clients, mesh=self.mesh, data_axis=self.data_axis)
-        return self._plane
+        """The data plane serving the CURRENT block — staged by
+        ``stage_data`` at the block boundary; before any staging (direct
+        ``run`` calls in unit tests) the store serves the whole fleet."""
+        if self._arena is None:
+            self._arena = self.store.arena(None)
+        return self._arena
+
+    def stage_data(self, visited) -> int:
+        """Block boundary of the residency protocol: ask the store for
+        the arena covering ``visited`` and report its resident bytes.
+        The device store returns the same fleet plane every block (0
+        re-upload); the host store uploads the cohort slice — real H2D
+        traffic, so it lands on the trainer's meter (the device store's
+        one-time fleet upload stays accounted in ``plane.nbytes``, as
+        before)."""
+        if visited is not None and len(visited) == 0:
+            return 0        # ring_rounds=0: the block gathers nothing
+        fresh = self.store.arena_nbytes(visited)
+        if self.store.kind == "host":
+            self.trainer.h2d_bytes += fresh
+        self._arena = self.store.arena(visited)
+        return self._arena.nbytes
 
     def _run_group(self, grp: VisitGroup, w_glob, prev, lr, state):
         padded = self._pad(grp.lanes)
@@ -145,6 +167,13 @@ class FusedEngine(BatchedEngine):
             # in-scan state scatter discards them — same rule as ghosts
             live = np.asarray(g.lane_steps()) > 0
             ids[r, :g.lanes] = np.where(live, np.asarray(g.hops[0].ids), K)
+        rowmap = state.get("_rowmap") if isinstance(state, dict) else None
+        if rowmap is not None:
+            # host store: the state carry is a staged (V + 1, ...) cohort
+            # stack — remap fleet ids (and the fleet dump K) through the
+            # block's fleet→cohort table so the in-scan gather/scatter
+            # lands on cohort rows (dump K -> staged dump V)
+            ids = rowmap[ids]
         xs = {"rows": rows, "plans": idx, "valid": valid,
               "lr": np.asarray(lrs, np.float32), "aggv": aggv}
         if variant == "moon":

@@ -14,6 +14,13 @@ checkpoint boundaries. Under the fused engine a whole block is ONE
 compiled dispatch (``core.plan.Schedule``); the block boundaries are
 computed from absolute round indices, so a resumed run re-aligns to the
 same blocks and stays bit-exact.
+
+The block boundary is also the residency protocol's boundary (PR 7,
+``FLConfig.store="host"``): each ``run_schedule`` call stages only the
+block's visited clients' data + state rows onto device and writes the
+trained rows back afterwards, so fleet size K is decoupled from device
+memory; ``ExperimentResult.peak_device_bytes`` reports the peak
+(``core.comm.ResidencyMeter``).
 """
 from __future__ import annotations
 
@@ -63,6 +70,10 @@ class ExperimentResult:
     final_model: Optional[Pytree] = None    # the run's last w_glob (device-
                                             # resident; exact-resume tests
                                             # compare it tree-for-tree)
+    peak_device_bytes: int = 0              # residency meter readout: max
+                                            # over blocks of staged data +
+                                            # state bytes (FLConfig.store;
+                                            # O(cohort) under "host")
 
     @property
     def final_accuracy(self) -> float:
@@ -176,7 +187,8 @@ def run_experiment(
             _save_checkpoint(checkpoint_dir, w_glob, t, rng, meter,
                              history, algo.state_to_ckpt(state))
     return ExperimentResult(fl.algorithm, task, fl.partition, history,
-                            final_model=w_glob)
+                            final_model=w_glob,
+                            peak_device_bytes=algo.residency.peak_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,12 @@ reduce — is a single dispatch (``dispatches`` counts them).
 The update rule itself is elementwise, so one implementation serves every
 engine — and can optionally run as a single fused Pallas pass over the
 raveled parameter vector (``FLConfig.use_fused_sgd``).
+
+Both fused entry points are store-agnostic (``FLConfig.store``): the
+``DeviceDataPlane`` they gather from may hold the whole fleet or only a
+block's visited cohort (``data.store.HostStore``) — the plane's offsets
+table is fleet-sized either way, so the traced ``jnp.take`` addressing
+never changes; only the array the offsets point into does.
 """
 from __future__ import annotations
 

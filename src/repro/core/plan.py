@@ -256,6 +256,17 @@ class Schedule:
     def rounds(self) -> int:
         return len(self.plans)
 
+    def visited(self) -> np.ndarray:
+        """Sorted fleet ids of every client any hop of the block names —
+        the residency protocol's staging set (``FLConfig.store="host"``).
+        Ring-tail repeats and scenario-dropped lanes count: their rows are
+        still gathered (under an all-invalid mask), so they must be
+        resident. Planner-drawn participation makes this host-knowable
+        before the block's first dispatch."""
+        ids = {i for p in self.plans for g in p.groups for h in g.hops
+               for i in h.ids}
+        return np.asarray(sorted(ids), np.int64)
+
 
 @dataclasses.dataclass
 class RoundResult:

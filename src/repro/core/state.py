@@ -18,6 +18,17 @@ is therefore structural, not a second implementation's discipline.
 and the per-client-id dict layout ``algo_state.msgpack`` has used since
 PR 4, so old checkpoints restore exactly and new ones keep the same
 on-disk format.
+
+Client virtualization (``FLConfig.store="host"``) swaps the resident
+``(K + 1, ...)`` stack for a host numpy ``(K, ...)`` arena
+(``host_stack``) plus a per-block residency protocol: ``stage_rows``
+uploads only the block's visited rows as a ``(V + 1, ...)`` cohort carry
+(row ``V`` is the staged dump), ``rowmap_for`` gives the ``(K + 1,)``
+fleet→cohort table engines use to remap ``StateRef`` clients and scatter
+ids, and ``unstage_rows`` writes the trained rows back with ONE device
+readback. The staged carry has exactly the shape the ``(K + 1, ...)``
+stack would at K = V, so every consumer past the remap is untouched and
+peak device state bytes scale with the cohort, not the fleet.
 """
 from __future__ import annotations
 
@@ -90,21 +101,86 @@ def scaffold_step(c: Pytree, ci: Pytree, ids, locals_: Pytree,
 scaffold_step_compiled = jax.jit(scaffold_step)
 
 
+def host_stack(w_like: Pytree, num_clients: int) -> Pytree:
+    """Host-resident analogue of ``client_stack``: a zeroed numpy
+    ``(K, ...)`` per-client arena (``FLConfig.store="host"``). No dump
+    row — ghost/dropped lanes dump into the STAGED cohort carry's extra
+    row (``stage_rows``), which is discarded at write-back, so the fleet
+    arena itself never needs one."""
+    return jax.tree.map(
+        lambda x: np.zeros((num_clients,) + tuple(x.shape), x.dtype), w_like)
+
+
+def rowmap_for(visited, num_clients: int) -> np.ndarray:
+    """The ``(K + 1,)`` int32 fleet→cohort row table of a staged block:
+    visited fleet id -> its cohort-local row, every other id (including
+    the fleet dump index K) -> the staged dump row V."""
+    visited = np.asarray(visited, np.int64)
+    table = np.full(num_clients + 1, len(visited), np.int32)
+    table[visited] = np.arange(len(visited), dtype=np.int32)
+    return table
+
+
+def stage_rows(arena: Pytree, visited) -> Pytree:
+    """Fleet arena rows ``visited`` as a ``(V + 1, ...)`` device carry —
+    row ``V`` is the staged ghost/drop dump, zeroed exactly like
+    ``client_stack``'s row K, so the carry is shape-for-shape the stack a
+    V-client fleet would keep resident."""
+    v = np.asarray(visited, np.int64)
+    return jax.tree.map(
+        lambda x: jnp.asarray(np.concatenate(
+            [x[v], np.zeros((1,) + x.shape[1:], x.dtype)])), arena)
+
+
+def unstage_rows(arena: Pytree, visited, staged: Pytree) -> Pytree:
+    """Write a block's trained cohort carry back into the fleet arena:
+    ONE ``jax.device_get`` of the real rows (the dump row V is dropped on
+    the floor, like ``client_stack``'s row K between rounds)."""
+    v = np.asarray(visited, np.int64)
+    rows = jax.device_get(jax.tree.map(lambda x: x[:len(v)], staged))
+
+    def put(a, r):
+        a[v] = r
+        return a
+
+    return jax.tree.map(put, arena, rows)
+
+
 def pack_client_rows(stack: Pytree, seen: np.ndarray) -> Dict[int, Pytree]:
-    """Carry -> checkpoint layout: the live rows of a client stack as a
-    {client_id: tree} dict (the ``algo_state.msgpack`` format)."""
-    return {int(i): jax.tree.map(lambda x, i=int(i): x[i], stack)
-            for i in np.flatnonzero(np.asarray(seen)[:-1])}
+    """Carry -> checkpoint layout: the live rows of a client stack (device
+    ``(K + 1, ...)`` or host ``(K, ...)`` arena) as a {client_id: tree}
+    dict (the ``algo_state.msgpack`` format). ONE vectorized gather + ONE
+    ``jax.device_get`` for the whole fleet — the per-client readback loop
+    this replaces cost O(K) transfers at every checkpoint."""
+    seen = np.asarray(seen)
+    ids = np.flatnonzero(seen[:len(seen) - 1])
+    block = jax.device_get(jax.tree.map(lambda x: x[ids], stack))
+    return {int(i): jax.tree.map(lambda x, k=k: x[k], block)
+            for k, i in enumerate(ids)}
 
 
 def unpack_client_rows(rows: Dict[int, Pytree], w_like: Pytree,
-                       num_clients: int) -> Tuple[Pytree, np.ndarray]:
-    """Checkpoint layout -> carry: rebuild the (K + 1, ...) stack and the
-    host ``seen`` mask from a {client_id: tree} dict."""
-    stack = client_stack(w_like, num_clients)
+                       num_clients: int,
+                       device: bool = True) -> Tuple[Pytree, np.ndarray]:
+    """Checkpoint layout -> carry: rebuild the client stack and the host
+    ``seen`` mask from a {client_id: tree} dict. The restored rows scatter
+    host-side in ONE vectorized write per leaf — the old per-client
+    ``.at[i].set`` loop cost O(K) dispatches — and cross to device in one
+    transfer per leaf. ``device=False`` returns the host ``(K, ...)``
+    arena layout of ``FLConfig.store="host"`` instead of the device
+    ``(K + 1, ...)`` stack."""
     seen = np.zeros(num_clients + 1, bool)
-    for i, tree in rows.items():
-        stack = jax.tree.map(
-            lambda x, t, i=int(i): x.at[i].set(jnp.asarray(t)), stack, tree)
-        seen[int(i)] = True
-    return stack, seen
+    n = num_clients + 1 if device else num_clients
+    arena = jax.tree.map(
+        lambda x: np.zeros((n,) + tuple(x.shape), x.dtype), w_like)
+    ids = np.asarray(sorted(int(i) for i in rows), np.int64)
+    if len(ids):
+        block = jax.tree.map(
+            lambda *leaves: np.stack([np.asarray(v) for v in leaves]),
+            *[rows[int(i)] for i in ids])
+        arena = jax.tree.map(
+            lambda a, b: a.__setitem__(ids, b) or a, arena, block)
+        seen[ids] = True
+    if device:
+        arena = jax.tree.map(jnp.asarray, arena)
+    return arena, seen

@@ -182,42 +182,60 @@ def stack_plan_indices(
 
 
 class DeviceDataPlane:
-    """Fleet shards resident on device: upload once, gather per visit.
+    """Client shards resident on device: upload, then gather per visit.
 
-    Client shards are concatenated along ONE flat sample axis — ``images``
+    Shards are concatenated along ONE flat sample axis — ``images``
     ``(total, ...)``, ``labels`` ``(total,)`` — with an int32 ``offsets``
-    (K,) giving each client's first row: client ``r``'s sample ``i`` lives
-    at ``offsets[r] + i``. Batch plans only ever index a client's own
-    ``[0, len)`` range, and the skewed shard sizes of the paper's non-IID
-    partitions cost NO padding memory. After this one-time upload
+    table giving each client's first row: client ``r``'s sample ``i``
+    lives at ``offsets[r] + i``. Batch plans only ever index a client's
+    own ``[0, len)`` range, and the skewed shard sizes of the paper's
+    non-IID partitions cost NO padding memory. After the upload
     (``nbytes``), the fused engine's per-visit H2D traffic is the int32
     plan arrays from ``stack_plan_indices`` — for the paper's MNIST/CIFAR
     shapes that is ~3 orders of magnitude less than shipping the
     ``stack_plans`` pixel stacks every hop.
 
-    With ``mesh``, shards ARE zero-padded to the fleet maximum ``N_max``
-    (and the fleet rounded up to a mesh multiple) before flattening, so
+    ``client_ids`` builds a *cohort* plane (``data.store.HostStore``): only
+    the given fleet ids' shards upload, but ``offsets`` stays fleet-sized
+    (``fleet_size``) with each visited id mapped to its cohort-local flat
+    start — so the fleet-id ``rows`` arrays of ``stack_plan_indices`` and
+    the in-jit ``jnp.take`` gather are untouched by client virtualization.
+    Unvisited (and ghost-padded) ids map to row 0: real data, only ever
+    gathered under an all-invalid mask. Default (``None``) is the full
+    fleet in id order — today's upload-once plane, bit-for-bit.
+
+    With ``mesh``, shards ARE zero-padded to the cohort maximum ``N_max``
+    (and the cohort rounded up to a mesh multiple) before flattening, so
     the sample axis divides the mesh's ``data_axis`` evenly and the
     resident stack partitions alongside the sharded cohort axis instead of
-    replicating onto every device; ``offsets[r]`` is then ``r * N_max``
-    and the padding is never read.
+    replicating onto every device; the staging copies are dropped as soon
+    as each array lands on device, and ``real_nbytes`` reports the
+    unpadded shard bytes next to the padded resident ``nbytes`` so scale
+    benchmarks read honestly.
     """
 
     def __init__(self, clients: Sequence["ClientData"], mesh=None,
-                 data_axis: str = "data"):
+                 data_axis: str = "data", client_ids=None,
+                 fleet_size: Optional[int] = None):
         import jax
         import jax.numpy as jnp
 
         if not clients:
             raise ValueError("DeviceDataPlane needs at least one client shard")
         self.num_clients = len(clients)
+        if client_ids is None:
+            client_ids = np.arange(len(clients))
+        client_ids = np.asarray(client_ids, np.int64)
+        if fleet_size is None:
+            fleet_size = len(clients)
         sizes = [len(c) for c in clients]
+        real = sum(c.images.nbytes + c.labels.size * 4 for c in clients)
         if mesh is None:
             imgs = np.concatenate([c.images for c in clients])
             # int32 host-side so ``nbytes`` matches what actually crosses
             # H2D (jax demotes int64 on transfer when x64 is disabled)
             labs = np.concatenate([c.labels for c in clients]).astype(np.int32)
-            offs = np.cumsum([0] + sizes[:-1]).astype(np.int32)
+            starts = np.cumsum([0] + sizes[:-1]).astype(np.int32)
         else:
             from repro.launch.mesh import round_up_to_mesh
             n_max = max(sizes)
@@ -228,18 +246,27 @@ class DeviceDataPlane:
             for i, c in enumerate(clients):
                 imgs[i * n_max: i * n_max + len(c)] = c.images
                 labs[i * n_max: i * n_max + len(c)] = c.labels
-            offs = (np.arange(len(clients), dtype=np.int32) * n_max)
-        self.nbytes = imgs.nbytes + labs.nbytes + offs.nbytes   # one-time H2D
+            starts = (np.arange(len(clients), dtype=np.int32) * n_max)
+        offs = np.zeros(fleet_size, np.int32)
+        offs[client_ids] = starts
+        self.nbytes = imgs.nbytes + labs.nbytes + offs.nbytes   # resident/H2D
+        self.real_nbytes = real + offs.nbytes                   # sans padding
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec
             shard = NamedSharding(mesh, PartitionSpec(data_axis))
             repl = NamedSharding(mesh, PartitionSpec())
+            # drop each staging copy as soon as it lands on device — the
+            # dense zero-padded host arrays must not outlive the upload
             self.images = jax.device_put(imgs, shard)
+            del imgs
             self.labels = jax.device_put(labs, shard)
+            del labs
             self.offsets = jax.device_put(offs, repl)
         else:
             self.images = jnp.asarray(imgs)
+            del imgs
             self.labels = jnp.asarray(labs)
+            del labs
             self.offsets = jnp.asarray(offs)
 
 

@@ -1,0 +1,112 @@
+"""Pluggable client stores — where the fleet's shards live between rounds.
+
+The simulator's data plane used to hard-code one residency policy: the
+fused engine uploaded the ENTIRE fleet once per experiment
+(``DeviceDataPlane``), so device memory grew O(K) even though a round
+only ever touches its cohort. ``ClientStore`` makes that policy a config
+choice (``FLConfig.store``):
+
+* ``DeviceStore`` — the upload-once plane, bit-for-bit: one fleet-order
+  ``DeviceDataPlane`` built on first use and reused for every block.
+  Right when the fleet fits and rounds revisit clients often.
+* ``HostStore`` — shards stay host-resident (the ``ClientData`` numpy
+  arrays ARE the store); at each schedule block boundary the engine asks
+  for the block's **CohortArena**: a ``DeviceDataPlane`` over only the
+  visited clients, with the fleet→cohort row remap folded into the
+  plane's fleet-sized ``offsets`` table. Plans, the ``stack_plan_indices``
+  arrays and the in-jit ``jnp.take`` gather are identical to the device
+  store — the remap is invisible past the offsets table — so the two
+  stores are bit-exact while peak device bytes scale with the cohort, not
+  K. The previous block's arena is dropped when the next one is staged.
+
+The participation of every round in a block is planner-drawn
+(``Schedule.visited``), so the visited set is host-knowable before any
+dispatch — staging never needs a device readback.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.pipeline import ClientData, DeviceDataPlane
+
+
+class ClientStore:
+    """Residency policy for client shards. ``arena(visited)`` returns the
+    ``DeviceDataPlane`` serving a block that visits the given fleet ids
+    (``None`` = potentially all of them); ``arena_nbytes(visited)`` is the
+    H2D cost of that call (0 when the arena is already resident)."""
+
+    kind = ""
+
+    def __init__(self, clients: Sequence[ClientData], mesh=None,
+                 data_axis: str = "data"):
+        self.clients = list(clients)
+        self.mesh = mesh
+        self.data_axis = data_axis
+
+    def arena(self, visited: Optional[np.ndarray] = None) -> DeviceDataPlane:
+        raise NotImplementedError
+
+
+class DeviceStore(ClientStore):
+    """Upload the whole fleet once; every block reuses the same plane."""
+
+    kind = "device"
+
+    def __init__(self, clients, mesh=None, data_axis="data"):
+        super().__init__(clients, mesh=mesh, data_axis=data_axis)
+        self._plane: Optional[DeviceDataPlane] = None
+
+    def arena(self, visited=None) -> DeviceDataPlane:
+        if self._plane is None:
+            self._plane = DeviceDataPlane(
+                self.clients, mesh=self.mesh, data_axis=self.data_axis)
+        return self._plane
+
+    def arena_nbytes(self, visited=None) -> int:
+        first = self._plane is None
+        return self.arena(visited).nbytes if first else 0
+
+
+class HostStore(ClientStore):
+    """Host-resident fleet; per block, upload only the visited cohort."""
+
+    kind = "host"
+
+    def __init__(self, clients, mesh=None, data_axis="data"):
+        super().__init__(clients, mesh=mesh, data_axis=data_axis)
+        self._arena: Optional[DeviceDataPlane] = None
+        self._visited: Optional[tuple] = None
+
+    def arena(self, visited=None) -> DeviceDataPlane:
+        if visited is None:
+            visited = np.arange(len(self.clients))
+        visited = np.asarray(visited, np.int64)
+        key = tuple(visited.tolist())
+        if self._visited != key:
+            self._arena = None      # free the previous cohort BEFORE staging
+            self._arena = DeviceDataPlane(
+                [self.clients[i] for i in visited], mesh=self.mesh,
+                data_axis=self.data_axis, client_ids=visited,
+                fleet_size=len(self.clients))
+            self._visited = key
+        return self._arena
+
+    def arena_nbytes(self, visited=None) -> int:
+        staged = self._visited
+        plane = self.arena(visited)
+        return plane.nbytes if self._visited != staged else 0
+
+
+STORES = {"device": DeviceStore, "host": HostStore}
+
+
+def make_store(name: str, clients: List[ClientData], mesh=None,
+               data_axis: str = "data") -> ClientStore:
+    """Build the residency policy selected by ``FLConfig.store``."""
+    if name not in STORES:
+        raise ValueError(f"unknown FLConfig.store {name!r}; "
+                         "expected 'device' or 'host'")
+    return STORES[name](clients, mesh=mesh, data_axis=data_axis)

@@ -28,21 +28,29 @@ from repro.nn.module import param_count
 from repro.utils.logging import MetricLogger
 
 
-def build_client_batches(
-    cfg: ModelConfig, n_clients: int, batch: int, seq: int, steps: int,
-    seed: int = 0,
-) -> np.ndarray:
-    """(steps, n_clients, batch, seq+1) non-IID client token streams."""
-    out = np.empty((steps, n_clients, batch, seq + 1), np.int32)
-    for c in range(n_clients):
-        # each client has its OWN Markov structure -> non-IID across clients
-        stream = make_token_stream(
-            vocab_size=cfg.vocab_size,
-            num_tokens=steps * batch * (seq + 1),
-            seed=seed * 1000 + c,
-        )
-        out[:, c] = stream.reshape(steps, batch, seq + 1)
-    return out
+class ClientTokenStore:
+    """Host-resident non-IID client token streams, staged one step at a
+    time — the LM driver's analogue of ``FLConfig.store="host"``
+    (``repro.data.store``): the full ``(steps, n_clients, batch, seq+1)``
+    tensor is never materialized; only the current step's
+    ``(n_clients, ...)`` slice is assembled and shipped to device. Stream
+    content and seeding are identical to the old eager builder (one Markov
+    generator per client, so shards stay non-IID across clients)."""
+
+    def __init__(self, cfg: ModelConfig, n_clients: int, batch: int,
+                 seq: int, steps: int, seed: int = 0):
+        self.streams = [
+            make_token_stream(
+                vocab_size=cfg.vocab_size,
+                num_tokens=steps * batch * (seq + 1),
+                seed=seed * 1000 + c,
+            ).reshape(steps, batch, seq + 1)
+            for c in range(n_clients)
+        ]
+
+    def step_batch(self, t: int) -> np.ndarray:
+        """The ``(n_clients, batch, seq+1)`` token slice of step ``t``."""
+        return np.stack([s[t] for s in self.streams])
 
 
 def train_loop(
@@ -73,8 +81,8 @@ def train_loop(
         "mom": jax.tree.map(jnp.zeros_like, params),
         "step": jnp.zeros((), jnp.int32),
     }
-    data = build_client_batches(cfg, n_clients, batch_per_client, seq_len,
-                                steps, seed)
+    data = ClientTokenStore(cfg, n_clients, batch_per_client, seq_len,
+                            steps, seed)
     n_params = param_count(model_specs(cfg))
     print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  "
           f"clients={n_clients}  ring_mode={tcfg.ring_mode}")
@@ -82,7 +90,8 @@ def train_loop(
     losses = []
     t0 = time.perf_counter()
     for t in range(steps):
-        batch_np = data[t].reshape(stack + (batch_per_client, seq_len + 1))
+        batch_np = data.step_batch(t).reshape(
+            stack + (batch_per_client, seq_len + 1))
         batch = {
             "inputs": jnp.asarray(batch_np[..., :-1]),
             "labels": jnp.asarray(batch_np[..., 1:]),

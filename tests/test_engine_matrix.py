@@ -15,7 +15,7 @@ import pytest
 
 from engine_parity import (
     CASES, COMM_CHANNELS, assert_chunked_parity, assert_engine_parity,
-    max_diff, run_round, run_subprocess_matrix,
+    max_diff, run_round, run_schedule, run_subprocess_matrix,
 )
 
 from repro.configs.base import ScenarioConfig
@@ -75,6 +75,73 @@ def test_ring_meter_closed_form_pins():
     assert m_ring.p2p == 2 * (2 * 7 + 1)
     _, m_fedsr, _, _, _ = run_round("fedsr", "fused")
     assert m_fedsr.p2p == 2 * 2 * (2 * 3 + 1)
+
+
+@pytest.mark.parametrize("engine", ("batched", "fused"))
+@pytest.mark.parametrize("algo,overrides", CASES)
+def test_host_store_parity(algo, overrides, engine):
+    """Client virtualization (PR 7): ``store="host"`` keeps the fleet on
+    host and stages only each block's visited cohort (data arena + state
+    rows), yet must be BIT-exact against the resident device store — same
+    RNG stream, identical weights, equal meters — for every algorithm,
+    per-round and chunked drivers alike. Under the fused engine the staged
+    block must still be ONE compiled dispatch."""
+    base = tuple(overrides.items())
+    host = base + (("store", "host"),)
+    for drive in (run_round, run_schedule):
+        w_d, m_d, s_d, _, _ = drive(algo, engine, base)
+        w_h, m_h, s_h, _, d_h = drive(algo, engine, host)
+        assert s_d == s_h, (algo, engine, drive.__name__)
+        assert max_diff(w_d, w_h) == 0.0, (algo, engine, drive.__name__)
+        for ch in COMM_CHANNELS:
+            assert getattr(m_d, ch) == getattr(m_h, ch), (algo, engine, ch)
+        if engine == "fused" and drive is run_schedule:
+            assert d_h == 1, (algo, d_h)
+
+
+@pytest.mark.parametrize("algo", ["moon", "scaffold"])
+def test_host_store_resume_mid_schedule_is_exact(algo):
+    """The host-store checkpoint round trip: MOON/SCAFFOLD client memory
+    lives in host ``(K, ...)`` arenas under ``store="host"``; a checkpoint
+    landing mid-schedule must pack those arenas to the same
+    ``algo_state.msgpack`` dict layout and restore them (``device=False``
+    unpack) such that the resumed run reproduces the uninterrupted final
+    model bit-for-bit."""
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.executor import run_experiment
+    from repro.data.synthetic import make_task
+
+    def _fl():
+        return FLConfig(algorithm=algo, num_devices=4, num_edges=2,
+                        rounds=4, partition="pathological", xi=2,
+                        ring_rounds=2, local_epochs=1, seed=11,
+                        engine="fused", store="host")
+
+    cfg = get_config("fedsr-mlp")
+    train, test = make_task("mnist_like", train_per_class=12,
+                            test_per_class=4, seed=11)
+    full = run_experiment(task="mnist_like", model_cfg=cfg, fl=_fl(),
+                          eval_every=4, train=train, test=test)
+    with tempfile.TemporaryDirectory() as ckdir:
+        run_experiment(task="mnist_like", model_cfg=cfg, fl=_fl(),
+                       eval_every=4, train=train, test=test,
+                       checkpoint_dir=ckdir, checkpoint_every=2,
+                       stop_after=2)
+        resumed = run_experiment(task="mnist_like", model_cfg=cfg,
+                                 fl=_fl(), eval_every=4, train=train,
+                                 test=test, checkpoint_dir=ckdir,
+                                 resume=True)
+    assert resumed.history[-1].accuracy == full.history[-1].accuracy
+    assert resumed.history[-1].comm == full.history[-1].comm
+    for a, b in zip(jax.tree.leaves(full.final_model),
+                    jax.tree.leaves(resumed.final_model)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 @pytest.mark.parametrize("engine", ("sharded", "fused"))

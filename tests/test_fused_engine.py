@@ -24,17 +24,19 @@ def test_fused_h2d_is_index_only():
 
 def test_fused_ring_round_is_one_h2d_shipment():
     """The fused ring round ships ONE stacked (H, C, S, B) plan per round:
-    its H2D bytes must equal exactly the nbytes of the index arrays, i.e.
-    rows + plans + valid for H = R*(K/M) hops."""
+    its H2D bytes must equal exactly the nbytes of the length-1 schedule
+    block's arrays (the per-round driver IS a length-1 block since the
+    driver fold) — rows + plans + valid for H = R*(K/M) hops, plus the
+    block's (n,) lr and (n, C) aggregation vectors."""
     from repro.configs.base import FLConfig
 
     fl = FLConfig(num_devices=8, num_edges=2, ring_rounds=2, batch_size=8)
     _, _, _, h2d, _ = run_round("fedsr", "fused", rounds=1)
     # 2 rings of 4, R=2 -> H=8 hops; C=2 rings; B=8. S is data-dependent,
-    # so recover it from the identity instead of hardcoding:
-    # h2d = H*C*4 (rows) + H*C*S*B*4 (plans) + H*C*S (valid)
+    # so recover it from the identity instead of hardcoding: h2d =
+    # H*C*4 (rows) + H*C*S*B*4 (plans) + H*C*S (valid) + 4 (lr) + C*4 (aggv)
     H, C, B = fl.ring_rounds * fl.devices_per_edge, fl.num_edges, fl.batch_size
-    s = (h2d - H * C * 4) / (H * C * (B * 4 + 1))
+    s = (h2d - H * C * 4 - 4 - C * 4) / (H * C * (B * 4 + 1))
     assert s == int(s) and s >= 1, (h2d, s)
 
 

@@ -43,12 +43,13 @@ def test_fused_block_dispatch_counts(algo):
     assert d == 1
 
 
-def test_hieravg_per_round_pays_one_dispatch_per_iteration():
-    """The ROADMAP open item this closes: per-round fused HierFAVG pays R
-    dispatches (one per chained edge iteration); the schedule path folds
-    them into the block scan. R=2, 2 rounds: 4 vs 1."""
+def test_hieravg_per_round_fuses_iterations_too():
+    """The driver fold (PR 7): ``run_round`` IS a length-1 schedule block,
+    so even per-round fused HierFAVG fuses its R per-edge iterations —
+    one dispatch per round (it used to pay R), and the block path still
+    folds whole rounds: R=2, 2 rounds = 2 vs 1 dispatches."""
     _, _, _, _, d_per_round = run_round("hieravg", "fused", rounds=2)
-    assert d_per_round == 2 * 2
+    assert d_per_round == 2
     _, _, _, _, d_block = run_schedule("hieravg", "fused", rounds=2)
     assert d_block == 1
 
