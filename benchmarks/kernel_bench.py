@@ -123,7 +123,7 @@ def _fl_round_times(engines, num_devices: int, iters: int,
         trainer = LocalTrainer(cfg, fl)
         algo = make_algorithm(algorithm, trainer, clients, fl)
 
-        def round_():
+        def round_(algo=algo):
             w, _ = algo.run_round(w0, 0, 0.05, np.random.default_rng(1),
                                   CommMeter(), {})
             return w
@@ -363,7 +363,54 @@ def bench_fleet_scale_hoststore(fleet_sizes=(2048, 50_000), cohort: int = 8,
     return ("fleet_scale_fedsr_hoststore", us, "|".join(parts))
 
 
+def bench_attack_fedsr_median(num_devices: int = 64, rounds: int = 10,
+                              seed: int = 0) -> Tuple[str, float, str]:
+    """The robustness A/B (PR 8): a fused FedSR run with 20% of the fleet
+    amplifying its uploaded delta 100x, aggregated with ``weighted_mean``
+    vs ``median``. Rings of 2 (num_edges = K/2) keep the attacked-lane
+    fraction under half — P(lane attacked) = 1 - 0.8^2 = 0.36 — the
+    regime where the in-jit masked median outvotes the attackers; the
+    scale attack (not sign_flip) is used because it collapses the linear
+    reduce within the few rounds this bench can afford (the slower
+    sign-flip separation is the full grid's job, benchmarks.fl_tables).
+    us_per_call is the median run's wall per round; ``derived`` reports
+    both final accuracies (acceptance: acc_median > acc_wmean) plus the
+    weighted_mean run's wall — the robust reduce's sort contractions
+    ride inside the same single dispatch per eval block, so the walls
+    should be close."""
+    from repro.configs import get_config
+    from repro.configs.base import AdversaryConfig, FLConfig
+    from repro.core.executor import run_experiment
+    from repro.data.synthetic import make_task
+
+    cfg = get_config("fedsr-mlp")
+    # ~10 samples per client (pathological xi=2 slices 2K shards, so the
+    # 10 * train_per_class total must cover them; accuracy needs enough
+    # data per shard to move at all)
+    train, test = make_task("mnist_like",
+                            train_per_class=max(num_devices, 6),
+                            test_per_class=8, seed=0)
+    adv = AdversaryConfig(frac=0.2, kind="scale", scale=100.0)
+    accs, walls = {}, {}
+    for reducer in ("weighted_mean", "median"):
+        fl = FLConfig(algorithm="fedsr", num_devices=num_devices,
+                      num_edges=num_devices // 2, ring_rounds=2,
+                      rounds=rounds, local_epochs=1, batch_size=4,
+                      partition="pathological", xi=2, seed=seed,
+                      engine="fused", adversary=adv, reducer=reducer)
+        t0 = time.perf_counter()
+        res = run_experiment(task="mnist_like", model_cfg=cfg, fl=fl,
+                             train=train, test=test, eval_every=rounds)
+        walls[reducer] = (time.perf_counter() - t0) / rounds * 1e6
+        accs[reducer] = res.final_accuracy
+    return (f"attack_fedsr{num_devices}_median", walls["median"],
+            f"acc_median={accs['median']:.3f}"
+            f";acc_wmean={accs['weighted_mean']:.3f}"
+            f";wmean_us={walls['weighted_mean']:.0f}")
+
+
 ALL = [bench_attention, bench_ssd, bench_fused_sgd, bench_decode_attention,
        bench_fl_engines, bench_fl_engines_sharded, bench_fl_engines_fused,
        bench_ring_round_fedsr, bench_fedsr_onedispatch,
-       bench_fl_schedule_chunked, bench_fleet_scale_hoststore]
+       bench_fl_schedule_chunked, bench_fleet_scale_hoststore,
+       bench_attack_fedsr_median]

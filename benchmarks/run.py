@@ -52,6 +52,20 @@ def run_fl_tables(rounds: int, only: set) -> None:
                 r["seconds"] / max(rounds // 2, 4) * 1e6,
                 f"acc={r['accuracy']:.4f}",
             )
+    if "attacks" in only:
+        # the sign-flip gap needs ~16+ rounds to open (see the grid's
+        # docstring); don't let --rounds starve the ordering claim
+        atk_rounds = max(rounds, 20)
+        for r in fl_tables.attack_defense_grid(rounds=atk_rounds):
+            derived = f"acc={r['accuracy']:.4f}"
+            if r.get("dp_epsilon") is not None:
+                derived += (f";eps={r['dp_epsilon']:.2f}"
+                            f";delta={r['dp_delta']:.0e}")
+            _emit(
+                f"attack/{r['attack']}/{r['defense']}/{r['algorithm']}",
+                r["seconds"] / atk_rounds * 1e6,
+                derived,
+            )
     if "scenarios" in only:
         for r in fl_tables.scenario_curves(rounds=rounds):
             _emit(
@@ -101,9 +115,10 @@ def run_smoke() -> None:
     one tiny FL round per engine — so the benchmark drivers can't silently
     rot. Invoked from tier-1 (tests/test_benchmarks_smoke.py)."""
     from benchmarks.kernel_bench import (
-        bench_fedsr_onedispatch, bench_fl_engines, bench_fl_engines_fused,
-        bench_fl_engines_sharded, bench_fl_schedule_chunked,
-        bench_fleet_scale_hoststore, bench_fused_sgd, bench_ring_round_fedsr,
+        bench_attack_fedsr_median, bench_fedsr_onedispatch, bench_fl_engines,
+        bench_fl_engines_fused, bench_fl_engines_sharded,
+        bench_fl_schedule_chunked, bench_fleet_scale_hoststore,
+        bench_fused_sgd, bench_ring_round_fedsr,
     )
 
     name, us, derived = bench_fused_sgd()
@@ -129,6 +144,12 @@ def run_smoke() -> None:
     name, us, derived = bench_fleet_scale_hoststore(fleet_sizes=(256, 2048),
                                                     cohort=8, rounds=2)
     _emit(f"kernel/{name}", us, derived)
+    # the PR-8 acceptance row at reduced K: weighted_mean vs median under
+    # a 20% delta-amplifying fleet — the adversary + robust-reduce wiring
+    # check (acc_median > acc_wmean already shows at this size; the
+    # headline numbers are the full-size row's)
+    name, us, derived = bench_attack_fedsr_median(num_devices=16, rounds=4)
+    _emit(f"kernel/{name}", us, derived)
 
     from repro.configs import get_config
     from repro.configs.base import FLConfig
@@ -151,7 +172,7 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=10,
                     help="FL rounds per benchmark run")
     ap.add_argument("--only",
-                    default="table1,table2,table3,table4,scenarios,"
+                    default="table1,table2,table3,table4,scenarios,attacks,"
                             "kernels,roofline",
                     help="comma-separated subset")
     ap.add_argument("--quick", action="store_true",
@@ -174,7 +195,8 @@ def main() -> None:
         run_kernels()
     if "roofline" in only:
         run_roofline()
-    if only & {"table1", "table2", "table3", "table4", "scenarios"}:
+    if only & {"table1", "table2", "table3", "table4", "scenarios",
+               "attacks"}:
         run_fl_tables(rounds, only)
 
 

@@ -205,6 +205,40 @@ class ScenarioConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class AdversaryConfig:
+    """Attacker-model knobs (ROADMAP item 3: adversarial lanes).
+
+    Like ``ScenarioConfig``, every knob acts at the *planner/data* level
+    (``core.adversary``): which clients are attackers is drawn ONCE from
+    the adversary's own ``seed`` (never the experiment RNG stream), and
+    the attack itself is either a partition-level label permutation
+    (``label_flip``, applied to attacker shards before training starts)
+    or a per-lane delta transform carried on the ``RoundPlan``
+    (``VisitGroup.lane_scale``) and applied IN-JIT to the stacked local
+    models before the reduce — engines stay attack-agnostic and a fused
+    eval-to-eval block stays ONE compiled dispatch. The default config is
+    inactive and bit-exact to adversary-free runs.
+    """
+    frac: float = 0.0               # fraction of the fleet that is malicious
+    kind: str = "sign_flip"         # label_flip | sign_flip | scale
+    scale: float = 10.0             # delta amplification for kind="scale"
+    seed: int = 0                   # the adversary's own stream: who attacks
+
+    def __post_init__(self):
+        if not 0.0 <= self.frac <= 1.0:
+            raise ValueError(f"frac={self.frac} must be in [0, 1]")
+        if self.kind not in ("label_flip", "sign_flip", "scale"):
+            raise ValueError(
+                f"kind={self.kind!r} must be label_flip|sign_flip|scale")
+        if self.scale <= 0:
+            raise ValueError(f"scale={self.scale} must be > 0")
+
+    @property
+    def active(self) -> bool:
+        return self.frac > 0
+
+
+@dataclasses.dataclass(frozen=True)
 class FLConfig:
     """Hyper-parameters of Algorithm 1 and of all baselines (paper §IV-C/D)."""
     algorithm: str = "fedsr"         # fedsr | fedavg | fedprox | moon | hieravg | ring | centralized
@@ -271,6 +305,29 @@ class FLConfig:
                                      # stale, simulated clock); the default is
                                      # inactive and bit-exact to scenario-free
                                      # runs
+    adversary: AdversaryConfig = dataclasses.field(
+        default_factory=AdversaryConfig)
+                                     # attacker model (label-flip shards /
+                                     # Byzantine delta transforms); the default
+                                     # is inactive and bit-exact to
+                                     # adversary-free runs
+    reducer: str = "weighted_mean"   # cloud/edge aggregation rule:
+                                     # weighted_mean: eq. 11 (exact current
+                                     #   path, bit-for-bit);
+                                     # median / trimmed_mean / krum: Byzantine-
+                                     #   robust in-jit order statistics over the
+                                     #   lane stack (unweighted over valid
+                                     #   lanes; ghost/dropped lanes masked out)
+    trim_frac: float = 0.2           # per-side trim fraction (reducer=
+                                     # "trimmed_mean"), of the valid lane count
+    krum_f: int = 1                  # assumed Byzantine lane count f scored by
+                                     # reducer="krum" (m - f - 2 neighbours)
+    dp_clip: float = 0.0             # >0 opts into DP-SGD: per-lane L2 clip of
+                                     # every local gradient step
+    dp_noise_mult: float = 0.0       # Gaussian noise multiplier sigma; noise
+                                     # std = dp_noise_mult * dp_clip
+    dp_delta: float = 1e-5           # target delta of the (eps, delta) ledger
+    dp_seed: int = 0                 # the DP noise stream's own seed
 
     def __post_init__(self):
         if not 0.0 < self.participation <= 1.0:
@@ -280,6 +337,20 @@ class FLConfig:
         if self.store not in ("device", "host"):
             raise ValueError(
                 f"store={self.store!r} must be 'device' or 'host'")
+        if self.reducer not in ("weighted_mean", "median", "trimmed_mean",
+                                "krum"):
+            raise ValueError(
+                f"reducer={self.reducer!r} must be weighted_mean|median|"
+                "trimmed_mean|krum")
+        if not 0.0 <= self.trim_frac < 0.5:
+            raise ValueError(
+                f"trim_frac={self.trim_frac} must be in [0, 0.5)")
+        if self.krum_f < 0:
+            raise ValueError(f"krum_f={self.krum_f} must be >= 0")
+        if self.dp_clip < 0 or self.dp_noise_mult < 0:
+            raise ValueError("dp_clip/dp_noise_mult must be >= 0")
+        if not 0.0 < self.dp_delta < 1.0:
+            raise ValueError(f"dp_delta={self.dp_delta} must be in (0, 1)")
 
     @property
     def devices_per_edge(self) -> int:
@@ -308,6 +379,9 @@ class TrainConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     fused_sgd: bool = False
+    dp_clip: float = 0.0             # >0 opts the large-model runtime into
+                                     # DP-SGD (per-device L2 gradient clip)
+    dp_noise_mult: float = 0.0       # Gaussian noise std = dp_noise_mult * clip
     hop_momentum: bool = True        # baseline: momentum travels with the
                                      # model on the ring hop. §Perf variant:
                                      # False = momentum stays device-local

@@ -56,9 +56,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
+from repro.core.adversary import AdversaryState
 from repro.core.comm import CommMeter, ResidencyMeter
 from repro.core.engines import make_engine
 from repro.core.local import LocalTrainer
+from repro.core.privacy import PrivacyLedger, plan_max_client_steps
 from repro.core.plan import (
     GLOBAL, AggSpec, Hop, RoundPlan, RoundResult, Schedule, StateRef,
     VisitGroup,
@@ -96,6 +98,9 @@ class _Planner:
         self.engine = make_engine(trainer, clients, fl)
         self.edges = assign_edges(fl.num_devices, fl.num_edges)
         self.scenario = ScenarioState(fl.scenario, fl.num_devices)
+        self.adversary = AdversaryState(fl.adversary, fl.num_devices)
+        self.privacy = (PrivacyLedger(fl.dp_noise_mult, fl.dp_delta)
+                        if fl.dp_clip > 0 else None)
         self.residency = ResidencyMeter()
 
     # -- THE execution driver (identical for every algorithm) ------------
@@ -131,6 +136,11 @@ class _Planner:
         w_glob = self.engine.run_schedule(sched, w_glob, lrs, state,
                                           self.update_state)
         self._unstage_state(state)
+        if self.privacy is not None:
+            # worst-case client: the ledger advances by each round's max
+            # per-client executed steps (closed-form on the plans)
+            for plan in sched.plans:
+                self.privacy.record(plan_max_client_steps(plan))
         if meter is not None:
             for channel, count in sched.comm:
                 meter.record(channel, count)
@@ -200,14 +210,37 @@ class _Planner:
         transform (``core.scenario``) plus rebuilt comm records, and
         finally the simulated-clock stamp. Scenario-off the transform
         never runs and never draws, so plans (and the RNG stream) are
-        bit-identical to a scenario-free build."""
-        plan = self._plan_round(t, rng, state)
+        bit-identical to a scenario-free build.
+
+        The adversary's transforms layer the same way: the config's robust
+        reducer is stamped onto every AggSpec (``_mark_agg``) and a
+        Byzantine adversary stamps ``lane_scale`` AFTER the scenario drops
+        (an attacker that dropped this round uploads nothing). Both draw
+        nothing — attack-off plans and RNG stream stay bit-identical."""
+        plan = self._mark_agg(self._plan_round(t, rng, state))
         if self.scenario.active:
             plan, dropped = self.scenario.transform(plan, rng)
             plan = dataclasses.replace(
                 plan, comm=self._scenario_comm(plan, dropped))
+        if self.adversary.byzantine:
+            plan = self.adversary.transform(plan)
         return dataclasses.replace(
             plan, sim_seconds=self.scenario.plan_seconds(plan))
+
+    def _mark_agg(self, plan: RoundPlan) -> RoundPlan:
+        """Stamp the config's robust reducer onto every AggSpec of the
+        plan (the default ``weighted_mean`` touches nothing — bit-exact)."""
+        fl = self.fl
+        if fl.reducer == "weighted_mean":
+            return plan
+        groups = tuple(
+            dataclasses.replace(
+                g, agg=dataclasses.replace(
+                    g.agg, reducer=fl.reducer, trim_frac=fl.trim_frac,
+                    krum_f=fl.krum_f))
+            if g.agg is not None else g
+            for g in plan.groups)
+        return dataclasses.replace(plan, groups=groups)
 
     def _plan_round(self, t: int, rng: np.random.Generator,
                     state: Dict) -> RoundPlan:
@@ -596,6 +629,12 @@ class Centralized(_Planner):
 
     def __init__(self, trainer, clients, fl):
         super().__init__(trainer, clients, fl)
+        if fl.scenario.active or fl.adversary.active:
+            raise ValueError(
+                "algorithm='centralized' bypasses the RoundPlan IR — "
+                "scenario and adversary transforms cannot apply to pooled "
+                "SGD; disable them (scenario.frac=0, adversary.frac=0) "
+                "for the centralized baseline")
         images = np.concatenate([c.images for c in clients])
         labels = np.concatenate([c.labels for c in clients])
         self.pool = ClientData(-1, images, labels)
@@ -603,6 +642,8 @@ class Centralized(_Planner):
     def run_round(self, w_glob, t, lr, rng, meter, state):
         w = self.trainer.train(w_glob, self.pool, lr=lr,
                                epochs=self.fl.local_epochs, rng=rng)
+        if self.privacy is not None:
+            self.privacy.record(self.trainer.last_steps)
         return w, state
 
     def run_schedule(self, w_glob, t0, lrs, rng, meter, state):

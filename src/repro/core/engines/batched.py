@@ -82,13 +82,24 @@ class BatchedEngine(Engine):
             return out
         return out, None
 
+    def _dscale(self, grp: VisitGroup, padded: int):
+        """The adversary's per-lane delta factors, ghost-padded with the
+        honest 1.0 (ghost lanes never train and weigh 0 anyway)."""
+        if grp.lane_scale is None:
+            return None
+        ds = np.ones(padded, np.float32)
+        ds[:grp.lanes] = grp.lane_scale
+        return ds
+
     # -- plan interpretation --------------------------------------------
     def _run_group(self, grp: VisitGroup, w_glob, prev, lr, state):
         padded = self._pad(grp.lanes)
         kw = dict(lr=lr, variant=grp.variant, mesh=self.mesh,
                   data_axis=self.data_axis,
                   **self._extras_kwargs(grp, w_glob, padded, state))
-        aggm = grp.agg.matrix(padded) if grp.agg is not None else None
+        has_agg = grp.agg is not None
+        red_kw = grp.agg.reduce_kwargs(padded) if has_agg else {}
+        red_kw["dscale"] = self._dscale(grp, padded)
         keep = grp.keep_locals
         hops = grp.hops
         # group-wide batch width: under scenario drops a single hop can
@@ -97,20 +108,26 @@ class BatchedEngine(Engine):
         if grp.seed is None and len(hops) == 1:
             # star cohort: the global model broadcasts inside the jit
             out = self._train_hop(hops[0], padded, B, w_glob, broadcast=True,
-                                  agg=aggm, keep_locals=keep, **kw)
+                                  keep_locals=keep, **red_kw, **kw)
         else:
             # ring lap sequence / seeded edge iteration: carry the lane
             # stack hop to hop; the LAST hop's dispatch absorbs the reduce
             models = (tree_broadcast(w_glob, padded) if grp.seed is None
                       else self._seed_stack(prev, grp.seed, padded))
+            if grp.seed is None and len(hops) > 1:
+                # the last hop's params input is the mid-ring model stack,
+                # not the lane seed — the Byzantine delta transform needs
+                # the real ref (the broadcast global) passed explicitly
+                red_kw["dref"] = w_glob if red_kw["dscale"] is not None \
+                    else None
             for j, hop in enumerate(hops):
                 last = j == len(hops) - 1
-                out = self._train_hop(hop, padded, B, models, broadcast=False,
-                                      agg=aggm if last else None,
-                                      keep_locals=keep and last, **kw)
+                hop_kw = dict(keep_locals=keep, **red_kw) if last else {}
+                out = self._train_hop(hop, padded, B, models,
+                                      broadcast=False, **hop_kw, **kw)
                 if not last:
                     models = out
-        return self._unpack(out, aggm is not None, keep)
+        return self._unpack(out, has_agg, keep)
 
     def _train_hop(self, hop: Hop, padded: int, width: int, params, **kw):
         batches, valid = stack_plans(

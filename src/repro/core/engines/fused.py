@@ -73,7 +73,11 @@ class FusedEngine(BatchedEngine):
         kw = dict(lr=lr, variant=grp.variant, mesh=self.mesh,
                   data_axis=self.data_axis,
                   **self._extras_kwargs(grp, w_glob, padded, state))
-        aggm = grp.agg.matrix(padded) if grp.agg is not None else None
+        has_agg = grp.agg is not None
+        red_kw = grp.agg.reduce_kwargs(padded) if has_agg else {}
+        # the whole hop sequence is one dispatch whose params input IS the
+        # lane seed, so the Byzantine transform never needs an explicit ref
+        red_kw["dscale"] = self._dscale(grp, padded)
         keep = grp.keep_locals
         # every hop pads to the group-global max step count S so the hop
         # axis stacks uniformly (H, C, S, B); B is group-wide too, since a
@@ -94,9 +98,9 @@ class FusedEngine(BatchedEngine):
             params, broadcast = self._seed_stack(prev, grp.seed, padded), False
         out = self.trainer.train_many_fused(
             params, self.plane, np.stack(rows), np.stack(idx),
-            np.stack(valid), broadcast=broadcast, agg=aggm,
-            keep_locals=keep, **kw)
-        return self._unpack(out, aggm is not None, keep)
+            np.stack(valid), broadcast=broadcast,
+            keep_locals=keep, **red_kw, **kw)
+        return self._unpack(out, has_agg, keep)
 
     # -- the Schedule block dispatch ------------------------------------
     def run_schedule(self, sched: Schedule, w_glob, lrs, state, update_fn):
@@ -112,9 +116,11 @@ class FusedEngine(BatchedEngine):
             carry = {"prev": state["prev"]}
         elif variant == "scaffold":
             carry = {"c": state["c"], "ci": state["ci"]}
+        agg0 = plans[0].groups[-1].agg
         w_glob, carry = self.trainer.train_schedule(
             w_glob, self.plane, xs, carry, variant=variant, hier=hier,
-            mesh=self.mesh, data_axis=self.data_axis)
+            reducer=agg0.reducer, trim_frac=agg0.trim_frac,
+            krum_f=agg0.krum_f, mesh=self.mesh, data_axis=self.data_axis)
         if variant in ("moon", "scaffold"):
             state.update(carry)
             # participation is planner-drawn, so the seen mask advances
@@ -139,6 +145,20 @@ class FusedEngine(BatchedEngine):
                  for p in hop.plans if p is not None)
         return Cp, H, S, B
 
+    @staticmethod
+    def _add_dscale(xs, groups, Cp: int) -> None:
+        """Stack the adversary's per-lane delta factors as a (n, Cp) xs
+        lane when any round of the block is attacked (honest rounds and
+        ghost lanes carry 1.0); honest blocks ship nothing and compile
+        the dscale-free body."""
+        if all(g.lane_scale is None for g in groups):
+            return
+        ds = np.ones((len(groups), Cp), np.float32)
+        for r, g in enumerate(groups):
+            if g.lane_scale is not None:
+                ds[r, :g.lanes] = g.lane_scale
+        xs["dscale"] = ds
+
     def _stack_cohort_schedule(self, plans, lrs, variant, state):
         """Stack a block of single-group plans along the round axis, plus
         the variant's state-carry lanes (``core.state``): per-lane client
@@ -149,11 +169,20 @@ class FusedEngine(BatchedEngine):
         groups = [p.groups[0] for p in plans]
         n = len(groups)
         Cp, H, S, B = self._schedule_dims(groups)
+        robust = groups[0].agg.reducer != "weighted_mean"
         rows = np.zeros((n, H, Cp), np.int32)
         idx = np.zeros((n, H, Cp, S, B), np.int32)
         valid = np.zeros((n, H, Cp, S), bool)
         aggv = np.zeros((n, Cp), np.float32)
         ids = np.full((n, Cp), K, np.int32)
+        if robust:
+            # robust reduce operands: the UNCOLLAPSED (G, Cp) lane-weight
+            # matrix (validity pattern) + (G,) group weights, padded to the
+            # block's max group count with zero rows (m=0 lanes contribute
+            # a zero row at group weight 0 — see core.robust)
+            Gm = max(len(g.agg.groups) for g in groups)
+            aggw = np.zeros((n, Gm, Cp), np.float32)
+            aggg = np.zeros((n, Gm), np.float32)
         for r, g in enumerate(groups):
             for h, hop in enumerate(g.hops):
                 rw, ix, vl = stack_plan_indices(
@@ -162,7 +191,13 @@ class FusedEngine(BatchedEngine):
                 rows[r, h], idx[r, h], valid[r, h] = rw, ix, vl
             # hops past len(g.hops) stay all-invalid: every lane carried
             # unchanged, exactly the ring-tail rule
-            aggv[r] = g.agg.matrix(Cp)
+            if robust:
+                G_r = len(g.agg.groups)
+                aggw[r, :G_r] = dataclasses.replace(
+                    g.agg, group_weights=None).matrix(Cp)
+                aggg[r, :G_r] = np.asarray(g.agg.group_weights, np.float32)
+            else:
+                aggv[r] = g.agg.matrix(Cp)
             # 0-step lanes (scenario drops) point at the dump row K so the
             # in-scan state scatter discards them — same rule as ghosts
             live = np.asarray(g.lane_steps()) > 0
@@ -175,7 +210,12 @@ class FusedEngine(BatchedEngine):
             # lands on cohort rows (dump K -> staged dump V)
             ids = rowmap[ids]
         xs = {"rows": rows, "plans": idx, "valid": valid,
-              "lr": np.asarray(lrs, np.float32), "aggv": aggv}
+              "lr": np.asarray(lrs, np.float32)}
+        if robust:
+            xs.update(aggw=aggw, aggg=aggg)
+        else:
+            xs["aggv"] = aggv
+        self._add_dscale(xs, groups, Cp)
         if variant == "moon":
             seen = np.asarray(state["seen"]).copy()
             use_prev = np.zeros((n, Cp), bool)
@@ -213,12 +253,14 @@ class FusedEngine(BatchedEngine):
         groups = [g for p in plans for g in p.groups]
         Cp, _, S, B = self._schedule_dims(groups)
         G = len(plans[0].groups[0].agg.groups)
+        robust = plans[0].groups[-1].agg.reducer != "weighted_mean"
         rows = np.zeros((n, R, Cp), np.int32)
         idx = np.zeros((n, R, Cp, S, B), np.int32)
         valid = np.zeros((n, R, Cp, S), bool)
         wg = np.zeros((n, G, Cp), np.float32)
         seed = np.zeros((n, Cp), np.int32)
         aggv = np.zeros((n, Cp), np.float32)
+        gwv = np.zeros((n, G), np.float32)
         for r, plan in enumerate(plans):
             for it, g in enumerate(plan.groups):
                 (hop,) = g.hops
@@ -230,11 +272,21 @@ class FusedEngine(BatchedEngine):
             # iteration but the last (ghost lanes weigh 0 in every row)
             wg[r] = dataclasses.replace(
                 first.agg, group_weights=None).matrix(Cp)
-            aggv[r] = last.agg.matrix(Cp)
+            if robust:
+                # robust final reduce reuses wg's validity pattern; only
+                # the (G,) cloud weights ship separately
+                gwv[r] = np.asarray(last.agg.group_weights, np.float32)
+            else:
+                aggv[r] = last.agg.matrix(Cp)
             if R > 1:
                 seed[r, :last.lanes] = last.seed
             # ghost lanes seed from row 0 (weight 0, never trained) — same
             # rule as _seed_stack
-        return {"rows": rows, "plans": idx, "valid": valid,
-                "lr": np.asarray(lrs, np.float32), "wg": wg,
-                "seed": seed, "aggv": aggv}
+        xs = {"rows": rows, "plans": idx, "valid": valid,
+              "lr": np.asarray(lrs, np.float32), "wg": wg, "seed": seed}
+        if robust:
+            xs["gwv"] = gwv
+        else:
+            xs["aggv"] = aggv
+        self._add_dscale(xs, [p.groups[0] for p in plans], Cp)
+        return xs

@@ -7,11 +7,22 @@ semantics every other engine must reproduce). Lanes are independent given
 their plans, so training lane-by-lane is exactly Algorithm 1's
 device-by-device schedule; the RNG stream was already consumed by the
 planner, in this same visit order.
+
+The adversary's Byzantine lane transform (``VisitGroup.lane_scale``) and
+the robust reducers (``AggSpec.reducer``) apply here too — eagerly, lane
+by lane, through the same ``core.robust`` math the compiled engines fold
+into their dispatch, so attacked/robust rounds keep cross-engine parity.
 """
 from __future__ import annotations
 
+import dataclasses
+
+import jax
+import numpy as np
+
 from repro.core.engines.base import Engine
-from repro.utils.tree import tree_weighted_sum
+from repro.core.robust import robust_agg
+from repro.utils.tree import tree_stack, tree_unstack, tree_weighted_sum
 
 
 class SequentialEngine(Engine):
@@ -32,9 +43,29 @@ class SequentialEngine(Engine):
                     w, self.clients[hop.ids[c]], lr=lr, plan=hop.plans[c],
                     variant=grp.variant, **kw)
             lane_out.append(w)
+        if grp.lane_scale is not None:
+            # Byzantine upload: lane c hands back ref + t * (model - ref)
+            # relative to its seed — same transform the compiled engines
+            # apply in-jit just before the reduce
+            for c, t in enumerate(grp.lane_scale):
+                if t == 1.0:
+                    continue
+                ref = w_glob if grp.seed is None else prev[grp.seed[c]]
+                lane_out[c] = jax.tree.map(
+                    lambda p, r, t=t: r + t * (p - r), lane_out[c], ref)
         if grp.agg is None:
             return None, lane_out
         agg = grp.agg
+        if agg.reducer != "weighted_mean":
+            wm = dataclasses.replace(
+                agg, group_weights=None).matrix(grp.lanes)
+            gw = (np.asarray(agg.group_weights, np.float32)
+                  if agg.collapsed else None)
+            red = robust_agg(tree_stack(lane_out), wm, gw, agg.reducer,
+                             agg.trim_frac, agg.krum_f)
+            if agg.collapsed:
+                return red, lane_out
+            return tree_unstack(red, len(agg.groups)), lane_out
         group_models = [
             tree_weighted_sum([lane_out[la] for la in lanes],
                               [agg.lane_weights[la] for la in lanes])

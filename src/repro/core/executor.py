@@ -74,6 +74,8 @@ class ExperimentResult:
                                             # over blocks of staged data +
                                             # state bytes (FLConfig.store;
                                             # O(cohort) under "host")
+    dp_epsilon: Optional[float] = None      # (eps, delta) spent by the run's
+    dp_delta: Optional[float] = None        # DP-SGD ledger (dp_clip > 0 only)
 
     @property
     def final_accuracy(self) -> float:
@@ -114,6 +116,12 @@ def run_experiment(
         train, scheme=fl.partition, num_devices=fl.num_devices,
         rng=rng, xi=fl.xi, alpha=fl.alpha,
     )
+    if fl.adversary.active and fl.adversary.kind == "label_flip":
+        # data poison: attacker shards get permuted labels once, before
+        # any training (the adversary's own seed picks the attackers)
+        from repro.core.adversary import AdversaryState
+        clients = AdversaryState(fl.adversary, fl.num_devices).poison_clients(
+            clients, model_cfg.num_classes)
     trainer = LocalTrainer(model_cfg, fl)
     w_glob = init_small_model(jax.random.PRNGKey(fl.seed), model_cfg)
     algo = make_algorithm(fl.algorithm, trainer, clients, fl)
@@ -186,9 +194,12 @@ def run_experiment(
         if checkpoint_dir and checkpoint_every and t % checkpoint_every == 0:
             _save_checkpoint(checkpoint_dir, w_glob, t, rng, meter,
                              history, algo.state_to_ckpt(state))
+    eps, delta = ((None, None) if algo.privacy is None
+                  else algo.privacy.spent)
     return ExperimentResult(fl.algorithm, task, fl.partition, history,
                             final_model=w_glob,
-                            peak_device_bytes=algo.residency.peak_bytes)
+                            peak_device_bytes=algo.residency.peak_bytes,
+                            dp_epsilon=eps, dp_delta=delta)
 
 
 # ---------------------------------------------------------------------------

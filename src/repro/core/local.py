@@ -74,11 +74,15 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import FLConfig, ModelConfig
+from repro.core.robust import robust_agg
 from repro.data.pipeline import plan_epoch_indices
 from repro.models.small import classifier_loss, small_model_features
 from repro.utils.tree import tree_sq_norm, tree_sub
 
 Pytree = Any
+
+# the default (exact eq.-11) reduce spec: (reducer, trim_frac, krum_f)
+_WMEAN = ("weighted_mean", 0.0, 0)
 
 
 def _expand_mask(ok, x):
@@ -115,8 +119,79 @@ def _tree_bcast(tree, n: int):
         lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
 
 
+def _apply_lane_scale(stack, scale, ref):
+    """The adversary's in-jit Byzantine delta transform: lane c's trained
+    model becomes ``ref + scale[c] * (model - ref)`` (``core.adversary``
+    stamps ``scale`` on the plan; honest lanes carry 1.0). ``ref`` is the
+    lane seed — a single tree (broadcasts against the (C, ...) stack) or a
+    (C, ...) stacked tree of per-lane seeds."""
+    return jax.tree.map(
+        lambda p, r: r + _expand_mask(scale, p) * (p - r), stack, ref)
+
+
+def _reduce_stack(stack, aggm, gw, rspec):
+    """Contract the reduce over the trained lane stack, in-jit: the exact
+    eq.-11 tensordot (``weighted_mean``, bit-for-bit the historic path) or
+    a Byzantine-robust order statistic (``core.robust``)."""
+    if rspec[0] == "weighted_mean":
+        return _tree_agg(stack, aggm)
+    return robust_agg(stack, aggm, gw, rspec[0], rspec[1], rspec[2])
+
+
+def _split_head(rest, dp: bool, mode: str, has_gw: bool, has_dscale: bool,
+                has_dref: bool):
+    """Unpack the static head of a many()/fused ``*rest``: optional DP key,
+    then (for reducing modes) ``aggm [, gw][, dscale][, dref]``, then the
+    variant's loss/update extras. Presence flags are static, so the
+    default path's jaxpr is unchanged."""
+    i = 0
+    key = aggm = gw = ds = dref = None
+    if dp:
+        key = rest[0]
+        i = 1
+    if mode != "stack":
+        aggm = rest[i]
+        i += 1
+        if has_gw:
+            gw = rest[i]
+            i += 1
+        if has_dscale:
+            ds = rest[i]
+            i += 1
+        if has_dref:
+            dref = rest[i]
+            i += 1
+    return key, aggm, gw, ds, dref, rest[i:]
+
+
+def _make_dp(clip: float, sigma: float, stacked: bool):
+    """DP-SGD per-gradient transform: clip to L2 norm ``clip`` (per lane
+    when ``stacked``), then add N(0, sigma^2) noise (sigma already folded
+    as ``dp_noise_mult * dp_clip``). One fresh key per call; noise is
+    independent per leaf and per lane."""
+    def apply(grads, key):
+        leaves, treedef = jax.tree.flatten(grads)
+        if stacked:
+            sq = sum(jnp.sum(leaf * leaf, axis=tuple(range(1, leaf.ndim)))
+                     for leaf in leaves)
+        else:
+            sq = sum(jnp.sum(leaf * leaf) for leaf in leaves)
+        fac = jnp.minimum(1.0, clip / jnp.sqrt(sq + 1e-12))
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for leaf, k in zip(leaves, keys):
+            f = _expand_mask(fac, leaf) if stacked else fac
+            leaf = leaf * f
+            if sigma > 0:
+                leaf = leaf + sigma * jax.random.normal(k, leaf.shape,
+                                                        leaf.dtype)
+            out.append(leaf)
+        return jax.tree.unflatten(treedef, out)
+    return apply
+
+
 def _run_hops(vgrad, update, n_loss_extras, params, images, labels, offsets,
-              rows, plans, valid, lr, extras):
+              rows, plans, valid, lr, extras, dp=None, key=None):
     """The flat H*S-step gathered-SGD scan over one visit group, shared by
     ``train_many_fused`` and the schedule dispatch (``train_schedule``).
 
@@ -127,7 +202,11 @@ def _run_hops(vgrad, update, n_loss_extras, params, images, labels, offsets,
     momentum buffers) every hop, which dominates in the dispatch-bound S=1
     regime. Instead the momentum carry is zeroed by a per-step reset flag
     wherever a new client visit begins — same math, one flat scan of H*S
-    gathered SGD steps. Returns the trained (C, ...) stack."""
+    gathered SGD steps. Returns the trained (C, ...) stack.
+
+    ``dp``/``key`` opt the scan into DP-SGD: the per-step gradient passes
+    through the ``_make_dp`` transform with a key split from the scan
+    carry (dp-off builds today's scan body, bit-for-bit)."""
     H, _, S = valid.shape
     flat_rows = jnp.repeat(rows, S, axis=0)
     flat_ix = jnp.transpose(plans, (0, 2, 1, 3)).reshape(
@@ -136,24 +215,39 @@ def _run_hops(vgrad, update, n_loss_extras, params, images, labels, offsets,
         H * S, -1).astype(jnp.float32)
     reset = (jnp.arange(H * S) % S == 0).astype(jnp.float32)
     m = jax.tree.map(jnp.zeros_like, params)
+    xs = (flat_rows, flat_ix, flat_ok, reset)
 
-    def body(carry, x):
-        pc, mc = carry
-        row_s, ix, ok, rs = x   # (C,), (C, B), (C,), scalar
-        mc = jax.tree.map(lambda mi: (1.0 - rs) * mi, mc)
+    def gather(row_s, ix):
         # fleet row r, sample i -> flat row offsets[r] + i: ONE
         # (C, B)-indexed gather per leaf, so a step reads C*B rows — a
         # per-lane take-of-take would materialize (C, N_max, ...)
         # intermediates and all-gather the sharded plane instead
         gidx = jnp.take(offsets, row_s)[:, None] + ix
-        batch = {"images": jnp.take(images, gidx, axis=0),
-                 "labels": jnp.take(labels, gidx, axis=0)}
-        g = vgrad(pc, batch, *extras[:n_loss_extras])
-        return update(pc, mc, g, lr,
-                      *extras[n_loss_extras:], ok), None
+        return {"images": jnp.take(images, gidx, axis=0),
+                "labels": jnp.take(labels, gidx, axis=0)}
 
-    (p, _), _ = jax.lax.scan(
-        body, (params, m), (flat_rows, flat_ix, flat_ok, reset))
+    if dp is None:
+        def body(carry, x):
+            pc, mc = carry
+            row_s, ix, ok, rs = x   # (C,), (C, B), (C,), scalar
+            mc = jax.tree.map(lambda mi: (1.0 - rs) * mi, mc)
+            g = vgrad(pc, gather(row_s, ix), *extras[:n_loss_extras])
+            return update(pc, mc, g, lr,
+                          *extras[n_loss_extras:], ok), None
+
+        (p, _), _ = jax.lax.scan(body, (params, m), xs)
+    else:
+        def body(carry, x):
+            pc, mc, kc = carry
+            row_s, ix, ok, rs = x
+            kc, sub = jax.random.split(kc)
+            mc = jax.tree.map(lambda mi: (1.0 - rs) * mi, mc)
+            g = vgrad(pc, gather(row_s, ix), *extras[:n_loss_extras])
+            g = dp(g, sub)
+            return update(pc, mc, g, lr,
+                          *extras[n_loss_extras:], ok) + (kc,), None
+
+        (p, _, _), _ = jax.lax.scan(body, (params, m, key), xs)
     return p
 
 
@@ -194,6 +288,21 @@ class LocalTrainer:
         mom = fl.momentum
         fused = fl.use_fused_sgd
 
+        # DP-SGD is baked at construction (fl is frozen): dp-off builds
+        # literally today's step/scan functions, so dp-off runs stay
+        # bit-exact without any cache-key machinery.
+        if fl.dp_clip > 0:
+            sigma = fl.dp_noise_mult * fl.dp_clip
+            self._dp = (float(fl.dp_clip), float(sigma))
+            self._dp_one = _make_dp(float(fl.dp_clip), float(sigma), False)
+            self._dp_many = _make_dp(float(fl.dp_clip), float(sigma), True)
+        else:
+            self._dp = None
+            self._dp_one = self._dp_many = None
+        self._dp_base = None        # PRNGKey(fl.dp_seed), built on first use
+        self._dp_ctr = 0            # fold_in counter: one fresh key per
+                                    # dispatch (per step for train())
+
         def apply_update(params, m, grads, lr):
             """m = mu*m + g; p = p - lr*m. Elementwise, so the same code
             updates a single client or a client-stacked pytree. Opt-in path:
@@ -219,12 +328,24 @@ class LocalTrainer:
             params = jax.tree.map(lambda p, d: p - lr * d, params, corr)
             return params, m
 
+        dp_one = self._dp_one
+
         def make_step(loss_fn, update, n_loss_extras):
-            @jax.jit
-            def step(params, m, batch, lr, *extras):
-                grads = jax.grad(loss_fn)(params, batch,
-                                          *extras[:n_loss_extras])
-                return update(params, m, grads, lr, *extras[n_loss_extras:])
+            if dp_one is None:
+                @jax.jit
+                def step(params, m, batch, lr, *extras):
+                    grads = jax.grad(loss_fn)(params, batch,
+                                              *extras[:n_loss_extras])
+                    return update(params, m, grads, lr,
+                                  *extras[n_loss_extras:])
+            else:
+                @jax.jit
+                def step(params, m, batch, lr, key, *extras):
+                    grads = jax.grad(loss_fn)(params, batch,
+                                              *extras[:n_loss_extras])
+                    grads = dp_one(grads, key)
+                    return update(params, m, grads, lr,
+                                  *extras[n_loss_extras:])
             return step
 
         self._plain = make_step(plain_loss, apply_update, 0)
@@ -268,11 +389,18 @@ class LocalTrainer:
                 lambda p, d: p - (_expand_mask(ok, p) * lr) * d, params, corr)
             return params, m
 
-        def make_many(loss_fn, update, extra_axes, broadcast_params, mode):
+        dp_many = self._dp_many
+
+        def make_many(loss_fn, update, extra_axes, broadcast_params, mode,
+                      rspec=_WMEAN, has_gw=False, has_dscale=False,
+                      has_dref=False):
             # extra_axes: one vmap axis per loss extra — 0 for client-stacked
             # trees, None for cohort-shared trees broadcast inside the jit.
-            # mode selects the return contract (see _get_many).
+            # mode selects the return contract (see _get_many); rspec /
+            # has_* select the reduce family and the adversary transform
+            # (all static — the default builds today's jaxpr, bit-for-bit).
             n_loss_extras = len(extra_axes)
+            dp = dp_many is not None
             vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + extra_axes)
 
             @jax.jit
@@ -282,25 +410,41 @@ class LocalTrainer:
                 # materializes C copies); batches: (C, S, B, ...); valid:
                 # (C, S) bool — False steps leave that client's params and
                 # momentum untouched.
-                aggm, extras = ((None, rest) if mode == "stack"
-                                else (rest[0], rest[1:]))
+                key, aggm, gw, ds, dref, extras = _split_head(
+                    rest, dp, mode, has_gw, has_dscale, has_dref)
+                seed_ref = params       # the lane seed (pre-broadcast/train)
                 if broadcast_params:
                     params = _tree_bcast(params, valid.shape[0])
                 m = jax.tree.map(jnp.zeros_like, params)
                 xs = (jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), batches),
                       jnp.moveaxis(valid, 0, 1).astype(jnp.float32))
 
-                def body(carry, x):
-                    p, m = carry
-                    batch, ok = x
-                    g = vgrad(p, batch, *extras[:n_loss_extras])
-                    return update(p, m, g, lr, *extras[n_loss_extras:],
-                                  ok), None
+                if not dp:
+                    def body(carry, x):
+                        p, m = carry
+                        batch, ok = x
+                        g = vgrad(p, batch, *extras[:n_loss_extras])
+                        return update(p, m, g, lr, *extras[n_loss_extras:],
+                                      ok), None
 
-                (p, _), _ = jax.lax.scan(body, (params, m), xs)
+                    (p, _), _ = jax.lax.scan(body, (params, m), xs)
+                else:
+                    def body(carry, x):
+                        p, m, k = carry
+                        batch, ok = x
+                        k, sub = jax.random.split(k)
+                        g = vgrad(p, batch, *extras[:n_loss_extras])
+                        g = dp_many(g, sub)
+                        return update(p, m, g, lr, *extras[n_loss_extras:],
+                                      ok) + (k,), None
+
+                    (p, _, _), _ = jax.lax.scan(body, (params, m, key), xs)
                 if mode == "stack":
                     return p
-                red = _tree_agg(p, aggm)
+                if ds is not None:
+                    p = _apply_lane_scale(p, ds,
+                                          dref if has_dref else seed_ref)
+                red = _reduce_stack(p, aggm, gw, rspec)
                 return red if mode == "agg" else (red, p)
             return many
 
@@ -322,8 +466,10 @@ class LocalTrainer:
         #    and an outer scan walks a hop axis carrying the model stack —
         #    a whole ring lap sequence compiles to one dispatch.
         def make_many_fused(loss_fn, update, extra_axes, broadcast_params,
-                            mode):
+                            mode, rspec=_WMEAN, has_gw=False,
+                            has_dscale=False, has_dref=False):
             n_loss_extras = len(extra_axes)
+            dp = dp_many is not None
             vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + extra_axes)
 
             def many_hops(params, images, labels, offsets, rows, plans,
@@ -334,15 +480,20 @@ class LocalTrainer:
                 # (H, C, S, B) int32 sample indices; valid: (H, C, S).
                 # Extras are hop-invariant (rings train variant="plain";
                 # star cohorts call with H=1).
-                aggm, extras = ((None, rest) if mode == "stack"
-                                else (rest[0], rest[1:]))
+                key, aggm, gw, ds, dref, extras = _split_head(
+                    rest, dp, mode, has_gw, has_dscale, has_dref)
+                seed_ref = params       # the lane seed (pre-broadcast/train)
                 if broadcast_params:
                     params = _tree_bcast(params, valid.shape[1])
                 p = _run_hops(vgrad, update, n_loss_extras, params, images,
-                              labels, offsets, rows, plans, valid, lr, extras)
+                              labels, offsets, rows, plans, valid, lr,
+                              extras, dp=dp_many, key=key)
                 if mode == "stack":
                     return p
-                red = _tree_agg(p, aggm)
+                if ds is not None:
+                    p = _apply_lane_scale(p, ds,
+                                          dref if has_dref else seed_ref)
+                red = _reduce_stack(p, aggm, gw, rspec)
                 return red if mode == "agg" else (red, p)
 
             donate = (0,) if (not broadcast_params
@@ -351,13 +502,14 @@ class LocalTrainer:
 
         self._make_many_fused = make_many_fused
         # jitted train_many/train_many_fused callables, built on first use:
-        # (variant, broadcast_params, mode) -> fn. mode is the return
-        # contract — "stack": the (C, ...) trained stack; "agg": the in-jit
-        # reduced aggregate; "agg_locals": (aggregate, stack).
+        # (variant, broadcast_params, mode, rspec, has_gw, has_dscale,
+        # has_dref) -> fn. mode is the return contract — "stack": the
+        # (C, ...) trained stack; "agg": the in-jit reduced aggregate;
+        # "agg_locals": (aggregate, stack).
         self._many_fns: Dict = {}
         self._fused_fns: Dict = {}
-        # jitted whole-block schedule dispatches, keyed (variant, hier) —
-        # see train_schedule
+        # jitted whole-block schedule dispatches, keyed (variant, hier,
+        # rspec, has_dscale) — see train_schedule
         self._sched_fns: Dict = {}
 
         # data-plane H2D bytes shipped per engine (sequential per-step
@@ -368,15 +520,17 @@ class LocalTrainer:
         self.dispatches = 0
 
     def _get_many(self, variant: str, broadcast: bool, mode: str,
-                  fused_engine: bool):
+                  fused_engine: bool, rspec=_WMEAN, has_gw: bool = False,
+                  has_dscale: bool = False, has_dref: bool = False):
         cache = self._fused_fns if fused_engine else self._many_fns
-        key = (variant, broadcast, mode)
+        key = (variant, broadcast, mode, rspec, has_gw, has_dscale, has_dref)
         if key not in cache:
             loss, upd, n_loss = self._many_spec[variant]
             axes = tuple(0 if stacked else None
                          for stacked in self._EXTRA_STACKED[variant][:n_loss])
             make = self._make_many_fused if fused_engine else self._make_many
-            cache[key] = make(loss, upd, axes, broadcast, mode)
+            cache[key] = make(loss, upd, axes, broadcast, mode, rspec,
+                              has_gw, has_dscale, has_dref)
         return cache[key]
 
     @staticmethod
@@ -384,6 +538,16 @@ class LocalTrainer:
         if agg is None:
             return "stack"              # the stack IS the locals
         return "agg_locals" if keep_locals else "agg"
+
+    def _next_dp_key(self):
+        """One fresh PRNG key per DP dispatch (per step for ``train``):
+        deterministic from ``fl.dp_seed`` + a host-side counter, so DP
+        noise never touches the experiment RNG stream."""
+        if self._dp_base is None:
+            self._dp_base = jax.random.PRNGKey(self.fl.dp_seed)
+        key = jax.random.fold_in(self._dp_base, self._dp_ctr)
+        self._dp_ctr += 1
+        return key
 
     # ------------------------------------------------------------------
     def train(
@@ -426,7 +590,8 @@ class LocalTrainer:
             self.h2d_bytes += sum(_h2d_nbytes(v) for v in batch.values())
             self.dispatches += 1
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, mom = step(params, mom, batch, lr, *extras)
+            head = () if self._dp is None else (self._next_dp_key(),)
+            params, mom = step(params, mom, batch, lr, *head, *extras)
         return params
 
     # ------------------------------------------------------------------
@@ -440,6 +605,12 @@ class LocalTrainer:
         variant: str = "plain",
         broadcast: bool = False,
         agg: Optional[np.ndarray] = None,
+        agg_gw: Optional[np.ndarray] = None,
+        reducer: str = "weighted_mean",
+        trim_frac: float = 0.0,
+        krum_f: int = 0,
+        dscale: Optional[np.ndarray] = None,
+        dref: Optional[Pytree] = None,
         keep_locals: bool = False,
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
@@ -466,6 +637,15 @@ class LocalTrainer:
         weight 0, so no host-side prefix slice is needed.
         ``keep_locals=True`` returns ``(aggregate, (C, ...) stack)``.
 
+        ``reducer`` selects a Byzantine-robust reduce instead of the
+        linear contraction (see ``AggSpec.reduce_kwargs``): ``agg`` is
+        then the UNCOLLAPSED (G, C) lane-weight matrix (validity mask)
+        and ``agg_gw`` the optional (G,) group weights. ``dscale`` is the
+        adversary's per-lane delta factor, applied to the trained stack
+        before the reduce relative to the lane seed — ``params`` itself,
+        or ``dref`` when the input stack is not the seed (the batched
+        engine's multi-hop ring path).
+
         With ``mesh``, every C-stacked input is placed on the mesh's
         ``data_axis`` via ``NamedSharding`` and cohort-shared trees are
         replicated, so the compiled scan partitions the client axis across
@@ -480,26 +660,45 @@ class LocalTrainer:
                            + _h2d_nbytes(valid))
         self.dispatches += 1
         extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
+        rspec = (reducer, float(trim_frac), int(krum_f))
         fam = self._get_many(variant, broadcast,
-                             self._agg_mode(agg, keep_locals), False)
+                             self._agg_mode(agg, keep_locals), False,
+                             rspec, agg_gw is not None, dscale is not None,
+                             dref is not None)
         batches = {k: jnp.asarray(v) for k, v in batches.items()}
         valid = jnp.asarray(valid, bool)
         if agg is not None:
             agg = jnp.asarray(agg, jnp.float32)
+        if agg_gw is not None:
+            agg_gw = jnp.asarray(agg_gw, jnp.float32)
+        if dscale is not None:
+            dscale = jnp.asarray(dscale, jnp.float32)
         if mesh is not None:
             put, data_s, shard, repl = self._mesh_placement(
                 mesh, data_axis, valid.shape[0], hop_leading=False)
             params = put(params, repl if broadcast else shard)
             batches = put(batches, data_s)
             valid = put(valid, data_s)
-            if agg is not None:
-                agg = put(agg, repl)
+            agg, agg_gw, dscale, dref = (
+                x if x is None else put(x, repl)
+                for x in (agg, agg_gw, dscale, dref))
             extras = tuple(
                 put(e, shard if s else repl)
                 for e, s in zip(extras, self._EXTRA_STACKED[variant]))
-        head = () if agg is None else (agg,)
+        head = self._head(agg, agg_gw, dscale, dref)
         return fam(params, batches, valid, jnp.asarray(lr, jnp.float32),
                    *head, *extras)
+
+    def _head(self, agg, agg_gw, dscale, dref) -> tuple:
+        """Assemble the static head of a many()/fused call in the order
+        ``_split_head`` unpacks it."""
+        head = [] if self._dp is None else [self._next_dp_key()]
+        if agg is not None:
+            head.append(agg)
+            for x in (agg_gw, dscale, dref):
+                if x is not None:
+                    head.append(x)
+        return tuple(head)
 
     @staticmethod
     def _mesh_placement(mesh, data_axis: str, C: int, hop_leading: bool):
@@ -538,6 +737,12 @@ class LocalTrainer:
         variant: str = "plain",
         broadcast: bool = False,
         agg: Optional[np.ndarray] = None,
+        agg_gw: Optional[np.ndarray] = None,
+        reducer: str = "weighted_mean",
+        trim_frac: float = 0.0,
+        krum_f: int = 0,
+        dscale: Optional[np.ndarray] = None,
+        dref: Optional[Pytree] = None,
         keep_locals: bool = False,
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
@@ -578,22 +783,30 @@ class LocalTrainer:
         self.h2d_bytes += rows.nbytes + plans.nbytes + valid.nbytes
         self.dispatches += 1
         extras = self._extras(variant, anchor, w_glob, w_prev, c_glob, c_local)
+        rspec = (reducer, float(trim_frac), int(krum_f))
         fam = self._get_many(variant, broadcast,
-                             self._agg_mode(agg, keep_locals), True)
+                             self._agg_mode(agg, keep_locals), True,
+                             rspec, agg_gw is not None, dscale is not None,
+                             dref is not None)
         if agg is not None:
             agg = jnp.asarray(agg, jnp.float32)
+        if agg_gw is not None:
+            agg_gw = jnp.asarray(agg_gw, jnp.float32)
+        if dscale is not None:
+            dscale = jnp.asarray(dscale, jnp.float32)
         if mesh is not None:
             put, hop_s, shard, repl = self._mesh_placement(
                 mesh, data_axis, valid.shape[1], hop_leading=True)
             params = put(params, repl if broadcast else shard)
             rows, plans, valid = (put(x, hop_s)
                                   for x in (rows, plans, valid))
-            if agg is not None:
-                agg = put(agg, repl)
+            agg, agg_gw, dscale, dref = (
+                x if x is None else put(x, repl)
+                for x in (agg, agg_gw, dscale, dref))
             extras = tuple(
                 put(e, shard if s else repl)
                 for e, s in zip(extras, self._EXTRA_STACKED[variant]))
-        head = () if agg is None else (agg,)
+        head = self._head(agg, agg_gw, dscale, dref)
         return fam(params, plane.images, plane.labels, plane.offsets,
                    jnp.asarray(rows), jnp.asarray(plans), jnp.asarray(valid),
                    jnp.asarray(lr, jnp.float32), *head, *extras)
@@ -607,12 +820,14 @@ class LocalTrainer:
     _SCHED_LEAD = {
         "rows": 2, "plans": 2, "valid": 2,          # (n, H|R, C, ...)
         "ids": 1, "aggv": 1, "kl": 1, "mw": 1,
-        "use_prev": 1, "seed": 1,                   # (n, C)
+        "use_prev": 1, "seed": 1, "dscale": 1,      # (n, C)
         "lr": None, "frac": None,                   # (n,)
-        "wg": 2,                                    # (n, G, C)
+        "wg": 2, "aggw": 2,                         # (n, G, C)
+        "aggg": None, "gwv": None,                  # (n, G) — replicated
     }
 
-    def _make_schedule(self, variant: str, hier: bool):
+    def _make_schedule(self, variant: str, hier: bool, rspec=_WMEAN,
+                       has_dscale: bool = False):
         """Build the jitted block dispatch: an outer ``lax.scan`` over the
         round axis whose carry is ``(w_glob, algo_state)``. Each round body
         broadcasts the carried global, runs the flat hop scan
@@ -623,13 +838,22 @@ class LocalTrainer:
         a scan over the first R-1 (in-scan (G, C) per-edge reduce seeding
         the next iteration's lanes) plus a peeled final iteration that
         applies the collapsed cloud weights exactly like the per-round
-        engine does — keeping chunked vs per-round bit-parity."""
+        engine does — keeping chunked vs per-round bit-parity.
+
+        ``rspec``/``has_dscale`` fold the robust reduce and the adversary's
+        per-lane delta transform into the same block dispatch (the robust
+        operands ``aggw``/``aggg`` — or ``gwv`` for hier — and ``dscale``
+        ship as extra xs lanes); DP-SGD threads a key through both scan
+        levels. All static — the defaults build today's jaxpr."""
         from repro.core.state import gather_rows, scaffold_step, scatter_rows
 
         loss_fn, update, n_loss = self._many_spec[variant]
         axes = tuple(0 if stacked else None
                      for stacked in self._EXTRA_STACKED[variant][:n_loss])
         vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + axes)
+        dp_many = self._dp_many
+        dp = dp_many is not None
+        robust = rspec[0] != "weighted_mean"
 
         def round_extras(w, st, x):
             """The plan's extras, resolved from the scan carry: GLOBAL is
@@ -656,43 +880,81 @@ class LocalTrainer:
                 return dict(st, c=c, ci=ci)
             return st
 
-        def sched(w0, carry, images, labels, offsets, xs):
-            def train_group(params, rows, plans, valid, lr, extras):
+        def sched(w0, carry, images, labels, offsets, xs, *dpk):
+            def train_group(params, rows, plans, valid, lr, extras, key):
                 return _run_hops(vgrad, update, n_loss, params, images,
                                  labels, offsets, rows, plans, valid, lr,
-                                 extras)
+                                 extras, dp=dp_many, key=key)
 
             if hier:
-                def body(rc, x):
-                    w, st = rc
+                def round_step(w, st, x, key):
                     seed = x["seed"]
 
-                    def one_iter(E, xi, aggm):
+                    def one_iter(E, xi, reduce_fn, sub):
                         params = jax.tree.map(lambda t: t[seed], E)
                         p = train_group(params, xi["rows"][None],
                                         xi["plans"][None], xi["valid"][None],
-                                        x["lr"], ())
-                        return _tree_agg(p, aggm)
+                                        x["lr"], (), sub)
+                        if has_dscale:
+                            p = _apply_lane_scale(p, x["dscale"], params)
+                        return reduce_fn(p)
+
+                    def inter(p):
+                        if robust:
+                            return robust_agg(p, x["wg"], None, *rspec)
+                        return _tree_agg(p, x["wg"])
+
+                    def final(p):
+                        if robust:
+                            return robust_agg(p, x["wg"], x["gwv"], *rspec)
+                        return _tree_agg(p, x["aggv"])
 
                     E = _tree_bcast(w, x["wg"].shape[0])
                     head = {k: x[k][:-1]
                             for k in ("rows", "plans", "valid")}
-                    E, _ = jax.lax.scan(
-                        lambda E, xi: (one_iter(E, xi, x["wg"]), None),
-                        E, head)
                     last = {k: x[k][-1] for k in ("rows", "plans", "valid")}
-                    return (one_iter(E, last, x["aggv"]), st), None
+                    if dp:
+                        def istep(c, xi):
+                            Ec, kc = c
+                            kc, sub = jax.random.split(kc)
+                            return (one_iter(Ec, xi, inter, sub), kc), None
+
+                        (E, key), _ = jax.lax.scan(istep, (E, key), head)
+                        key, sub = jax.random.split(key)
+                        return one_iter(E, last, final, sub), st
+                    E, _ = jax.lax.scan(
+                        lambda E, xi: (one_iter(E, xi, inter, None), None),
+                        E, head)
+                    return one_iter(E, last, final, None), st
             else:
-                def body(rc, x):
-                    w, st = rc
+                def round_step(w, st, x, key):
                     params = _tree_bcast(w, x["valid"].shape[1])
                     p = train_group(params, x["rows"], x["plans"],
                                     x["valid"], x["lr"],
-                                    round_extras(w, st, x))
-                    w_new = _tree_agg(p, x["aggv"])
-                    return (w_new, update_carry(w, st, x, p)), None
+                                    round_extras(w, st, x), key)
+                    if has_dscale:
+                        p = _apply_lane_scale(p, x["dscale"], w)
+                    if robust:
+                        w_new = robust_agg(p, x["aggw"], x["aggg"], *rspec)
+                    else:
+                        w_new = _tree_agg(p, x["aggv"])
+                    return w_new, update_carry(w, st, x, p)
 
-            (w, out), _ = jax.lax.scan(body, (w0, carry), xs)
+            if dp:
+                def body(rc, x):
+                    w, st, k = rc
+                    k, sub = jax.random.split(k)
+                    w_new, st_new = round_step(w, st, x, sub)
+                    return (w_new, st_new, k), None
+
+                (w, out, _), _ = jax.lax.scan(body, (w0, carry, dpk[0]), xs)
+            else:
+                def body(rc, x):
+                    w, st = rc
+                    w_new, st_new = round_step(w, st, x, None)
+                    return (w_new, st_new), None
+
+                (w, out), _ = jax.lax.scan(body, (w0, carry), xs)
             return w, out
 
         return jax.jit(sched)
@@ -706,6 +968,9 @@ class LocalTrainer:
         *,
         variant: str = "plain",
         hier: bool = False,
+        reducer: str = "weighted_mean",
+        trim_frac: float = 0.0,
+        krum_f: int = 0,
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
     ) -> Pytree:
@@ -725,6 +990,12 @@ class LocalTrainer:
         hop scan, cloud reduce, n times — is literally one compiled call
         (``dispatches`` records 1). Returns ``(w_glob, carry)``.
 
+        ``reducer``/``trim_frac``/``krum_f`` select the robust reduce for
+        every round of the block; the robust operands (``aggw``/``aggg``,
+        or ``gwv`` for hier) and the adversary's ``dscale`` arrive as extra
+        ``xs`` lanes — so an attacked, robustly-aggregated block is still
+        ONE dispatch.
+
         ``mesh`` shards every lane axis C over ``data_axis`` exactly like
         ``train_many_fused`` (the round axis n stays unsharded — it is a
         sequential scan); the state carry is replicated (its K + 1 rows
@@ -732,9 +1003,12 @@ class LocalTrainer:
         """
         self.h2d_bytes += sum(np.asarray(v).nbytes for v in xs.values())
         self.dispatches += 1
-        key = (variant, hier)
+        rspec = (reducer, float(trim_frac), int(krum_f))
+        has_dscale = "dscale" in xs
+        key = (variant, hier, rspec, has_dscale)
         if key not in self._sched_fns:
-            self._sched_fns[key] = self._make_schedule(variant, hier)
+            self._sched_fns[key] = self._make_schedule(
+                variant, hier, rspec, has_dscale)
         fn = self._sched_fns[key]
         if mesh is not None:
             C = xs["valid"].shape[2]
@@ -761,8 +1035,9 @@ class LocalTrainer:
             carry = put(carry, repl)
         else:
             xs = {k: jnp.asarray(v) for k, v in xs.items()}
+        dpk = () if self._dp is None else (self._next_dp_key(),)
         return fn(params, carry, plane.images, plane.labels, plane.offsets,
-                  xs)
+                  xs, *dpk)
 
     # which extras carry a leading client axis (True) vs are cohort-shared
     # single trees (False) — order matches ``_extras``

@@ -105,11 +105,28 @@ class AggSpec:
     single effective per-lane weight vector — ``matrix`` returns exactly
     the array the engines contract against the lane-stacked model trees,
     inside the compiled dispatch.
+
+    ``reducer`` selects a Byzantine-robust alternative to the linear lane
+    reduce (``core.robust``): ``median``/``trimmed_mean``/``krum`` replace
+    the per-group lane-weighted sum with an in-jit order statistic over
+    the group's VALID lanes (weight > 0 — ghost-padded and scenario-
+    dropped lanes are masked out of the sort, not merely zero-weighted).
+    Robust reducers are unweighted over lanes; the group-level collapse
+    stays the linear ``group_weights`` mean. ``weighted_mean`` keeps the
+    exact eq.-11 contraction, bit-for-bit.
     """
 
     groups: Tuple[Tuple[int, ...], ...]      # lane indices per group
     lane_weights: Tuple[float, ...]          # weight of each lane IN its group
     group_weights: Optional[Tuple[float, ...]] = None
+    reducer: str = "weighted_mean"           # weighted_mean|median|trimmed_mean|krum
+    trim_frac: float = 0.0                   # per-side trim (trimmed_mean)
+    krum_f: int = 0                          # assumed Byzantine lanes (krum)
+
+    def __post_init__(self):
+        if self.reducer not in ("weighted_mean", "median", "trimmed_mean",
+                                "krum"):
+            raise ValueError(f"unknown reducer {self.reducer!r}")
 
     @classmethod
     def flat(cls, weights: Sequence[float]) -> "AggSpec":
@@ -140,6 +157,20 @@ class AggSpec:
             return W
         return np.asarray(self.group_weights, np.float32) @ W     # (pad_to,)
 
+    def reduce_kwargs(self, pad_to: int) -> Dict[str, Any]:
+        """Engine-side reduce operands for ``LocalTrainer.train_many`` /
+        ``train_many_fused``. ``weighted_mean`` ships the collapsed
+        ``matrix`` exactly as before (the bit-exact path); robust reducers
+        ship the UNCOLLAPSED (G, pad_to) lane-weight matrix (its > 0
+        pattern is the validity mask) plus the (G,) group weights."""
+        if self.reducer == "weighted_mean":
+            return {"agg": self.matrix(pad_to)}
+        wm = dataclasses.replace(self, group_weights=None).matrix(pad_to)
+        gw = (np.asarray(self.group_weights, np.float32)
+              if self.collapsed else None)
+        return {"agg": wm, "agg_gw": gw, "reducer": self.reducer,
+                "trim_frac": self.trim_frac, "krum_f": self.krum_f}
+
 
 @dataclasses.dataclass(frozen=True)
 class Hop:
@@ -167,6 +198,13 @@ class VisitGroup:
 
     ``keep_locals`` asks the engine to also return the per-lane trained
     models (MOON's prev memory, SCAFFOLD's variate update need them).
+
+    ``lane_scale`` is the adversary's per-lane delta transform
+    (``core.adversary``): before the group's reduce, lane c's trained
+    model becomes ``ref + lane_scale[c] * (model - ref)`` where ``ref``
+    is the lane's seed (-1.0 = sign-flipped upload, >1 = amplified).
+    ``None`` (every honest round) skips the transform entirely, keeping
+    the compiled reduce bit-exact to adversary-free plans.
     """
 
     hops: Tuple[Hop, ...]
@@ -177,6 +215,7 @@ class VisitGroup:
     seed: Optional[Tuple[int, ...]] = None
     agg: Optional[AggSpec] = None
     keep_locals: bool = False
+    lane_scale: Optional[Tuple[float, ...]] = None
 
     @property
     def lanes(self) -> int:

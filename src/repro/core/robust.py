@@ -1,0 +1,122 @@
+"""Byzantine-robust in-jit lane reducers (AggSpec alternatives).
+
+``weighted_mean`` — the exact eq.-11 contraction — stays in
+``core.local._tree_agg``; this module implements the robust alternatives
+as pure jnp functions over the (C, ...) lane-stacked model trees that
+``keep_locals`` already materializes inside the compiled dispatch:
+
+* ``median``        — per-coordinate median over the group's valid lanes;
+* ``trimmed_mean``  — per-coordinate mean after dropping the
+  ``floor(trim_frac * m)`` smallest and largest valid values;
+* ``krum``          — Krum (Blanchard et al., NeurIPS 2017): select the
+  lane whose summed squared distance to its ``m - f - 2`` nearest valid
+  neighbours is smallest.
+
+Masking is the load-bearing part: ghost-padded lanes (sharded engine),
+ring-tail lanes and scenario-dropped lanes all arrive as weight-0 rows of
+the (G, C) lane-weight matrix. A linear reduce ignores them for free; a
+sort does NOT — a zero weight still contributes a zero *value* to an
+order statistic. So validity here is ``weight > 0`` and invalid lanes are
+pushed to +inf before the sort (then zeroed wherever the position-weight
+vector is 0, so no 0 * inf NaN survives) or excluded from Krum's distance
+matrix and scores.
+
+Everything is shape-static and works on traced valid-lane counts (the
+fused schedule ships per-round weights as data), via arange-based
+position weights instead of dynamic slicing — so a whole eval-to-eval
+block with a robust reducer still compiles to ONE dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = object
+
+# large-but-finite stand-in for +inf inside Krum's distance matrix
+# (inf - inf would NaN when centering; scores of invalid lanes are
+# re-masked with real inf before the argmin anyway)
+_BIG = jnp.float32(1e30)
+
+
+def flatten_lanes(stack: Pytree):
+    """Ravel a (C, ...)-stacked tree into one (C, P) matrix + unflattener.
+
+    The robust statistics are per-coordinate (median/trimmed-mean) or
+    whole-vector (Krum's distances), so a single flat view is both
+    simpler and cheaper than per-leaf passes; ``unflatten`` accepts any
+    (..., P) result and restores leading axes per leaf."""
+    leaves, treedef = jax.tree.flatten(stack)
+    shapes = [tuple(leaf.shape[1:]) for leaf in leaves]
+    sizes = [int(np.prod(s, dtype=np.int64)) for s in shapes]
+    flat = jnp.concatenate(
+        [leaf.reshape(leaf.shape[0], -1) for leaf in leaves], axis=1)
+
+    def unflatten(mat):
+        parts = jnp.split(mat, np.cumsum(sizes)[:-1], axis=-1)
+        outs = [p.reshape(tuple(mat.shape[:-1]) + s)
+                for p, s in zip(parts, shapes)]
+        return jax.tree.unflatten(treedef, outs)
+
+    return flat, unflatten
+
+
+def _order_weights(reducer: str, trim_frac: float, m, idx):
+    """Position-weight vector over the ascending sort of the m valid
+    entries (invalid entries occupy positions >= m, at +inf)."""
+    f32 = jnp.float32
+    if reducer == "median":
+        lo, hi = (m - 1) // 2, m // 2
+        pw = 0.5 * ((idx == lo).astype(f32) + (idx == hi).astype(f32))
+    else:  # trimmed_mean
+        k = jnp.minimum(jnp.floor(trim_frac * m).astype(jnp.int32),
+                        (m - 1) // 2)
+        pw = (((idx >= k) & (idx < m - k)).astype(f32)
+              / jnp.maximum(m - 2 * k, 1).astype(f32))
+    # a group whose lanes ALL dropped contributes a zero row (its group
+    # weight is zero too) instead of a 0.5 * inf NaN
+    return jnp.where(m > 0, pw, 0.0)
+
+
+def robust_agg(stack: Pytree, wm, gw, reducer: str,
+               trim_frac: float = 0.0, krum_f: int = 0) -> Pytree:
+    """Robust reduce of a (C, ...) lane stack.
+
+    ``wm`` is the UNCOLLAPSED (G, C) lane-weight matrix — only its > 0
+    pattern (lane validity per group) is consumed: robust reducers are
+    unweighted over valid lanes. ``gw`` collapses the (G, ...) group
+    results with the linear (G,) group weights; ``gw=None`` returns the
+    (G, ...) group stack (HierFAVG's intermediate edge iterations).
+    ``reducer``/``trim_frac``/``krum_f`` are static; ``wm``/``gw`` may be
+    traced (per-round data inside a fused schedule scan).
+    """
+    flat, unflatten = flatten_lanes(stack)
+    C = flat.shape[0]
+    idx = jnp.arange(C)
+
+    def one_group(wrow):
+        mask = wrow > 0
+        m = mask.sum().astype(jnp.int32)
+        if reducer == "krum":
+            sq = jnp.sum(flat * flat, axis=1)
+            d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
+            pair_ok = (mask[:, None] & mask[None, :]
+                       & (idx[:, None] != idx[None, :]))
+            d2 = jnp.where(pair_ok, d2, _BIG)
+            nn = jnp.clip(m - krum_f - 2, 1, jnp.maximum(m - 1, 1))
+            ds = jnp.sort(d2, axis=1)
+            score = jnp.sum(jnp.where(idx[None, :] < nn, ds, 0.0), axis=1)
+            score = jnp.where(mask, score, jnp.inf)
+            pw = (idx == jnp.argmin(score)).astype(flat.dtype)
+            pw = jnp.where(m > 0, pw, 0.0)
+            return pw @ flat
+        svals = jnp.sort(jnp.where(mask[:, None], flat, jnp.inf), axis=0)
+        pw = _order_weights(reducer, trim_frac, m, idx)
+        svals = jnp.where((pw > 0)[:, None], svals, 0.0)
+        return pw.astype(flat.dtype) @ svals
+
+    rows = jax.vmap(one_group)(jnp.asarray(wm))              # (G, P)
+    if gw is None:
+        return unflatten(rows)
+    return unflatten(jnp.asarray(gw, rows.dtype) @ rows)

@@ -66,6 +66,15 @@ def dirichlet_partition(
     return [np.sort(np.asarray(b, dtype=np.int64)) for b in buckets]
 
 
+def poison_labels(labels: np.ndarray, num_classes: int) -> np.ndarray:
+    """Deterministic label-flip poison: ``label -> num_classes - 1 - label``
+    (the classic involutive permutation used by label-flipping attackers;
+    ``core.adversary`` applies it to attacker shards)."""
+    if num_classes < 2:
+        raise ValueError(f"label flip needs >= 2 classes, got {num_classes}")
+    return (num_classes - 1 - labels).astype(labels.dtype)
+
+
 def partition(
     labels: np.ndarray, *, scheme: str, k: int, rng: np.random.Generator,
     xi: int = 2, alpha: float = 0.3,

@@ -166,7 +166,7 @@ def forward(
     else:
         carry = carry0
         for i in range(num_repeats(cfg)):
-            sl = jax.tree.map(lambda p: p[i], params["blocks"])
+            sl = jax.tree.map(lambda p, i=i: p[i], params["blocks"])
             carry, _ = body(carry, sl)
         x, aux = carry
     logits = L.unembed(params["embed"], x, cfg)
@@ -243,7 +243,7 @@ def decode_step(
     else:
         slices = []
         for i in range(num_repeats(cfg)):
-            xs = jax.tree.map(lambda p: p[i], (params["blocks"], cache))
+            xs = jax.tree.map(lambda p, i=i: p[i], (params["blocks"], cache))
             x, ns = body(x, xs)
             slices.append(ns)
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)

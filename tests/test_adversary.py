@@ -1,0 +1,427 @@
+"""Adversary + robust-reduce + DP-SGD tests (ROADMAP item 3 / PR 8).
+
+Three layers, mirroring the feature's seams:
+
+* ``core.robust`` units + (hypothesis-optional) property tests — masking
+  is the load-bearing part: weight-0 lanes (ghosts, ring tails, scenario
+  drops) must be excluded from the order statistics, and the reducers
+  must be invariant to lane order and bounded by the valid-lane extremes.
+* attacked-round engine parity — the Byzantine lane transform and the
+  robust reducers ride the RoundPlan IR, so sequential / batched / fused
+  must agree under attack exactly as they do without one, and a fused
+  eval block with an adversary AND a robust reducer is still ONE
+  compiled dispatch.
+* the DP-SGD opt-in — deterministic under its own seed, accounted by the
+  closed-form RDP ledger, and (dp off) absent bit-for-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from engine_parity import (
+    assert_chunked_parity, assert_engine_parity, max_diff, run_round,
+    run_schedule,
+)
+
+from repro.configs import get_config
+from repro.configs.base import AdversaryConfig, FLConfig, ScenarioConfig
+from repro.core.adversary import AdversaryState
+from repro.core.local import LocalTrainer
+from repro.core.privacy import ORDERS, PrivacyLedger, rdp_per_step
+from repro.core.robust import robust_agg
+from repro.data.pipeline import ClientData, plan_epoch_indices, stack_plans
+from repro.data.synthetic import make_task
+from repro.models.small import init_small_model
+from repro.utils.tree import tree_broadcast
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+CFG = get_config("fedsr-mlp")
+
+SIGNFLIP = AdversaryConfig(frac=0.25, kind="sign_flip")
+REDUCERS = ("median", "trimmed_mean", "krum")
+
+
+# ---------------------------------------------------------------------------
+# core.robust units: the mask audit
+
+
+def _stack(vals):
+    return {"w": jnp.asarray(vals)}
+
+
+def _reduce(vals, w, reducer, trim_frac=0.0, krum_f=0):
+    gw = np.ones(1, np.float32)
+    out = robust_agg(_stack(vals), np.asarray(w, np.float32)[None, :], gw,
+                     reducer, trim_frac, krum_f)
+    return np.asarray(out["w"])
+
+
+@pytest.mark.parametrize("reducer,tf,kf", [("median", 0.0, 0),
+                                           ("trimmed_mean", 0.25, 0),
+                                           ("krum", 0.0, 1)])
+def test_invalid_lanes_never_touch_the_statistic(reducer, tf, kf):
+    """Weight-0 lanes (ghost padding, ring tails, scenario drops) must be
+    excluded from the order statistics — garbage in an invalid lane must
+    not move the result at all (a linear reduce gets this for free; a
+    sort does not, which is the whole point of the masking)."""
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=(5, 7)).astype(np.float32)
+    w = np.array([0.3, 0.0, 0.2, 0.5, 0.0], np.float32)
+    clean = _reduce(vals, w, reducer, tf, kf)
+    poisoned = vals.copy()
+    poisoned[1] = 1e9        # invalid lanes carry garbage
+    poisoned[4] = -1e9
+    np.testing.assert_array_equal(
+        clean, _reduce(poisoned, w, reducer, tf, kf))
+    # and the valid-only computation agrees: reducing the 3 valid lanes
+    # directly gives the same statistic
+    np.testing.assert_allclose(
+        clean, _reduce(vals[[0, 2, 3]], w[[0, 2, 3]], reducer, tf, kf),
+        atol=1e-6, rtol=1e-6)
+
+
+def test_median_is_the_coordinatewise_median():
+    vals = np.array([[1.0, 10.0], [3.0, -2.0], [2.0, 4.0]], np.float32)
+    np.testing.assert_allclose(
+        _reduce(vals, np.ones(3), "median"), np.median(vals, axis=0))
+    # even lane count: mean of the two central order statistics
+    vals4 = np.vstack([vals, [[7.0, 0.0]]])
+    np.testing.assert_allclose(
+        _reduce(vals4, np.ones(4), "median"), np.median(vals4, axis=0))
+
+
+def test_trimmed_mean_drops_the_extremes():
+    vals = np.array([[-100.0], [1.0], [2.0], [3.0], [100.0]], np.float32)
+    np.testing.assert_allclose(
+        _reduce(vals, np.ones(5), "trimmed_mean", trim_frac=0.2), [2.0])
+
+
+def test_krum_selects_an_honest_lane_under_minority_attack():
+    """Krum's guarantee regime: with f attackers and m - f - 2 >= f the
+    selected lane is one of the honest cluster — the attacked lanes'
+    mutual distances to the cluster dominate their scores."""
+    rng = np.random.default_rng(1)
+    C, f = 10, 3
+    honest = rng.normal(0.0, 0.1, size=(C - f, 16)).astype(np.float32)
+    attack = rng.normal(50.0, 0.1, size=(f, 16)).astype(np.float32)
+    vals = np.vstack([attack, honest])      # attackers first, on purpose
+    out = _reduce(vals, np.ones(C), "krum", krum_f=f)
+    # the output IS one lane (one-hot contraction) and it is honest
+    dists = np.linalg.norm(vals - out, axis=1)
+    assert dists.argmin() >= f, "krum picked an attacked lane"
+    assert dists.min() < 1e-5, "krum output is not a single lane"
+
+
+def test_group_collapse_stays_linear_in_group_weights():
+    """Two groups reduce independently; the (G,) group weights collapse
+    the robust per-group rows linearly (eq. 11's outer level)."""
+    rng = np.random.default_rng(2)
+    vals = rng.normal(size=(6, 4)).astype(np.float32)
+    wm = np.zeros((2, 6), np.float32)
+    wm[0, :3] = 1.0
+    wm[1, 3:] = 1.0
+    gw = np.array([0.25, 0.75], np.float32)
+    got = robust_agg(_stack(vals), wm, gw, "median")["w"]
+    want = (0.25 * np.median(vals[:3], axis=0)
+            + 0.75 * np.median(vals[3:], axis=0))
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-6)
+
+
+if HAS_HYPOTHESIS:
+
+    @given(st.integers(0, 2**31 - 1), st.integers(3, 9))
+    @settings(max_examples=25, deadline=None)
+    def test_reducers_are_lane_permutation_invariant(seed, C):
+        rng = np.random.default_rng(seed)
+        vals = rng.normal(size=(C, 6)).astype(np.float32)
+        w = (rng.random(C) > 0.3).astype(np.float32) * 0.7 + 0.0
+        if w.sum() == 0:
+            w[0] = 1.0
+        perm = rng.permutation(C)
+        for reducer, tf, kf in (("median", 0.0, 0),
+                                ("trimmed_mean", 0.25, 0),
+                                ("krum", 0.0, 1)):
+            a = _reduce(vals, w, reducer, tf, kf)
+            b = _reduce(vals[perm], w[perm], reducer, tf, kf)
+            np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 9),
+           st.floats(0.0, 0.45))
+    @settings(max_examples=25, deadline=None)
+    def test_median_trimmed_bounded_by_valid_extremes(seed, C, tf):
+        rng = np.random.default_rng(seed)
+        vals = rng.normal(size=(C, 6)).astype(np.float32)
+        w = (rng.random(C) > 0.3).astype(np.float32)
+        if w.sum() == 0:
+            w[0] = 1.0
+        valid = vals[w > 0]
+        lo, hi = valid.min(axis=0), valid.max(axis=0)
+        for reducer in ("median", "trimmed_mean"):
+            out = _reduce(vals, w, reducer, trim_frac=tf)
+            assert np.all(out >= lo - 1e-5) and np.all(out <= hi + 1e-5)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(6, 12))
+    @settings(max_examples=25, deadline=None)
+    def test_krum_honest_selection_property(seed, C):
+        """attackers < C/2 - 1 with krum_f = their count: the selected
+        lane is always honest, whatever the draw."""
+        rng = np.random.default_rng(seed)
+        f = max(1, C // 2 - 2)
+        honest = rng.normal(0.0, 0.1, size=(C - f, 8)).astype(np.float32)
+        attack = rng.normal(30.0, 0.1, size=(f, 8)).astype(np.float32)
+        vals = np.vstack([attack, honest])
+        out = _reduce(vals, np.ones(C), "krum", krum_f=f)
+        dists = np.linalg.norm(vals - out, axis=1)
+        assert dists.argmin() >= f and dists.min() < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# ghost padding through train_many: the padded reduce is bit-exact
+
+
+def test_ghost_padded_median_matches_unpadded():
+    """The sharded engine's ghost lanes (all-invalid, weight-0 columns of
+    the uncollapsed matrix) must fall out of the robust reduce exactly:
+    ``train_many`` with ``pad_to=C+2`` reproduces the unpadded call
+    bit-for-bit under ``reducer="median"``."""
+    fl = FLConfig(batch_size=8, momentum=0.5)
+    train, _ = make_task("mnist_like", train_per_class=12, test_per_class=2,
+                         seed=0)
+    sizes = (5, 17, 10)
+    idx, off, clients = np.random.default_rng(0).permutation(
+        len(train.labels)), 0, []
+    for cid, s in enumerate(sizes):
+        clients.append(ClientData(cid, train.images[idx[off:off + s]],
+                                  train.labels[idx[off:off + s]]))
+        off += s
+    trainer = LocalTrainer(CFG, fl)
+    w0 = init_small_model(jax.random.PRNGKey(0), CFG)
+    rng = np.random.default_rng(3)
+    plans = [plan_epoch_indices(c, fl.batch_size, 1, rng) for c in clients]
+    C = len(clients)
+    lane_w = np.array([0.2, 0.5, 0.3], np.float32)
+
+    outs = {}
+    for pad in (C, C + 2):
+        batches, valid = stack_plans(clients, plans, pad_to=pad)
+        agg = np.zeros((1, pad), np.float32)
+        agg[0, :C] = lane_w
+        outs[pad] = trainer.train_many(
+            tree_broadcast(w0, pad), batches, valid, lr=0.05,
+            agg=agg, agg_gw=np.ones(1, np.float32), reducer="median")
+    assert max_diff(outs[C], outs[C + 2]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# attacked-round engine parity (the IR seam holds under attack)
+
+ATTACK = (("adversary", SIGNFLIP),)
+
+
+@pytest.mark.parametrize("engine", ("batched", "fused"))
+@pytest.mark.parametrize("reducer", REDUCERS)
+@pytest.mark.parametrize("algo", ["fedavg", "fedsr", "hieravg"])
+def test_attacked_round_parity(algo, reducer, engine):
+    """Sign-flip lanes + each robust reducer: every engine must reproduce
+    the sequential reference — star (fedavg), ring two-level (fedsr) and
+    hierarchical two-level (hieravg) reduce paths."""
+    assert_engine_parity(algo, engine, ATTACK + (("reducer", reducer),))
+
+
+@pytest.mark.parametrize("engine", ("batched", "sharded"))
+def test_attacked_drop_round_parity(engine):
+    """Adversary composed with scenario drops: a dropped attacker lane is
+    weight-0 and must vanish from the order statistics (the validity mask
+    comes from the rescaled weight matrix, not the original cohort)."""
+    ov = ATTACK + (("reducer", "median"),
+                   ("scenario", ScenarioConfig(drop_rate=0.3)))
+    assert_engine_parity("fedavg", engine, ov)
+    assert_engine_parity("fedsr", engine, ov)
+
+
+def test_attacked_robust_block_is_one_dispatch():
+    """The fused acceptance: a chunked eval block under an adversary AND
+    a robust reducer is bit-exact vs the per-round driver and still ONE
+    compiled dispatch."""
+    ov = ATTACK + (("reducer", "median"),)
+    assert_chunked_parity("fedsr", "fused", ov)
+    _, _, _, _, dispatches = run_schedule("fedsr", "fused", ov)
+    assert dispatches == 1
+    ov_h = ATTACK + (("reducer", "trimmed_mean"),)
+    assert_chunked_parity("hieravg", "fused", ov_h)
+    _, _, _, _, dispatches = run_schedule("hieravg", "fused", ov_h)
+    assert dispatches == 1
+
+
+def test_scale_attack_round_parity():
+    assert_engine_parity(
+        "fedsr", "fused",
+        (("adversary", AdversaryConfig(frac=0.25, kind="scale", scale=5.0)),
+         ("reducer", "median")))
+
+
+def test_label_flip_changes_training_not_plans():
+    """label_flip is a data poison applied by the executor before any
+    training: the RoundPlan stream (and hence the comm meters) is
+    identical to the honest run; only the trained weights move."""
+    from repro.core.executor import run_experiment
+    train, test = make_task("mnist_like", train_per_class=8,
+                            test_per_class=4, seed=0)
+    out = {}
+    for name, adv in (("honest", AdversaryConfig()),
+                      ("flip", AdversaryConfig(frac=0.5, kind="label_flip"))):
+        fl = FLConfig(algorithm="fedavg", num_devices=4, num_edges=2,
+                      rounds=1, local_epochs=1, batch_size=8,
+                      engine="batched", adversary=adv)
+        out[name] = run_experiment(task="mnist_like", model_cfg=CFG, fl=fl,
+                                   train=train, test=test)
+    assert (out["honest"].history[-1].comm == out["flip"].history[-1].comm)
+    assert max_diff(out["honest"].final_model, out["flip"].final_model) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# AdversaryState units
+
+
+def test_attacker_draw_is_deterministic_and_sized():
+    cfg = AdversaryConfig(frac=0.25, kind="sign_flip", seed=5)
+    a = AdversaryState(cfg, 20)
+    b = AdversaryState(cfg, 20)
+    assert a.attackers.sum() == round(20 * 0.25)
+    np.testing.assert_array_equal(a.attackers, b.attackers)
+    assert not AdversaryState(AdversaryConfig(), 20).active
+
+
+def test_poison_clients_flips_only_attacker_shards():
+    train, _ = make_task("mnist_like", train_per_class=8, test_per_class=2,
+                         seed=0)
+    clients = [ClientData(i, train.images[i * 8:(i + 1) * 8],
+                          train.labels[i * 8:(i + 1) * 8]) for i in range(4)]
+    adv = AdversaryState(
+        AdversaryConfig(frac=0.5, kind="label_flip", seed=3), 4)
+    poisoned = adv.poison_clients(clients, num_classes=10)
+    for i, (a, b) in enumerate(zip(clients, poisoned)):
+        if adv.attackers[i]:
+            np.testing.assert_array_equal(b.labels, 9 - a.labels)
+        else:
+            assert b is a
+
+
+def test_transform_is_identity_when_inactive():
+    import repro.core.algorithms as algorithms
+    fl = FLConfig(algorithm="fedavg", num_devices=4, num_edges=2)
+    train, _ = make_task("mnist_like", train_per_class=4, test_per_class=2,
+                         seed=0)
+    from repro.data.pipeline import make_clients
+    clients = make_clients(train, scheme="iid", num_devices=4,
+                           rng=np.random.default_rng(0))
+    trainer = LocalTrainer(CFG, fl)
+    algo = algorithms.make_algorithm("fedavg", trainer, clients, fl)
+    plan = algo.plan_round(0, np.random.default_rng(1), {})
+    assert all(g.lane_scale is None for g in plan.groups)
+
+
+def test_centralized_rejects_adversary_and_scenario():
+    from repro.core.algorithms import make_algorithm
+    from repro.data.pipeline import make_clients
+    train, _ = make_task("mnist_like", train_per_class=4, test_per_class=2,
+                         seed=0)
+    clients = make_clients(train, scheme="iid", num_devices=8,
+                           rng=np.random.default_rng(0))
+    for bad in ({"adversary": SIGNFLIP},
+                {"scenario": ScenarioConfig(drop_rate=0.3)}):
+        fl = FLConfig(algorithm="centralized", num_devices=8, num_edges=2,
+                      **bad)
+        trainer = LocalTrainer(CFG, fl)
+        with pytest.raises(ValueError, match="centralized"):
+            make_algorithm("centralized", trainer, clients, fl)
+
+
+# ---------------------------------------------------------------------------
+# DP-SGD + the accountant
+
+
+def test_rdp_accountant_matches_closed_form():
+    sigma, delta, T = 1.3, 1e-5, 40
+    ledger = PrivacyLedger(sigma, delta)
+    ledger.record(T)
+    want = min(T * a / (2 * sigma * sigma) + np.log(1 / delta) / (a - 1)
+               for a in ORDERS)
+    assert ledger.epsilon() == pytest.approx(want, rel=1e-12)
+    # subsampled bound: q^2 a / s^2 clamped by the full-batch mechanism
+    q = 0.1
+    for a, r in zip(ORDERS, rdp_per_step(sigma, sample_rate=q)):
+        assert r == pytest.approx(
+            min(q * q * a / (sigma * sigma), a / (2 * sigma * sigma)))
+    # clip-only (sigma = 0) is infinitely leaky
+    clip_only = PrivacyLedger(0.0, delta)
+    clip_only.record(1)
+    assert clip_only.epsilon() == np.inf
+
+
+def _dp_experiment(noise, seed=0, algorithm="fedavg", engine="fused"):
+    from repro.core.executor import run_experiment
+    fl = FLConfig(algorithm=algorithm, num_devices=4, num_edges=2,
+                  rounds=2, ring_rounds=2, local_epochs=1, batch_size=8,
+                  engine=engine, dp_clip=1.0, dp_noise_mult=noise,
+                  seed=seed)
+    train, test = make_task("mnist_like", train_per_class=8,
+                            test_per_class=4, seed=0)
+    return run_experiment(task="mnist_like", model_cfg=CFG, fl=fl,
+                          train=train, test=test, eval_every=2)
+
+
+def test_dp_run_reports_finite_epsilon_and_is_deterministic():
+    a = _dp_experiment(1.1)
+    b = _dp_experiment(1.1)
+    assert a.dp_epsilon is not None and np.isfinite(a.dp_epsilon)
+    assert a.dp_epsilon > 0 and a.dp_delta == 1e-5
+    assert a.dp_epsilon == b.dp_epsilon
+    # the noise stream is the trainer's own (dp_seed), so reruns are exact
+    assert max_diff(a.final_model, b.final_model) == 0.0
+    # all leaves stay finite under clip + noise
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree.leaves(a.final_model))
+
+
+def test_dp_off_reports_no_ledger():
+    from repro.core.executor import run_experiment
+    fl = FLConfig(algorithm="fedavg", num_devices=4, num_edges=2, rounds=1,
+                  local_epochs=1, batch_size=8)
+    train, test = make_task("mnist_like", train_per_class=4,
+                            test_per_class=2, seed=0)
+    res = run_experiment(task="mnist_like", model_cfg=CFG, fl=fl,
+                         train=train, test=test)
+    assert res.dp_epsilon is None and res.dp_delta is None
+
+
+def test_dp_ledger_charges_max_client_steps():
+    """The accountant advances by the worst-case per-client step count of
+    each plan — closed-form on the IR, pinned against the trainer's own
+    executed-step readout."""
+    from repro.core.algorithms import make_algorithm
+    from repro.core.comm import CommMeter
+    from repro.data.pipeline import make_clients
+    train, _ = make_task("mnist_like", train_per_class=8, test_per_class=2,
+                         seed=0)
+    fl = FLConfig(algorithm="fedsr", num_devices=8, num_edges=2, rounds=2,
+                  ring_rounds=2, local_epochs=1, batch_size=8,
+                  engine="fused", dp_clip=1.0, dp_noise_mult=1.1)
+    clients = make_clients(train, scheme="iid", num_devices=8,
+                           rng=np.random.default_rng(0))
+    trainer = LocalTrainer(CFG, fl)
+    algo = make_algorithm("fedsr", trainer, clients, fl)
+    assert algo.privacy is not None and algo.privacy.steps == 0
+    w0 = init_small_model(jax.random.PRNGKey(0), CFG)
+    algo.run_schedule(w0, 0, np.full(2, 0.05), np.random.default_rng(7),
+                      CommMeter(), {})
+    # iid 10-sample shards, batch 8 -> 2 steps/visit; R=2 laps visit each
+    # client twice per round; 2 rounds -> 2 * 2 * 2
+    assert algo.privacy.steps == 8
+    assert np.isfinite(algo.privacy.epsilon())

@@ -18,7 +18,7 @@ from engine_parity import (
     max_diff, run_round, run_schedule, run_subprocess_matrix,
 )
 
-from repro.configs.base import ScenarioConfig
+from repro.configs.base import AdversaryConfig, ScenarioConfig
 
 ENGINES = ("batched", "sharded", "fused")
 
@@ -57,6 +57,27 @@ def test_scenario_off_row_is_bitexact(algo, overrides, engine):
     for ch in COMM_CHANNELS:
         assert getattr(m_b, ch) == getattr(m_o, ch), (algo, engine, ch)
     assert m_b.sim_seconds == m_o.sim_seconds, (algo, engine)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("algo,overrides", CASES)
+def test_adversary_and_dp_off_row_is_bitexact(algo, overrides, engine):
+    """The adversary/DP-off pin (PR 8's bit-exactness acceptance): an
+    EXPLICIT inactive ``AdversaryConfig()`` + ``reducer="weighted_mean"``
+    + ``dp_clip=0`` must be bit-identical to the plain rows — the
+    transform returns the plan object untouched, the reducer stamp is a
+    no-op for weighted_mean, and dp-off builds literally the same jitted
+    functions (no traced-out noise branch left behind)."""
+    base = tuple(overrides.items())
+    off = base + (("adversary", AdversaryConfig()),
+                  ("reducer", "weighted_mean"), ("dp_clip", 0.0),
+                  ("dp_noise_mult", 0.0))
+    w_b, m_b, s_b, _, _ = run_round(algo, engine, base)
+    w_o, m_o, s_o, _, _ = run_round(algo, engine, off)
+    assert s_b == s_o, (algo, engine)
+    assert max_diff(w_b, w_o) == 0.0, (algo, engine)
+    for ch in COMM_CHANNELS:
+        assert getattr(m_b, ch) == getattr(m_o, ch), (algo, engine, ch)
 
 
 @pytest.mark.parametrize("engine,algo", [("batched", "fedavg"),

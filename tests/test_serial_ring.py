@@ -80,7 +80,7 @@ def test_serial_ring_equals_manual_chain():
     flat_lb = batch["labels"].reshape((n_clients, 4, 32))
     for q in range(n_clients):
         b = {"inputs": flat_in[q], "labels": flat_lb[q]}
-        g = jax.grad(lambda pp: lm_loss(pp, b, cfg))(p)
+        g = jax.grad(lambda pp, b=b: lm_loss(pp, b, cfg))(p)
         m = jax.tree.map(lambda mm, gg: 0.5 * mm + gg, m, g)
         p = jax.tree.map(lambda pp, mm: pp - 0.1 * mm, p, m)
 
