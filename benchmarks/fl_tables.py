@@ -11,12 +11,23 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
+import jax
+
 from repro.configs.base import AdversaryConfig, FLConfig, ScenarioConfig
 from repro.configs.registry import get_config
 from repro.core.executor import run_experiment
 
 MLP = get_config("fedsr-mlp")
 CNN = get_config("fedsr-cnn")
+
+
+def _run(**kw):
+    """``run_experiment`` + device fence: JAX dispatch is async, so the
+    table timers must not stop the clock until the run's last block has
+    actually landed on device."""
+    res = run_experiment(**kw)
+    jax.block_until_ready(res.final_model)
+    return res
 
 
 def _fl(algorithm: str, *, partition: str, rounds: int, seed: int = 0,
@@ -48,8 +59,8 @@ def table1_ring_vs_fedavg(rounds: int = 12) -> List[dict]:
                           local_epochs=1, ring_rounds=1, rounds=rounds,
                           partition=partition, xi=2)
             t0 = time.perf_counter()
-            res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
-                                 eval_every=rounds)
+            res = _run(task="mnist_like", model_cfg=MLP, fl=fl,
+                       eval_every=rounds)
             rows.append({
                 "table": "I", "task": "mnist_like", "partition": partition,
                 "algorithm": algo, "accuracy": res.final_accuracy,
@@ -80,8 +91,8 @@ def table2_accuracy(rounds: int = 12, task: str = "fashionmnist_like",
         for algo in algorithms:
             fl = _fl(algo, partition=partition, rounds=rounds, **dict(kw))
             t0 = time.perf_counter()
-            res = run_experiment(task=task, model_cfg=model, fl=fl,
-                                 eval_every=rounds)
+            res = _run(task=task, model_cfg=model, fl=fl,
+                       eval_every=rounds)
             rows.append({
                 "table": "II", "task": task, "partition": partition, **kw,
                 "algorithm": algo, "accuracy": res.final_accuracy,
@@ -97,8 +108,8 @@ def table3_comm_cost(rounds: int = 15, target: float = 0.8) -> List[dict]:
     for algo in ("fedavg", "fedprox", "hieravg", "ring", "fedsr"):
         fl = _fl(algo, partition="pathological", rounds=rounds, xi=2)
         t0 = time.perf_counter()
-        res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
-                             eval_every=1)
+        res = _run(task="mnist_like", model_cfg=MLP, fl=fl,
+                   eval_every=1)
         rows.append({
             "table": "III", "algorithm": algo, "target": target,
             "transfers_to_target": res.comm_to_accuracy(target),
@@ -144,8 +155,8 @@ def scenario_curves(rounds: int = 12, eval_every: int = 3,
             fl = _fl(algo, partition="pathological", rounds=rounds, xi=2,
                      scenario=scen)
             t0 = time.perf_counter()
-            res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
-                                 eval_every=eval_every)
+            res = _run(task="mnist_like", model_cfg=MLP, fl=fl,
+                       eval_every=eval_every)
             wall = time.perf_counter() - t0
             for rec in res.history:
                 rows.append({
@@ -213,8 +224,8 @@ def attack_defense_grid(rounds: int = 20,
                          xi=2, num_edges=10, adversary=adv, reducer=reducer,
                          krum_f=4, engine="fused")
                 t0 = time.perf_counter()
-                res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
-                                     eval_every=rounds)
+                res = _run(task="mnist_like", model_cfg=MLP, fl=fl,
+                           eval_every=rounds)
                 rows.append({
                     "table": "attack", "attack": attack_name,
                     "defense": reducer, "algorithm": algo,
@@ -226,8 +237,8 @@ def attack_defense_grid(rounds: int = 20,
                  num_edges=10, dp_clip=1.0, dp_noise_mult=1.1,
                  engine="fused")
         t0 = time.perf_counter()
-        res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
-                             eval_every=rounds)
+        res = _run(task="mnist_like", model_cfg=MLP, fl=fl,
+                   eval_every=rounds)
         rows.append({
             "table": "attack", "attack": "none", "defense": "dp_sgd",
             "algorithm": algo, "accuracy": res.final_accuracy,
@@ -251,8 +262,8 @@ def table4_scalability(rounds: int = 8) -> List[dict]:
                 participation=frac,
             )
             t0 = time.perf_counter()
-            res = run_experiment(task="mnist_like", model_cfg=MLP, fl=fl,
-                                 eval_every=rounds)
+            res = _run(task="mnist_like", model_cfg=MLP, fl=fl,
+                       eval_every=rounds)
             rows.append({
                 "table": "IV", "participation": frac, "algorithm": algo,
                 "accuracy": res.final_accuracy, "seconds": time.perf_counter() - t0,

@@ -355,12 +355,60 @@ def bench_fleet_scale_hoststore(fleet_sizes=(2048, 50_000), cohort: int = 8,
             t0 = time.perf_counter()
             res = run_experiment(task="mnist_like", model_cfg=cfg, fl=fl,
                                  eval_every=rounds, train=train, test=test)
+            jax.block_until_ready(res.final_model)
             if store == "host":
                 us = (time.perf_counter() - t0) / rounds * 1e6
             peaks[store] = res.peak_device_bytes
         parts.append(f"K{K}:host={peaks['host']};device={peaks['device']}"
                      f";ratio={peaks['host'] / peaks['device']:.4f}")
     return ("fleet_scale_fedsr_hoststore", us, "|".join(parts))
+
+
+def bench_pipeline_fedsr_hoststore(num_devices: int = 2048, cohort: int = 8,
+                                   rounds: int = 4) -> Tuple[str, float, str]:
+    """The block-pipeline A/B (PR 9): fused FedSR on the HOST store at
+    K=2048 with a fixed cohort of 8 (two rings of 4), ``prefetch=0``
+    (serial driver: plan, stage, dispatch, sync, repeat) vs ``prefetch=1``
+    (one-block lookahead: block t+1's cohort is gathered and uploaded on
+    a staging thread while block t's fused dispatch is in flight).
+    ``eval_every=1`` makes every round its own schedule block, so the
+    host store re-stages per round — the regime where staging wall is a
+    real fraction of the round and the pipeline has something to hide.
+    us_per_call is the prefetch=1 wall per round; ``derived`` reports the
+    serial wall, the pipelined run's total staging wall and its overlap
+    fraction (acceptance: >= 0.5 — at 4 blocks, 3 of 4 stages can
+    overlap), plus both runs' peak device bytes: the double-buffered
+    handover holds at most 2 cohort arenas, so peak_p1 stays <= 2x
+    peak_p0 while wall drops by ~the hidden staging time."""
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.executor import run_experiment
+    from repro.data.synthetic import make_task
+
+    cfg = get_config("fedsr-mlp")
+    train, test = make_task("mnist_like",
+                            train_per_class=num_devices // 10 + 1,
+                            test_per_class=2, seed=0)
+    walls, results = {}, {}
+    for prefetch in (0, 1):
+        fl = FLConfig(algorithm="fedsr", num_devices=num_devices,
+                      num_edges=num_devices // 4,
+                      participation=cohort / num_devices,
+                      rounds=rounds, ring_rounds=2, local_epochs=1,
+                      batch_size=8, engine="fused", store="host",
+                      prefetch=prefetch)
+        t0 = time.perf_counter()
+        res = run_experiment(task="mnist_like", model_cfg=cfg, fl=fl,
+                             eval_every=1, train=train, test=test)
+        jax.block_until_ready(res.final_model)
+        walls[prefetch] = (time.perf_counter() - t0) / rounds * 1e6
+        results[prefetch] = res
+    p1 = results[1]
+    return ("pipeline_fedsr_hoststore", walls[1],
+            f"serial_us={walls[0]:.0f};stage_s={p1.stage_seconds:.4f}"
+            f";overlap={p1.overlap_fraction:.2f}"
+            f";peak_p1={p1.peak_device_bytes}"
+            f";peak_p0={results[0].peak_device_bytes}")
 
 
 def bench_attack_fedsr_median(num_devices: int = 64, rounds: int = 10,
@@ -401,6 +449,7 @@ def bench_attack_fedsr_median(num_devices: int = 64, rounds: int = 10,
         t0 = time.perf_counter()
         res = run_experiment(task="mnist_like", model_cfg=cfg, fl=fl,
                              train=train, test=test, eval_every=rounds)
+        jax.block_until_ready(res.final_model)
         walls[reducer] = (time.perf_counter() - t0) / rounds * 1e6
         accs[reducer] = res.final_accuracy
     return (f"attack_fedsr{num_devices}_median", walls["median"],
@@ -413,4 +462,4 @@ ALL = [bench_attention, bench_ssd, bench_fused_sgd, bench_decode_attention,
        bench_fl_engines, bench_fl_engines_sharded, bench_fl_engines_fused,
        bench_ring_round_fedsr, bench_fedsr_onedispatch,
        bench_fl_schedule_chunked, bench_fleet_scale_hoststore,
-       bench_attack_fedsr_median]
+       bench_pipeline_fedsr_hoststore, bench_attack_fedsr_median]

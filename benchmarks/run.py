@@ -118,7 +118,8 @@ def run_smoke() -> None:
         bench_attack_fedsr_median, bench_fedsr_onedispatch, bench_fl_engines,
         bench_fl_engines_fused, bench_fl_engines_sharded,
         bench_fl_schedule_chunked, bench_fleet_scale_hoststore,
-        bench_fused_sgd, bench_ring_round_fedsr,
+        bench_fused_sgd, bench_pipeline_fedsr_hoststore,
+        bench_ring_round_fedsr,
     )
 
     name, us, derived = bench_fused_sgd()
@@ -143,6 +144,13 @@ def run_smoke() -> None:
     # must stay O(cohort) while the device store's grow with the fleet
     name, us, derived = bench_fleet_scale_hoststore(fleet_sizes=(256, 2048),
                                                     cohort=8, rounds=2)
+    _emit(f"kernel/{name}", us, derived)
+    # the PR-9 acceptance row at reduced K: prefetch=0 vs 1 on the host
+    # store — the pipeline wiring check (overlap fraction and the 2x
+    # residency bound already show at this size; headline numbers are the
+    # full K=2048 row's)
+    name, us, derived = bench_pipeline_fedsr_hoststore(num_devices=256,
+                                                       cohort=8, rounds=4)
     _emit(f"kernel/{name}", us, derived)
     # the PR-8 acceptance row at reduced K: weighted_mean vs median under
     # a 20% delta-amplifying fleet — the adversary + robust-reduce wiring

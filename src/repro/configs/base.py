@@ -294,7 +294,24 @@ class FLConfig:
                                      #   onto device (a CohortArena), so peak
                                      #   device memory scales with the cohort
                                      #   instead of K — massive-IoT fleets
-                                     #   (K ~ 10^5) run on one host.
+                                     #   (K ~ 10^5) run on one host;
+                                     # stream: the fleet's pixels live in
+                                     #   disk-backed np.memmap shards and only
+                                     #   the block's cohort is gathered into
+                                     #   RAM/device — same staging protocol
+                                     #   (and bit-exact math) as "host" with
+                                     #   host memory also O(cohort).
+    prefetch: int = 0                # block lookahead of the executor's
+                                     # pipeline: 0 = the serial driver
+                                     # (plan -> stage -> dispatch -> eval,
+                                     # bit-for-bit pre-pipeline behaviour);
+                                     # 1 = double-buffered one-block lookahead
+                                     # — while block t's dispatch runs, block
+                                     # t+1 is planned and its cohort arena
+                                     # staged on a background thread, with
+                                     # eval readback deferred to consumption
+                                     # (same math, same RNG stream: results
+                                     # are bit-exact to prefetch=0).
     use_fused_sgd: bool = False      # opt-in: apply the momentum update as one
                                      # fused Pallas pass over the raveled
                                      # parameter vector instead of per-leaf
@@ -334,9 +351,13 @@ class FLConfig:
             raise ValueError(
                 f"participation={self.participation} must be in (0, 1] "
                 "(a fraction of devices sampled per round)")
-        if self.store not in ("device", "host"):
+        if self.store not in ("device", "host", "stream"):
             raise ValueError(
-                f"store={self.store!r} must be 'device' or 'host'")
+                f"store={self.store!r} must be 'device', 'host' or 'stream'")
+        if self.prefetch not in (0, 1):
+            raise ValueError(
+                f"prefetch={self.prefetch} must be 0 (serial driver) or 1 "
+                "(one-block lookahead)")
         if self.reducer not in ("weighted_mean", "median", "trimmed_mean",
                                 "krum"):
             raise ValueError(

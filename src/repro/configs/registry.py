@@ -56,20 +56,22 @@ def all_configs() -> Dict[str, ModelConfig]:
 def reduce_for_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
     """Reduced same-family variant: <=2 pattern periods, d_model<=512,
     <=4 experts — runs one forward/train step on CPU."""
-    changes = dict(
-        d_model=256,
-        d_ff=512 if cfg.d_ff > 0 else 0,
-        vocab_size=min(cfg.vocab_size, 512),
-        num_heads=4 if cfg.num_heads else 0,
-        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0,
-        head_dim=64 if cfg.num_heads else 0,
-        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
-        ssm_headdim=64 if cfg.ssm_state else 64,
-        ssm_chunk=32,
-        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
-        experts_per_token=min(cfg.experts_per_token, 2) if cfg.experts_per_token else 0,
-        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
-    )
+    changes = {
+        "d_model": 256,
+        "d_ff": 512 if cfg.d_ff > 0 else 0,
+        "vocab_size": min(cfg.vocab_size, 512),
+        "num_heads": 4 if cfg.num_heads else 0,
+        "num_kv_heads": min(cfg.num_kv_heads, 2) if cfg.num_kv_heads else 0,
+        "head_dim": 64 if cfg.num_heads else 0,
+        "ssm_state": min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        "ssm_headdim": 64 if cfg.ssm_state else 64,
+        "ssm_chunk": 32,
+        "num_experts": min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        "experts_per_token": (min(cfg.experts_per_token, 2)
+                              if cfg.experts_per_token else 0),
+        "sliding_window": (min(cfg.sliding_window, 16)
+                           if cfg.sliding_window else 0),
+    }
     if cfg.family == "hybrid":
         # shrink the jamba pattern period from 8 to 2: [ssm+dense, attn+moe]
         changes.update(num_layers=2, attn_every=2, attn_offset=1,

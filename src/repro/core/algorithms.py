@@ -84,6 +84,10 @@ class _Planner:
 
     variant = "plain"
     keep_locals = False
+    pipelinable = True              # False: the algorithm bypasses the
+                                    # Schedule IR (Centralized) — the
+                                    # executor falls back to the serial
+                                    # driver under FLConfig.prefetch=1
     _transfers_per_client = 1       # model each way (SCAFFOLD ships 2)
     _client_fields: Tuple[str, ...] = ()    # per-client state arenas (staged
                                             # per block under store="host")
@@ -102,6 +106,9 @@ class _Planner:
         self.privacy = (PrivacyLedger(fl.dp_noise_mult, fl.dp_delta)
                         if fl.dp_clip > 0 else None)
         self.residency = ResidencyMeter()
+        self._transient_state_bytes = 0     # the in-flight block's staged
+                                            # carries while the next block's
+                                            # are eagerly staged (pipeline)
 
     # -- THE execution driver (identical for every algorithm) ------------
     def run_round(self, w_glob, t, lr, rng: np.random.Generator,
@@ -126,15 +133,49 @@ class _Planner:
         The block boundary doubles as the residency protocol's boundary
         (``FLConfig.store="host"``): stage the visited clients' state
         rows + cohort data, run, write the trained rows back — peak
-        device bytes recorded on ``self.residency``."""
+        device bytes recorded on ``self.residency``.
+
+        The body is phase-split so the pipelined executor
+        (``FLConfig.prefetch=1``) can interleave blocks:
+        ``dispatch_block`` (stage + launch — returns under JAX async
+        dispatch before the device finishes) and ``finish_block``
+        (state write-back + privacy/comm retirement — the block's host
+        sync point). This serial composition IS the pre-pipeline driver,
+        statement for statement, so ``prefetch=0`` is bit-exact by
+        construction."""
         sched = self.plan_schedule(t0, len(lrs), rng, state)
+        w_glob = self.dispatch_block(sched, w_glob, lrs, state)
+        self.finish_block(sched, state, meter)
+        return w_glob, state
+
+    def dispatch_block(self, sched: Schedule, w_glob, lrs,
+                       state: Dict) -> Pytree:
+        """Stage the block's residency (state rows + cohort data — a
+        matching ``prefetch_block`` makes both hand-offs) and launch the
+        dispatch. Returns as soon as the work is enqueued; the returned
+        ``w_glob`` is a device future under the fused engine."""
         self.ensure_state(state, w_glob)
         visited = sched.visited()
         self._stage_state(state, visited)
         data_bytes = self.engine.stage_data(visited)
         self.residency.record(data_bytes, self._staged_state_bytes(state))
-        w_glob = self.engine.run_schedule(sched, w_glob, lrs, state,
-                                          self.update_state)
+        # double-buffered high-water mark: both pipeline arenas at the
+        # hand-off (``stage_pair_nbytes``) plus the previous block's
+        # staged carries if the next block's were eagerly staged while
+        # they were still live
+        self.residency.record_transient(
+            self.engine.stage_pair_nbytes()
+            + self._staged_state_bytes(state) + self._transient_state_bytes)
+        self._transient_state_bytes = 0
+        return self.engine.run_schedule(sched, w_glob, lrs, state,
+                                        self.update_state)
+
+    def finish_block(self, sched: Schedule, state: Dict,
+                     meter: CommMeter) -> None:
+        """Retire a dispatched block: write the trained state rows back
+        into the host arena (the ONE device readback of the residency
+        protocol — the pipeline's sync point) and apply the block's
+        closed-form privacy/comm records."""
         self._unstage_state(state)
         if self.privacy is not None:
             # worst-case client: the ledger advances by each round's max
@@ -148,20 +189,60 @@ class _Planner:
             # the float stream is block-size invariant bit-exactly
             for plan in sched.plans:
                 meter.record_time(plan.sim_seconds)
-        return w_glob, state
+
+    def prefetch_block(self, sched: Schedule,
+                       inflight_visited: np.ndarray, state: Dict) -> None:
+        """Overlap the NEXT block's staging with the in-flight block's
+        dispatch: the cohort data gather/upload goes to the store's
+        background thread unconditionally (arenas are immutable — no
+        dependency on the running block), while the algorithm-state rows
+        carry a true data dependency (the in-flight block's write-back
+        may touch them) and are staged eagerly ONLY when the two blocks'
+        planner-drawn visited sets are disjoint — detected host-side from
+        ``Schedule.visited()``, no device readback. Overlapping sets fall
+        back to the post-``finish_block`` sync path in ``_stage_state``.
+        """
+        visited = sched.visited()
+        self.engine.prefetch_data(visited)
+        if (not self._staged_store or "_host" not in state
+                or not self._client_fields or inflight_visited is None):
+            return
+        if np.intersect1d(inflight_visited, visited).size:
+            return      # rows the running block will write: wait for it
+        stash = {f: stage_rows(state["_host"][f], visited)
+                 for f in self._client_fields}
+        # while the stash and the in-flight block's carries are both live,
+        # residency momentarily holds two state buffers — remember the
+        # in-flight one for dispatch_block's transient record
+        self._transient_state_bytes = self._staged_state_bytes(state)
+        state["_stash"] = {"visited": visited, "rows": stash}
+
+    @property
+    def _staged_store(self) -> bool:
+        """True for the stores that stage per block (host RAM or disk) —
+        the residency protocol treats them identically."""
+        return self.fl.store in ("host", "stream")
 
     # -- the residency protocol (client virtualization, core.state) ------
     def _stage_state(self, state: Dict, visited: np.ndarray) -> None:
-        """Host store: upload the block's visited state rows as
+        """Host/stream store: upload the block's visited state rows as
         ``(V + 1, ...)`` cohort carries and publish the fleet→cohort
         rowmap that engines consume (``_resolve``, the fused engine's
-        in-scan scatter ids)."""
-        if self.fl.store != "host" or "_host" not in state:
+        in-scan scatter ids). A matching ``prefetch_block`` stash (rows
+        staged eagerly while the previous block ran — only possible when
+        the visited sets were disjoint, so the values are identical to a
+        fresh stage) is consumed instead of re-uploading."""
+        if not self._staged_store or "_host" not in state:
             return
+        stash = state.pop("_stash", None)
         state["_visited"] = visited
         state["_rowmap"] = rowmap_for(visited, self.fl.num_devices)
-        for f in self._client_fields:
-            state[f] = stage_rows(state["_host"][f], visited)
+        if stash is not None and np.array_equal(stash["visited"], visited):
+            for f in self._client_fields:
+                state[f] = stash["rows"][f]
+        else:
+            for f in self._client_fields:
+                state[f] = stage_rows(state["_host"][f], visited)
 
     def _unstage_state(self, state: Dict) -> None:
         """Scatter the block's trained cohort rows back into the host
@@ -364,7 +445,7 @@ class Moon(FedAvg):
     def ensure_state(self, state, w_glob):
         if "seen" in state:
             return
-        if self.fl.store == "host":
+        if self._staged_store:
             state["_host"] = {"prev": host_stack(w_glob,
                                                  self.fl.num_devices)}
         else:
@@ -393,7 +474,7 @@ class Moon(FedAvg):
     def state_from_ckpt(self, ck, w_glob):
         state: Dict = {}
         if ck.get("prev"):
-            if self.fl.store == "host":
+            if self._staged_store:
                 arena, state["seen"] = unpack_client_rows(
                     ck["prev"], w_glob, self.fl.num_devices, device=False)
                 state["_host"] = {"prev": arena}
@@ -436,7 +517,7 @@ class Scaffold(_Planner):
         if "c" in state:
             return
         state["c"] = tree_zeros_like(w_glob)
-        if self.fl.store == "host":
+        if self._staged_store:
             state["_host"] = {"ci": host_stack(w_glob, self.fl.num_devices)}
         else:
             state["ci"] = client_stack(w_glob, self.fl.num_devices)
@@ -474,7 +555,7 @@ class Scaffold(_Planner):
         state: Dict = {}
         if "c" in ck:
             state["c"] = jax.tree.map(jnp.asarray, ck["c"])
-            if self.fl.store == "host":
+            if self._staged_store:
                 arena, state["seen"] = unpack_client_rows(
                     ck.get("ci") or {}, w_glob, self.fl.num_devices,
                     device=False)
@@ -625,7 +706,12 @@ class FedSR(_Planner):
 class Centralized(_Planner):
     """Upper-bound reference: pooled-data SGD (paper's 'Centralized' rows).
     No schedule to plan — one visit of the pooled shard, no communication —
-    so it bypasses the IR and trains directly."""
+    so it bypasses the IR and trains directly. With no Schedule there is
+    nothing to pre-plan or prefetch: ``pipelinable = False`` makes the
+    executor fall back to the serial driver under ``prefetch=1`` (the two
+    drivers are bit-identical for pooled SGD anyway)."""
+
+    pipelinable = False
 
     def __init__(self, trainer, clients, fl):
         super().__init__(trainer, clients, fl)

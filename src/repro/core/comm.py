@@ -62,11 +62,32 @@ class ResidencyMeter:
     (``FLConfig.store``): the block's cohort data arena plus its staged
     algorithm-state rows, recorded once per schedule block by the driver.
     The fleet-scale guarantee is read off ``peak_bytes``: under
-    ``store="host"`` it must scale with the cohort, never with K."""
+    ``store="host"`` it must scale with the cohort, never with K.
+
+    Under the prefetch pipeline (``FLConfig.prefetch=1``) the steady-state
+    record is not the whole story: during the overlap window block ``t``'s
+    arena + staged state AND block ``t+1``'s double-buffered arena (+
+    eagerly staged state, when the visited sets are disjoint) are live at
+    once. ``record_transient`` folds that double-buffered high-water mark
+    into ``peak_bytes`` without disturbing the steady-state fields — the
+    pipeline's residency guarantee is ``peak_bytes <= 2x`` a single
+    cohort's arena + state.
+
+    The meter also carries the pipeline's timing instrumentation:
+    ``stage_seconds`` (total host->device staging wall),
+    ``overlapped_stage_seconds`` (the part served from a prefetch, i.e.
+    hidden behind an in-flight dispatch) and ``dispatch_seconds`` (wall
+    from each block's dispatch to its sync point). ``overlap_fraction`` is
+    the pipeline's headline: the fraction of staging wall the prefetch hid.
+    """
 
     data_bytes: int = 0     # latest block's cohort data arena
     state_bytes: int = 0    # latest block's staged state rows
-    peak_bytes: int = 0     # max over blocks of data + state
+    peak_bytes: int = 0     # max over blocks of data + state, including
+                            # transient double-buffered windows
+    stage_seconds: float = 0.0              # total staging wall
+    overlapped_stage_seconds: float = 0.0   # staging wall hidden by prefetch
+    dispatch_seconds: float = 0.0           # dispatch-to-sync wall
 
     def record(self, data_bytes: int, state_bytes: int) -> None:
         self.data_bytes = int(data_bytes)
@@ -74,7 +95,33 @@ class ResidencyMeter:
         self.peak_bytes = max(self.peak_bytes,
                               self.data_bytes + self.state_bytes)
 
-    def snapshot(self) -> Dict[str, int]:
+    def record_transient(self, nbytes: int) -> None:
+        """A momentary residency high-water mark (both pipeline buffers
+        live at once): raises ``peak_bytes`` only — the steady-state
+        ``data_bytes``/``state_bytes`` keep describing a single block."""
+        self.peak_bytes = max(self.peak_bytes, int(nbytes))
+
+    def record_stage(self, seconds: float, overlapped: bool = False) -> None:
+        self.stage_seconds += float(seconds)
+        if overlapped:
+            self.overlapped_stage_seconds += float(seconds)
+
+    def record_dispatch(self, seconds: float) -> None:
+        self.dispatch_seconds += float(seconds)
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of total staging wall that ran behind an in-flight
+        dispatch (0.0 when nothing was staged)."""
+        if self.stage_seconds <= 0.0:
+            return 0.0
+        return self.overlapped_stage_seconds / self.stage_seconds
+
+    def snapshot(self) -> Dict[str, float]:
         return {"data_bytes": self.data_bytes,
                 "state_bytes": self.state_bytes,
-                "peak_bytes": self.peak_bytes}
+                "peak_bytes": self.peak_bytes,
+                "stage_seconds": self.stage_seconds,
+                "overlapped_stage_seconds": self.overlapped_stage_seconds,
+                "dispatch_seconds": self.dispatch_seconds,
+                "overlap_fraction": self.overlap_fraction}

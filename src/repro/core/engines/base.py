@@ -61,6 +61,22 @@ class Engine:
         to stage and no device residency to report."""
         return 0
 
+    def prefetch_data(self, visited) -> None:
+        """Pipeline hook (``FLConfig.prefetch=1``): start staging the
+        NEXT block's data while the current dispatch is in flight. The
+        host-fed engines have nothing to stage — no-op."""
+
+    def stage_pair_nbytes(self) -> int:
+        """Arenas simultaneously live at the last block handover (both
+        pipeline buffers under prefetch, one otherwise); 0 for engines
+        without a device arena."""
+        return 0
+
+    def staging_stats(self):
+        """(stage_seconds, overlapped_stage_seconds) accumulated by the
+        engine's store — zeros for engines that never stage."""
+        return 0.0, 0.0
+
     def run(self, plan: RoundPlan, w_glob: Pytree, lr: float,
             state=None) -> RoundResult:
         result = RoundResult(w_glob)

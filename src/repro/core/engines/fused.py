@@ -56,17 +56,32 @@ class FusedEngine(BatchedEngine):
         """Block boundary of the residency protocol: ask the store for
         the arena covering ``visited`` and report its resident bytes.
         The device store returns the same fleet plane every block (0
-        re-upload); the host store uploads the cohort slice — real H2D
-        traffic, so it lands on the trainer's meter (the device store's
-        one-time fleet upload stays accounted in ``plane.nbytes``, as
-        before)."""
+        re-upload); the host/stream stores upload the cohort slice — real
+        H2D traffic, so it lands on the trainer's meter (the device
+        store's one-time fleet upload stays accounted in ``plane.nbytes``,
+        as before). A matching ``prefetch_data`` makes this call consume
+        the background-staged arena instead of gathering synchronously."""
         if visited is not None and len(visited) == 0:
             return 0        # ring_rounds=0: the block gathers nothing
         fresh = self.store.arena_nbytes(visited)
-        if self.store.kind == "host":
+        if self.store.kind in ("host", "stream"):
             self.trainer.h2d_bytes += fresh
         self._arena = self.store.arena(visited)
         return self._arena.nbytes
+
+    def prefetch_data(self, visited) -> None:
+        """Hand the next block's cohort gather + upload to the store's
+        staging thread (``ClientStore.prefetch``) while the current
+        block's dispatch is still in flight."""
+        if visited is not None and len(visited) == 0:
+            return          # ring_rounds=0: nothing to stage
+        self.store.prefetch(visited)
+
+    def stage_pair_nbytes(self) -> int:
+        return self.store.last_pair_nbytes
+
+    def staging_stats(self):
+        return self.store.stage_seconds, self.store.overlapped_stage_seconds
 
     def _run_group(self, grp: VisitGroup, w_glob, prev, lr, state):
         padded = self._pad(grp.lanes)

@@ -21,9 +21,23 @@ block's visited clients' data + state rows onto device and writes the
 trained rows back afterwards, so fleet size K is decoupled from device
 memory; ``ExperimentResult.peak_device_bytes`` reports the peak
 (``core.comm.ResidencyMeter``).
+
+``FLConfig.prefetch=1`` runs the same blocks through a *pipelined*
+driver: while block ``t``'s dispatch is in flight (JAX async dispatch —
+``dispatch_block`` returns as soon as the work is enqueued), the host
+plans block ``t+1`` (pure host RNG work), hands its cohort arena to the
+store's background staging thread (``ClientStore.prefetch``), eagerly
+stages its state rows when the visited sets are disjoint, and defers the
+eval readback so the only host sync points are block retirement
+(``finish_block``'s state write-back) and eval consumption. Planning
+order is identical to the serial driver (block t fully planned before
+block t+1), so the RNG stream — and therefore every result — is
+bit-exact to ``prefetch=0``; checkpoints snapshot the RNG state *between*
+the two plans so a resumed run re-plans the lookahead block identically.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional
@@ -73,9 +87,24 @@ class ExperimentResult:
     peak_device_bytes: int = 0              # residency meter readout: max
                                             # over blocks of staged data +
                                             # state bytes (FLConfig.store;
-                                            # O(cohort) under "host")
+                                            # O(cohort) under "host", both
+                                            # pipeline buffers counted under
+                                            # prefetch=1)
     dp_epsilon: Optional[float] = None      # (eps, delta) spent by the run's
     dp_delta: Optional[float] = None        # DP-SGD ledger (dp_clip > 0 only)
+    stage_seconds: float = 0.0              # host->device staging wall
+                                            # (store gathers + uploads)
+    overlapped_stage_seconds: float = 0.0   # staging wall hidden behind an
+                                            # in-flight dispatch (prefetch=1)
+    dispatch_seconds: float = 0.0           # per-block dispatch-to-sync wall
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of the staging wall the prefetch pipeline hid (0.0
+        when nothing was staged or prefetch=0)."""
+        if self.stage_seconds <= 0.0:
+            return 0.0
+        return self.overlapped_stage_seconds / self.stage_seconds
 
     @property
     def final_accuracy(self) -> float:
@@ -167,39 +196,120 @@ def run_experiment(
             stop = min(stop, t - t % checkpoint_every + checkpoint_every)
         return stop
 
+    def block_lrs(t: int, stop: int) -> np.ndarray:
+        return np.asarray([float(lr_fn(i)) for i in range(t, stop)])
+
     t = start_round
     last_time = time.perf_counter()
     last_round = start_round
-    while t < end:
-        stop = next_boundary(t)
-        lrs = np.asarray([float(lr_fn(i)) for i in range(t, stop)])
-        w_glob, state = algo.run_schedule(w_glob, t, lrs, rng, meter, state)
-        t = stop
-        # `t == end` (not fl.rounds): a stop_after/rounds not aligned to
-        # eval_every still gets its final partial block evaluated, so
-        # history always reaches the returned final_model
-        if t % eval_every == 0 or t == end:
-            acc = float(acc_fn(w_glob))
-            now = time.perf_counter()
-            history.append(RoundRecord(
-                round=t, accuracy=acc, comm=meter.snapshot(),
-                lr=float(lrs[-1]), seconds=now - last_time,
-                rounds=t - last_round,
-            ))
-            last_time, last_round = now, t
-            if not quiet:
-                print(f"  [{fl.algorithm:>12}] round {t:>3} "
-                      f"acc={acc:.4f} lr={lrs[-1]:.5f} "
-                      f"transfers={meter.total_transfers}")
-        if checkpoint_dir and checkpoint_every and t % checkpoint_every == 0:
-            _save_checkpoint(checkpoint_dir, w_glob, t, rng, meter,
-                             history, algo.state_to_ckpt(state))
+    dispatch_t0: Optional[float] = None
+
+    def record_eval(t_now: int, acc_dev, lrs) -> None:
+        """Consume a deferred eval: fence the device value BEFORE reading
+        the clock (JAX async dispatch would otherwise under-measure the
+        block), then record the eval point."""
+        nonlocal last_time, last_round, dispatch_t0
+        jax.block_until_ready(acc_dev)
+        now = time.perf_counter()
+        if dispatch_t0 is not None:
+            algo.residency.record_dispatch(now - dispatch_t0)
+            dispatch_t0 = None
+        acc = float(acc_dev)
+        history.append(RoundRecord(
+            round=t_now, accuracy=acc, comm=meter.snapshot(),
+            lr=float(lrs[-1]), seconds=now - last_time,
+            rounds=t_now - last_round,
+        ))
+        last_time, last_round = now, t_now
+        if not quiet:
+            print(f"  [{fl.algorithm:>12}] round {t_now:>3} "
+                  f"acc={acc:.4f} lr={lrs[-1]:.5f} "
+                  f"transfers={meter.total_transfers}")
+
+    pipelined = fl.prefetch > 0 and algo.pipelinable
+    if not pipelined:
+        # the serial driver (prefetch=0, and algorithms that bypass the
+        # Schedule IR): plan -> stage -> dispatch -> eval, one block at a
+        # time — the pre-pipeline behaviour, bit-for-bit
+        while t < end:
+            stop = next_boundary(t)
+            lrs = block_lrs(t, stop)
+            if dispatch_t0 is None:
+                dispatch_t0 = time.perf_counter()
+            w_glob, state = algo.run_schedule(w_glob, t, lrs, rng, meter,
+                                              state)
+            t = stop
+            # `t == end` (not fl.rounds): a stop_after/rounds not aligned
+            # to eval_every still gets its final partial block evaluated,
+            # so history always reaches the returned final_model
+            if t % eval_every == 0 or t == end:
+                record_eval(t, acc_fn(w_glob), lrs)
+            if (checkpoint_dir and checkpoint_every
+                    and t % checkpoint_every == 0):
+                _save_checkpoint(checkpoint_dir, w_glob, t,
+                                 rng.bit_generator.state, meter,
+                                 history, algo.state_to_ckpt(state))
+    else:
+        # the pipelined driver (prefetch=1): while block t's dispatch is
+        # in flight, plan block t+1 and start staging it. Planning order
+        # is the serial driver's exactly (block t fully planned before
+        # block t+1), so the RNG stream — and every result — is bit-exact
+        # to prefetch=0; only the staging/eval wall overlaps.
+        sched = lrs = None
+        if t < end:
+            stop = next_boundary(t)
+            lrs = block_lrs(t, stop)
+            sched = algo.plan_schedule(t, len(lrs), rng, state)
+        while sched is not None:
+            if dispatch_t0 is None:
+                dispatch_t0 = time.perf_counter()
+            w_glob = algo.dispatch_block(sched, w_glob, lrs, state)
+            is_eval = stop % eval_every == 0 or stop == end
+            # queue the eval readback without consuming it — the record
+            # path syncs only when the value is needed
+            acc_dev = acc_fn(w_glob) if is_eval else None
+            # snapshot the RNG BETWEEN the two plans: a checkpoint at
+            # this boundary resumes by re-planning the lookahead block
+            # from this exact state, converging with the serial driver
+            rng_snap = copy.deepcopy(rng.bit_generator.state)
+            nxt = None
+            if stop < end:
+                stop2 = next_boundary(stop)
+                lrs2 = block_lrs(stop, stop2)
+                sched2 = algo.plan_schedule(stop, len(lrs2), rng, state)
+                # overlap: data to the store's staging thread, state rows
+                # eagerly iff the visited sets are disjoint
+                algo.prefetch_block(sched2, sched.visited(), state)
+                nxt = (sched2, lrs2, stop2)
+            # retire the in-flight block (state write-back = the sync)
+            algo.finish_block(sched, state, meter)
+            t = stop
+            if is_eval:
+                record_eval(t, acc_dev, lrs)
+            if (checkpoint_dir and checkpoint_every
+                    and t % checkpoint_every == 0):
+                _save_checkpoint(checkpoint_dir, w_glob, t, rng_snap,
+                                 meter, history, algo.state_to_ckpt(state))
+            sched, lrs, stop = nxt if nxt is not None else (None, None, None)
+
+    # fold the store's staging instrumentation into the run's meter
+    stage_s, overlap_s = algo.engine.staging_stats()
+    algo.residency.stage_seconds = stage_s
+    algo.residency.overlapped_stage_seconds = overlap_s
+    store = getattr(algo.engine, "store", None)
+    if store is not None:
+        store.close()
     eps, delta = ((None, None) if algo.privacy is None
                   else algo.privacy.spent)
+    res = algo.residency
     return ExperimentResult(fl.algorithm, task, fl.partition, history,
                             final_model=w_glob,
-                            peak_device_bytes=algo.residency.peak_bytes,
-                            dp_epsilon=eps, dp_delta=delta)
+                            peak_device_bytes=res.peak_bytes,
+                            dp_epsilon=eps, dp_delta=delta,
+                            stage_seconds=res.stage_seconds,
+                            overlapped_stage_seconds=(
+                                res.overlapped_stage_seconds),
+                            dispatch_seconds=res.dispatch_seconds)
 
 
 # ---------------------------------------------------------------------------
@@ -228,8 +338,13 @@ def _unpack_state(obj):
     return obj
 
 
-def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter,
+def _save_checkpoint(ckdir: str, w_glob, round_: int, rng_state: Dict,
+                     meter: CommMeter,
                      history: List[RoundRecord] = (), state: Dict = None):
+    """``rng_state`` is the numpy bit-generator state dict to persist — the
+    pipelined driver passes a snapshot taken BEFORE the lookahead block was
+    planned (so a resumed run re-plans it identically), the serial driver
+    passes the generator's current state."""
     import json as _json
     import os as _os
 
@@ -243,7 +358,7 @@ def _save_checkpoint(ckdir: str, w_glob, round_: int, rng, meter: CommMeter,
              "edge_down", "p2p")}
     comm["sim_seconds"] = float(meter.sim_seconds)
     with open(f"{ckdir}/state.json", "w") as f:
-        _json.dump({"round": round_, "rng_state": rng.bit_generator.state,
+        _json.dump({"round": round_, "rng_state": rng_state,
                     "comm": comm,
                     "history": [dataclasses.asdict(r) for r in history]}, f)
 

@@ -79,10 +79,10 @@ def make_image_dataset(
 # named dataset builders matching the paper's four tasks (scaled for CPU) ---
 
 _TASKS = {
-    "mnist_like": dict(num_classes=10, size=28, channels=1),
-    "fashionmnist_like": dict(num_classes=10, size=28, channels=1),
-    "cifar10_like": dict(num_classes=10, size=32, channels=3),
-    "cifar100_like": dict(num_classes=100, size=32, channels=3),
+    "mnist_like": {"num_classes": 10, "size": 28, "channels": 1},
+    "fashionmnist_like": {"num_classes": 10, "size": 28, "channels": 1},
+    "cifar10_like": {"num_classes": 10, "size": 32, "channels": 3},
+    "cifar100_like": {"num_classes": 100, "size": 32, "channels": 3},
 }
 
 

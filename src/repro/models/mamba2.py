@@ -24,12 +24,12 @@ def mamba_dims(cfg: ModelConfig) -> dict:
     d_inner = cfg.ssm_expand * cfg.d_model
     nheads = d_inner // cfg.ssm_headdim
     conv_channels = d_inner + 2 * NGROUPS * cfg.ssm_state
-    return dict(
-        d_inner=d_inner,
-        nheads=nheads,
-        conv_channels=conv_channels,
-        in_proj=2 * d_inner + 2 * NGROUPS * cfg.ssm_state + nheads,
-    )
+    return {
+        "d_inner": d_inner,
+        "nheads": nheads,
+        "conv_channels": conv_channels,
+        "in_proj": 2 * d_inner + 2 * NGROUPS * cfg.ssm_state + nheads,
+    }
 
 
 def mamba_specs(cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> dict:

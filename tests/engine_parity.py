@@ -103,6 +103,54 @@ def run_schedule(algo, engine, overrides=(), rounds=2):
     return _RUNS[key]
 
 
+def run_pipelined(algo, engine, store="host", prefetch=0, rounds=3):
+    """Cached FULL-driver run (``run_experiment``, not the bare algorithm
+    API): the prefetch pipeline lives in the executor, so prefetch=0 vs 1
+    parity must compare complete experiment runs. Partial participation
+    (cohort 4 of 8) draws a different planner cohort per block, so the
+    pipelined driver actually re-stages — and the MOON/SCAFFOLD state
+    stash exercises both its disjoint (eager) and overlapping (sync
+    fallback) paths across the random block sequence. ``eval_every=1``
+    makes every round its own block: maximal pipeline churn."""
+    key = ("pipe", algo, engine, store, prefetch, rounds)
+    if key not in _RUNS:
+        from repro.configs import get_config
+        from repro.configs.base import FLConfig
+        from repro.core.executor import run_experiment
+        from repro.data.synthetic import make_task
+
+        if "pipe_task" not in _RUNS:
+            _RUNS["pipe_task"] = make_task(
+                "mnist_like", train_per_class=10, test_per_class=2, seed=0)
+        train, test = _RUNS["pipe_task"]
+        fl = FLConfig(algorithm=algo, num_devices=8, num_edges=2,
+                      rounds=rounds, ring_rounds=2, local_epochs=1,
+                      batch_size=8, momentum=0.5, participation=0.5,
+                      partition="dirichlet", alpha=0.5, seed=3,
+                      engine=engine, store=store, prefetch=prefetch)
+        _RUNS[key] = run_experiment(
+            task="mnist_like", model_cfg=get_config("fedsr-mlp"), fl=fl,
+            eval_every=1, train=train, test=test)
+    return _RUNS[key]
+
+
+def assert_pipeline_parity(algo, engine, store, rounds=3):
+    """The pipeline contract: ``prefetch=1`` must be BIT-exact against
+    the serial driver under the same (algo, engine, store) — identical
+    final weights, per-eval accuracies and comm records — while its peak
+    residency stays within the double-buffer bound (<= 2x serial)."""
+    r0 = run_pipelined(algo, engine, store, prefetch=0, rounds=rounds)
+    r1 = run_pipelined(algo, engine, store, prefetch=1, rounds=rounds)
+    diff = max_diff(r0.final_model, r1.final_model)
+    assert diff == 0.0, f"{algo}/{engine}/{store} pipeline drifted: {diff}"
+    assert [h.accuracy for h in r0.history] == \
+        [h.accuracy for h in r1.history], (algo, engine, store)
+    assert [h.comm for h in r0.history] == \
+        [h.comm for h in r1.history], (algo, engine, store)
+    assert r1.peak_device_bytes <= 2 * max(r0.peak_device_bytes, 1), \
+        (algo, engine, store, r1.peak_device_bytes, r0.peak_device_bytes)
+
+
 def max_diff(a, b):
     import jax
     return max(float(np.max(np.abs(np.asarray(la) - np.asarray(lb))))

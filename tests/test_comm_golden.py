@@ -25,22 +25,22 @@ K, M, R, T = 8, 2, 3, 2
 Q = K // M
 
 GOLDEN = {
-    "fedavg":   dict(cloud_down=K * T, cloud_up=K * T,
-                     edge_down=0, edge_up=0, p2p=0),
-    "fedprox":  dict(cloud_down=K * T, cloud_up=K * T,
-                     edge_down=0, edge_up=0, p2p=0),
-    "moon":     dict(cloud_down=K * T, cloud_up=K * T,
-                     edge_down=0, edge_up=0, p2p=0),
-    "scaffold": dict(cloud_down=2 * K * T, cloud_up=2 * K * T,
-                     edge_down=0, edge_up=0, p2p=0),
-    "fedsr":    dict(cloud_down=M * T, cloud_up=M * T,
-                     edge_down=0, edge_up=0,
-                     p2p=T * M * (R * (Q - 1) + (R - 1))),
-    "ring":     dict(cloud_down=T, cloud_up=T,
-                     edge_down=0, edge_up=0,
-                     p2p=T * (R * (K - 1) + (R - 1))),
-    "hieravg":  dict(cloud_down=M * T, cloud_up=M * T,
-                     edge_down=R * K * T, edge_up=R * K * T, p2p=0),
+    "fedavg":   {"cloud_down": K * T, "cloud_up": K * T,
+                 "edge_down": 0, "edge_up": 0, "p2p": 0},
+    "fedprox":  {"cloud_down": K * T, "cloud_up": K * T,
+                 "edge_down": 0, "edge_up": 0, "p2p": 0},
+    "moon":     {"cloud_down": K * T, "cloud_up": K * T,
+                 "edge_down": 0, "edge_up": 0, "p2p": 0},
+    "scaffold": {"cloud_down": 2 * K * T, "cloud_up": 2 * K * T,
+                 "edge_down": 0, "edge_up": 0, "p2p": 0},
+    "fedsr":    {"cloud_down": M * T, "cloud_up": M * T,
+                 "edge_down": 0, "edge_up": 0,
+                 "p2p": T * M * (R * (Q - 1) + (R - 1))},
+    "ring":     {"cloud_down": T, "cloud_up": T,
+                 "edge_down": 0, "edge_up": 0,
+                 "p2p": T * (R * (K - 1) + (R - 1))},
+    "hieravg":  {"cloud_down": M * T, "cloud_up": M * T,
+                 "edge_down": R * K * T, "edge_up": R * K * T, "p2p": 0},
 }
 
 _CACHE = {}

@@ -14,8 +14,9 @@ sharded data plane are exercised on CPU-only CI.
 import pytest
 
 from engine_parity import (
-    CASES, COMM_CHANNELS, assert_chunked_parity, assert_engine_parity,
-    max_diff, run_round, run_schedule, run_subprocess_matrix,
+    ALGOS, CASES, COMM_CHANNELS, assert_chunked_parity, assert_engine_parity,
+    assert_pipeline_parity, max_diff, run_round, run_schedule,
+    run_subprocess_matrix,
 )
 
 from repro.configs.base import AdversaryConfig, ScenarioConfig
@@ -120,14 +121,42 @@ def test_host_store_parity(algo, overrides, engine):
             assert d_h == 1, (algo, d_h)
 
 
+@pytest.mark.parametrize("engine", ("batched", "fused"))
+@pytest.mark.parametrize("algo", ALGOS)
+def test_prefetch_pipeline_bitexact(algo, engine):
+    """The pipeline contract (PR 9): ``prefetch=1`` — lookahead planning,
+    background cohort staging, deferred eval readback — must be BIT-exact
+    against the serial ``prefetch=0`` driver for every algorithm under
+    every store, batched and fused, with peak residency inside the
+    double-buffer bound. The partial-participation cohorts vary per block,
+    so the staged stores re-stage each block and the MOON/SCAFFOLD state
+    stash hits both its disjoint and overlapping branches."""
+    for store in ("device", "host", "stream"):
+        assert_pipeline_parity(algo, engine, store)
+
+
+def test_prefetch_centralized_falls_back_to_serial():
+    """``Centralized.pipelinable = False``: requesting prefetch=1 must
+    silently use the serial driver (planning IS execution for the
+    non-federated reference) and stay bit-exact."""
+    assert_pipeline_parity("centralized", "batched", "device")
+
+
+@pytest.mark.parametrize("prefetch", (0, 1))
 @pytest.mark.parametrize("algo", ["moon", "scaffold"])
-def test_host_store_resume_mid_schedule_is_exact(algo):
+def test_host_store_resume_mid_schedule_is_exact(algo, prefetch):
     """The host-store checkpoint round trip: MOON/SCAFFOLD client memory
     lives in host ``(K, ...)`` arenas under ``store="host"``; a checkpoint
     landing mid-schedule must pack those arenas to the same
     ``algo_state.msgpack`` dict layout and restore them (``device=False``
     unpack) such that the resumed run reproduces the uninterrupted final
-    model bit-for-bit."""
+    model bit-for-bit.
+
+    Under ``prefetch=1`` the checkpoint lands with the NEXT block already
+    planned and its cohort staging in flight: the pipelined driver
+    snapshots the RNG bit-generator state BETWEEN the two plans, so the
+    resumed run re-draws the lookahead block's plan identically — the
+    in-flight prefetch is recomputed, never persisted."""
     import tempfile
 
     import jax
@@ -142,7 +171,7 @@ def test_host_store_resume_mid_schedule_is_exact(algo):
         return FLConfig(algorithm=algo, num_devices=4, num_edges=2,
                         rounds=4, partition="pathological", xi=2,
                         ring_rounds=2, local_epochs=1, seed=11,
-                        engine="fused", store="host")
+                        engine="fused", store="host", prefetch=prefetch)
 
     cfg = get_config("fedsr-mlp")
     train, test = make_task("mnist_like", train_per_class=12,

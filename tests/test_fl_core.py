@@ -71,8 +71,8 @@ def test_weighted_aggregation_eq11():
 def test_comm_accounting_fedsr_vs_fedavg():
     """FedSR cloud traffic per round = 2M; FedAvg = 2K (the paper's
     semi-decentralized claim). P2P hops stay inside the edge."""
-    fl_common = dict(num_devices=8, num_edges=2, rounds=2, ring_rounds=2,
-                     local_epochs=1, batch_size=8)
+    fl_common = {"num_devices": 8, "num_edges": 2, "rounds": 2,
+                 "ring_rounds": 2, "local_epochs": 1, "batch_size": 8}
     clients = _tiny_clients(8)
     w0 = init_small_model(jax.random.PRNGKey(0), CFG)
 

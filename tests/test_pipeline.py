@@ -1,0 +1,128 @@
+"""Pipelined-driver units (PR 9): the pieces the prefetch parity matrix
+can't isolate — the state stash's disjointness rule (a true data
+dependency: the in-flight block's write-back may touch the rows the next
+block wants), stash consumption/invalidations in ``_stage_state``, and
+the overlap instrumentation surfaced on ``ExperimentResult``.
+
+Bit-exactness of prefetch=1 vs 0 across every algorithm x engine x store
+lives in ``test_engine_matrix.py``; store-level prefetch mechanics (the
+background thread, double-buffer byte accounting) in ``test_store.py``.
+"""
+import numpy as np
+
+from engine_parity import run_pipelined
+
+
+def _moon_algo():
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.core.algorithms import make_algorithm
+    from repro.core.local import LocalTrainer
+    from repro.data.pipeline import make_clients
+    from repro.data.synthetic import make_task
+    from repro.models.small import init_small_model
+
+    fl = FLConfig(algorithm="moon", num_devices=8, num_edges=2,
+                  participation=0.5, ring_rounds=2, local_epochs=1,
+                  batch_size=8, engine="fused", store="host", prefetch=1)
+    train, _ = make_task("mnist_like", train_per_class=10,
+                         test_per_class=2, seed=0)
+    clients = make_clients(train, scheme="iid", num_devices=8,
+                           rng=np.random.default_rng(0))
+    cfg = get_config("fedsr-mlp")
+    algo = make_algorithm("moon", LocalTrainer(cfg, fl), clients, fl)
+    w = init_small_model(jax.random.PRNGKey(0), cfg)
+    return algo, w
+
+
+def test_stash_only_when_visited_sets_disjoint():
+    """``prefetch_block`` eagerly stages the next block's state rows ONLY
+    when they are disjoint from the in-flight block's — overlapping sets
+    must wait for the write-back (sync fallback in ``_stage_state``)."""
+    from repro.core.state import stage_rows
+
+    algo, w = _moon_algo()
+    state = {}
+    algo.ensure_state(state, w)
+    sched = algo.plan_schedule(0, 1, np.random.default_rng(7), state)
+    visited = sched.visited()
+    assert 0 < len(visited) < 8
+
+    # overlap (here: identical sets) -> no stash
+    algo.prefetch_block(sched, visited, state)
+    assert "_stash" not in state
+
+    # unknown in-flight set (serial warm-up) -> no stash either
+    algo.prefetch_block(sched, None, state)
+    assert "_stash" not in state
+
+    # disjoint -> rows staged eagerly, identical to a fresh stage
+    others = np.setdiff1d(np.arange(8), visited)
+    algo.prefetch_block(sched, others, state)
+    assert np.array_equal(state["_stash"]["visited"], visited)
+    fresh = stage_rows(state["_host"]["prev"], visited)
+    for k, v in state["_stash"]["rows"]["prev"].items():
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(fresh[k]))
+
+
+def test_stage_state_consumes_matching_stash_and_drops_stale():
+    """``_stage_state`` installs a matching stash without re-uploading;
+    a stash for a DIFFERENT visited set (the planner moved on) is
+    discarded and the rows staged fresh."""
+    algo, w = _moon_algo()
+    state = {}
+    algo.ensure_state(state, w)
+    sched = algo.plan_schedule(0, 1, np.random.default_rng(7), state)
+    visited = sched.visited()
+    others = np.setdiff1d(np.arange(8), visited)
+
+    algo.prefetch_block(sched, others, state)
+    stashed = state["_stash"]["rows"]["prev"]
+    algo._stage_state(state, visited)
+    assert "_stash" not in state
+    assert state["prev"] is stashed             # consumed, not re-staged
+
+    # stale stash: staged set != stash set -> fresh stage, stash dropped
+    state.pop("prev")
+    state.pop("_visited")
+    state.pop("_rowmap")
+    algo.prefetch_block(sched, others, state)
+    algo._stage_state(state, others)
+    assert "_stash" not in state
+    assert state["prev"] is not stashed
+    import jax
+    leaf = jax.tree.leaves(state["prev"])[0]
+    assert leaf.shape[0] == len(others) + 1     # V + 1 cohort carry
+
+
+def test_prefetch_block_hands_data_to_store_thread():
+    """The data half of ``prefetch_block`` always goes to the store's
+    background staging thread (arenas are immutable — no dependency on
+    the in-flight block), even when the state rows fall back to sync."""
+    algo, w = _moon_algo()
+    state = {}
+    algo.ensure_state(state, w)
+    sched = algo.plan_schedule(0, 1, np.random.default_rng(7), state)
+    store = algo.engine.store
+    try:
+        algo.prefetch_block(sched, sched.visited(), state)  # overlap case
+        assert store._pending is not None
+        assert store._pending[0] == tuple(sched.visited().tolist())
+    finally:
+        store.close()
+
+
+def test_pipeline_instrumentation_surfaces_overlap():
+    """A pipelined partial-participation run on the host store must report
+    a nonzero staging wall, a nonzero hidden fraction of it, and the
+    dispatch window — the quantities the A/B bench reads."""
+    r1 = run_pipelined("fedsr", "fused", "host", prefetch=1)
+    assert r1.stage_seconds > 0.0
+    assert r1.overlapped_stage_seconds > 0.0
+    assert 0.0 < r1.overlap_fraction <= 1.0
+    assert r1.dispatch_seconds > 0.0
+    r0 = run_pipelined("fedsr", "fused", "host", prefetch=0)
+    assert r0.overlapped_stage_seconds == 0.0
+    assert r0.overlap_fraction == 0.0

@@ -90,6 +90,129 @@ def test_make_store_rejects_unknown():
         make_store("disk", _clients())
 
 
+def test_stream_store_arenas_match_host_store():
+    """The memmap round-trip is lossless: a stream-store cohort arena is
+    byte-identical to the host store's for the same visited set, and its
+    ``clients`` list keeps only lengths (O(1) RAM per shard)."""
+    from repro.data.store import make_store
+
+    clients = _clients()
+    host = make_store("host", clients)
+    stream = make_store("stream", clients)
+    assert stream.kind == "stream"
+    try:
+        for visited in (np.asarray([1, 3]), np.asarray([0]), None):
+            a, b = host.arena(visited), stream.arena(visited)
+            np.testing.assert_array_equal(np.asarray(a.images),
+                                          np.asarray(b.images))
+            np.testing.assert_array_equal(np.asarray(a.labels),
+                                          np.asarray(b.labels))
+            np.testing.assert_array_equal(np.asarray(a.offsets),
+                                          np.asarray(b.offsets))
+        # fleet bookkeeping survives the shard handoff to disk
+        assert [len(c) for c in stream.clients] == [len(c) for c in clients]
+        assert not any(hasattr(c, "images") for c in stream.clients)
+    finally:
+        stream.close()
+        host.close()
+
+
+def test_stream_store_close_is_idempotent():
+    from repro.data.store import make_store
+
+    store = make_store("stream", _clients())
+    store.arena(np.asarray([2]))
+    store.close()
+    store.close()                               # second close: no-op
+
+
+# ---------------------------------------------------------------------------
+# prefetch protocol (PR 9): background staging + double buffer
+
+
+def test_prefetch_consume_counts_overlap_and_pair_bytes():
+    """``prefetch(v)`` then ``arena(v)`` consumes the background build:
+    its wall lands in BOTH stage_seconds and overlapped_stage_seconds,
+    and ``last_pair_nbytes`` reports the double-buffered handover — the
+    outgoing arena stays live until the swap, so the pair is prev + new."""
+    from repro.data.store import make_store
+
+    store = make_store("host", _clients())
+    try:
+        a = store.arena(np.asarray([1, 3]))     # sync stage: no overlap
+        assert store.stage_seconds > 0.0
+        assert store.overlapped_stage_seconds == 0.0
+        assert store.last_pair_nbytes == a.nbytes
+        store.prefetch(np.asarray([0, 2]))
+        b = store.arena(np.asarray([0, 2]))     # consume the prefetch
+        assert b.images.shape[0] == 13          # shards 0 (5) + 2 (8)
+        assert store.overlapped_stage_seconds > 0.0
+        assert store.last_pair_nbytes == a.nbytes + b.nbytes
+    finally:
+        store.close()
+
+
+def test_prefetch_skips_resident_and_redundant():
+    """Prefetching the arena already staged (full participation every
+    block) or the set already pending is a no-op — no second build."""
+    from repro.data.store import make_store
+
+    store = make_store("host", _clients())
+    try:
+        store.arena(np.asarray([1, 3]))
+        store.prefetch(np.asarray([1, 3]))      # already resident
+        assert store._pending is None
+        store.prefetch(np.asarray([0]))
+        pending = store._pending
+        store.prefetch(np.asarray([0]))         # already staging
+        assert store._pending is pending
+    finally:
+        store.close()
+
+
+def test_stale_prefetch_falls_back_to_sync_stage():
+    """An arena request for a DIFFERENT set than the pending prefetch
+    drains the stale build and stages synchronously — correctness never
+    depends on the planner's lookahead matching: the sync path frees the
+    old arena first, so ``last_pair_nbytes`` is the single new plane."""
+    from repro.data.store import make_store
+
+    store = make_store("host", _clients())
+    try:
+        store.arena(np.asarray([1]))
+        before = store.overlapped_stage_seconds
+        store.prefetch(np.asarray([0]))         # planner guessed wrong
+        c = store.arena(np.asarray([2, 3]))
+        assert c.images.shape[0] == 11          # shards 2 (8) + 3 (3)
+        assert store._pending is None
+        assert store.overlapped_stage_seconds == before     # not overlapped
+        assert store.last_pair_nbytes == c.nbytes
+    finally:
+        store.close()
+
+
+def test_residency_meter_transient_peak():
+    """``record_transient`` folds the double-buffered high-water mark into
+    ``peak_bytes`` without disturbing the steady-state fields."""
+    from repro.core.comm import ResidencyMeter
+
+    meter = ResidencyMeter()
+    meter.record(100, 20)
+    assert meter.peak_bytes == 120
+    meter.record_transient(250)                 # both buffers live at once
+    assert meter.peak_bytes == 250
+    assert meter.data_bytes == 100 and meter.state_bytes == 20
+    meter.record_transient(90)                  # never lowers the peak
+    assert meter.peak_bytes == 250
+    meter.record_stage(2.0)
+    meter.record_stage(1.0, overlapped=True)
+    meter.record_dispatch(0.5)
+    assert meter.overlap_fraction == pytest.approx(1.0 / 3.0)
+    snap = meter.snapshot()
+    assert snap["overlap_fraction"] == pytest.approx(1.0 / 3.0)
+    assert snap["dispatch_seconds"] == pytest.approx(0.5)
+
+
 # ---------------------------------------------------------------------------
 # checkpoint pack/unpack (the algo_state.msgpack layout)
 
