@@ -13,7 +13,9 @@ from typing import Dict, List, Optional
 
 import jax
 
-from repro.configs.base import AdversaryConfig, FLConfig, ScenarioConfig
+from repro.configs.base import (
+    AdversaryConfig, FLConfig, PersonalizeConfig, ScenarioConfig,
+)
 from repro.configs.registry import get_config
 from repro.core.executor import run_experiment
 
@@ -245,6 +247,47 @@ def attack_defense_grid(rounds: int = 20,
             "dp_epsilon": res.dp_epsilon, "dp_delta": res.dp_delta,
             "seconds": time.perf_counter() - t0,
         })
+    return rows
+
+
+def personalize_table(rounds: int = 12,
+                      algorithms: Optional[List[str]] = None) -> List[dict]:
+    """Personalization lift under dirichlet non-IID (ROADMAP item 4's
+    claim): after the global rounds, every client fine-tunes the final
+    model on its own shard (full and head-only modes) and is scored on
+    label-matched per-client test draws — the same draws also score the
+    UN-personalized global model, so each row reports the like-for-like
+    mean per-client accuracy gap.
+
+    The lift CROSSES ZERO in alpha: under severe skew (alpha=0.1, shards
+    near single-class) fine-tuning specializes each client to the classes
+    it actually serves and the lift is large and positive; under mild
+    skew (alpha=0.5) the well-trained global model is already near its
+    per-client ceiling and fine-tuning trades rare-class accuracy for
+    frequent-class accuracy at a net loss — the Briggs/Wu regime where
+    personalization only pays under real heterogeneity. Both signs are
+    the claim; the acceptance rows are the alpha=0.1 ones."""
+    algorithms = algorithms or ["fedavg", "fedsr"]
+    rows = []
+    for alpha in (0.5, 0.1):
+        for mode in ("full", "head"):
+            for algo in algorithms:
+                fl = _fl(algo, partition="dirichlet", rounds=rounds,
+                         alpha=alpha, engine="fused",
+                         personalize=PersonalizeConfig(
+                             epochs=3, lr=0.02, mode=mode))
+                t0 = time.perf_counter()
+                res = _run(task="mnist_like", model_cfg=MLP, fl=fl,
+                           eval_every=rounds)
+                rows.append({
+                    "table": "personalize", "alpha": alpha, "mode": mode,
+                    "algorithm": algo,
+                    "acc_global": res.global_client_accuracy,
+                    "acc_personalized": res.personalized_accuracy,
+                    "lift": (res.personalized_accuracy
+                             - res.global_client_accuracy),
+                    "seconds": time.perf_counter() - t0,
+                })
     return rows
 
 

@@ -458,8 +458,54 @@ def bench_attack_fedsr_median(num_devices: int = 64, rounds: int = 10,
             f";wmean_us={walls['weighted_mean']:.0f}")
 
 
+def bench_serve_fleet_mlp64(fleet: int = 1024, requests: int = 256,
+                            iters: int = 5) -> Tuple[str, float, str]:
+    """The personalized-serving A/B (PR 10): a request batch spanning
+    ``requests`` DISTINCT clients of a ``fleet``-model personalized MLP64
+    fleet — the stacked one-dispatch path (``serve.fleet.FleetClassifier``:
+    gather each request's params row by lane inside the jit, whole batch =
+    ONE compiled dispatch) vs the per-model python loop
+    (``serve.fleet.loop_classify``: extract each model's row from the same
+    fleet arena, one pre-compiled dispatch per distinct model, assemble
+    the batch response host-side — the shipped baseline, so both paths
+    serve from the SAME stacked arena the personalization stage emits).
+    Distinct lanes are the loop's dispatch-bound worst case — exactly the
+    fleet tail a personalized deployment serves — while the stacked path's
+    cost is invariant in the number of distinct models. us_per_call is the
+    stacked wall per batch; ``derived`` reports both paths' requests/s and
+    the speedup (acceptance: >= 5x at fleet >= 1024)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models.small import init_small_model
+    from repro.serve.fleet import FleetClassifier, FleetParams, loop_classify
+
+    cfg = dataclasses.replace(get_config("fedsr-mlp"), mlp_hidden=(64, 64))
+    rng = np.random.default_rng(0)
+    keys = jax.random.split(jax.random.PRNGKey(0), fleet)
+    stacked = jax.vmap(lambda k: init_small_model(k, cfg))(keys)
+    flt = FleetParams(stacked)
+    lanes = rng.choice(fleet, size=requests, replace=False)
+    images_np = rng.standard_normal(
+        (requests, cfg.image_size, cfg.image_size, cfg.image_channels),
+    ).astype(np.float32)
+    images = jnp.asarray(images_np)
+
+    clf = FleetClassifier(cfg)
+    us_stacked = _time(lambda: clf(flt, lanes, images), iters=iters)
+    us_loop = _time(lambda: loop_classify(cfg, flt, lanes, images_np),
+                    iters=max(iters - 2, 2))
+    req_s = requests / (us_stacked * 1e-6)
+    loop_req_s = requests / (us_loop * 1e-6)
+    return ("serve_fleet_mlp64", us_stacked,
+            f"loop_us={us_loop:.0f};speedup={us_loop / us_stacked:.1f}x"
+            f";req_s={req_s:.0f};loop_req_s={loop_req_s:.0f}"
+            f";K={fleet};B={requests}")
+
+
 ALL = [bench_attention, bench_ssd, bench_fused_sgd, bench_decode_attention,
        bench_fl_engines, bench_fl_engines_sharded, bench_fl_engines_fused,
        bench_ring_round_fedsr, bench_fedsr_onedispatch,
        bench_fl_schedule_chunked, bench_fleet_scale_hoststore,
-       bench_pipeline_fedsr_hoststore, bench_attack_fedsr_median]
+       bench_pipeline_fedsr_hoststore, bench_attack_fedsr_median,
+       bench_serve_fleet_mlp64]

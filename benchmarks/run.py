@@ -66,6 +66,15 @@ def run_fl_tables(rounds: int, only: set) -> None:
                 r["seconds"] / atk_rounds * 1e6,
                 derived,
             )
+    if "personalize" in only:
+        for r in fl_tables.personalize_table(rounds=rounds):
+            _emit(
+                f"personalize/alpha{r['alpha']}/{r['mode']}/{r['algorithm']}",
+                r["seconds"] / rounds * 1e6,
+                f"acc_personalized={r['acc_personalized']:.4f}"
+                f";acc_global={r['acc_global']:.4f}"
+                f";lift={r['lift']:+.4f}",
+            )
     if "scenarios" in only:
         for r in fl_tables.scenario_curves(rounds=rounds):
             _emit(
@@ -119,7 +128,7 @@ def run_smoke() -> None:
         bench_fl_engines_fused, bench_fl_engines_sharded,
         bench_fl_schedule_chunked, bench_fleet_scale_hoststore,
         bench_fused_sgd, bench_pipeline_fedsr_hoststore,
-        bench_ring_round_fedsr,
+        bench_ring_round_fedsr, bench_serve_fleet_mlp64,
     )
 
     name, us, derived = bench_fused_sgd()
@@ -158,6 +167,14 @@ def run_smoke() -> None:
     # headline numbers are the full-size row's)
     name, us, derived = bench_attack_fedsr_median(num_devices=16, rounds=4)
     _emit(f"kernel/{name}", us, derived)
+    # the PR-10 acceptance row at reduced K: stacked one-dispatch
+    # personalized serving vs the per-model loop over the same fleet
+    # arena — the routing + dispatch-collapse wiring check (the >= 5x
+    # speedup already shows at this size; headline numbers are the full
+    # K=1024 row's)
+    name, us, derived = bench_serve_fleet_mlp64(fleet=64, requests=32,
+                                                iters=2)
+    _emit(f"kernel/{name}", us, derived)
 
     from repro.configs import get_config
     from repro.configs.base import FLConfig
@@ -181,7 +198,7 @@ def main() -> None:
                     help="FL rounds per benchmark run")
     ap.add_argument("--only",
                     default="table1,table2,table3,table4,scenarios,attacks,"
-                            "kernels,roofline",
+                            "personalize,kernels,roofline",
                     help="comma-separated subset")
     ap.add_argument("--quick", action="store_true",
                     help="tables 1+3 + kernels + roofline only, fewer rounds")
@@ -204,7 +221,7 @@ def main() -> None:
     if "roofline" in only:
         run_roofline()
     if only & {"table1", "table2", "table3", "table4", "scenarios",
-               "attacks"}:
+               "attacks", "personalize"}:
         run_fl_tables(rounds, only)
 
 

@@ -239,6 +239,62 @@ class AdversaryConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PersonalizeConfig:
+    """Post-global personalization stage (ROADMAP item 4).
+
+    After the last global round, every client fine-tunes the final
+    ``w_glob`` on its own shard — the per-client specialization that
+    Briggs et al. / Wu et al. show recovers the accuracy severe
+    non-IIDness costs a single global model. The stage runs OUTSIDE the
+    round loop (``core.personalize``): the fleet trains as a ``(K, ...)``
+    stacked-params arena in blocks of ``block`` clients, each block ONE
+    vmapped compiled dispatch through the fused lane machinery
+    (``LocalTrainer.train_many_fused`` against the client store's cohort
+    arena), so K stays decoupled from device memory exactly like training
+    (``FLConfig.store``). Per-client eval is one more vmapped dispatch per
+    block, against label-matched draws from the global test pool.
+
+    The default is inactive (``epochs=0``): it draws nothing from any RNG
+    stream and runs no code, so personalize-off runs are bit-exact to
+    pre-personalization outputs. Batch plans and eval draws come from
+    ``seed`` — the stage's own stream, consumed after training ends, so
+    the experiment stream is untouched either way.
+    """
+    epochs: int = 0                 # local fine-tune epochs; 0 = off
+    lr: float = 0.01                # constant fine-tune learning rate
+    mode: str = "full"              # full: every param trains;
+                                    # head: only the classifier head layer
+                                    #   (body gradients masked to zero, so
+                                    #   features stay the global model's)
+    batch_size: int = 0             # 0 = inherit FLConfig.batch_size
+    block: int = 0                  # clients fine-tuned per compiled
+                                    # dispatch; 0 = the whole fleet under
+                                    # store="device", cohorts of 64 under
+                                    # the staged stores
+    eval_per_client: int = 64       # label-matched test draws per client
+                                    # (mean per-client accuracy protocol)
+    seed: int = 0                   # the stage's own stream: batch plans
+                                    # + per-client eval draws
+
+    def __post_init__(self):
+        if self.epochs < 0:
+            raise ValueError(f"epochs={self.epochs} must be >= 0 (0 = off)")
+        if self.lr <= 0:
+            raise ValueError(f"lr={self.lr} must be > 0")
+        if self.mode not in ("full", "head"):
+            raise ValueError(f"mode={self.mode!r} must be 'full' or 'head'")
+        if self.batch_size < 0 or self.block < 0:
+            raise ValueError("batch_size/block must be >= 0 (0 = default)")
+        if self.eval_per_client <= 0:
+            raise ValueError(
+                f"eval_per_client={self.eval_per_client} must be > 0")
+
+    @property
+    def active(self) -> bool:
+        return self.epochs > 0
+
+
+@dataclasses.dataclass(frozen=True)
 class FLConfig:
     """Hyper-parameters of Algorithm 1 and of all baselines (paper §IV-C/D)."""
     algorithm: str = "fedsr"         # fedsr | fedavg | fedprox | moon | hieravg | ring | centralized
@@ -328,6 +384,12 @@ class FLConfig:
                                      # Byzantine delta transforms); the default
                                      # is inactive and bit-exact to
                                      # adversary-free runs
+    personalize: PersonalizeConfig = dataclasses.field(
+        default_factory=PersonalizeConfig)
+                                     # post-global per-client fine-tune stage
+                                     # (core.personalize); the default is
+                                     # inactive and bit-exact to
+                                     # personalization-free runs
     reducer: str = "weighted_mean"   # cloud/edge aggregation rule:
                                      # weighted_mean: eq. 11 (exact current
                                      #   path, bit-for-bit);

@@ -97,6 +97,19 @@ class ExperimentResult:
     overlapped_stage_seconds: float = 0.0   # staging wall hidden behind an
                                             # in-flight dispatch (prefetch=1)
     dispatch_seconds: float = 0.0           # per-block dispatch-to-sync wall
+    personalized_accuracy: Optional[float] = None
+                                            # mean per-client accuracy of the
+                                            # personalized fleet on label-
+                                            # matched test draws (PersonalizeC
+                                            # onfig.active runs only)
+    global_client_accuracy: Optional[float] = None
+                                            # the global model on the SAME
+                                            # draws — the like-for-like
+                                            # baseline the lift is against
+    personalized_fleet: Optional[Pytree] = None
+                                            # host (K, ...) stacked arena of
+                                            # per-client fine-tuned params
+                                            # (feeds serve.fleet routing)
 
     @property
     def overlap_fraction(self) -> float:
@@ -292,6 +305,21 @@ def run_experiment(
                                  meter, history, algo.state_to_ckpt(state))
             sched, lrs, stop = nxt if nxt is not None else (None, None, None)
 
+    # post-global personalization stage (core.personalize): fine-tune the
+    # whole fleet from the final w_glob as a (K, ...) stacked arena, one
+    # vmapped dispatch per block, reusing the engine's client store when
+    # it has one (the fused engine) so the residency protocol carries
+    # over. Runs on its own RNG stream AFTER the round loop — inactive
+    # configs execute nothing and stay bit-exact.
+    preport = None
+    if fl.personalize.active:
+        from repro.core.personalize import personalize_fleet, save_personalized
+        preport = personalize_fleet(
+            model_cfg, fl, clients, w_glob, test,
+            store=getattr(algo.engine, "store", None))
+        if checkpoint_dir:
+            save_personalized(checkpoint_dir, preport.fleet, fl.num_devices)
+
     # fold the store's staging instrumentation into the run's meter
     stage_s, overlap_s = algo.engine.staging_stats()
     algo.residency.stage_seconds = stage_s
@@ -309,7 +337,15 @@ def run_experiment(
                             stage_seconds=res.stage_seconds,
                             overlapped_stage_seconds=(
                                 res.overlapped_stage_seconds),
-                            dispatch_seconds=res.dispatch_seconds)
+                            dispatch_seconds=res.dispatch_seconds,
+                            personalized_accuracy=(
+                                None if preport is None
+                                else preport.personalized_accuracy),
+                            global_client_accuracy=(
+                                None if preport is None
+                                else preport.global_client_accuracy),
+                            personalized_fleet=(
+                                None if preport is None else preport.fleet))
 
 
 # ---------------------------------------------------------------------------

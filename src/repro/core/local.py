@@ -254,9 +254,33 @@ def _run_hops(vgrad, update, n_loss_extras, params, images, labels, offsets,
 class LocalTrainer:
     """Builds and caches the jitted local steps for one (model, FL) config."""
 
-    def __init__(self, cfg: ModelConfig, fl: FLConfig):
+    def __init__(self, cfg: ModelConfig, fl: FLConfig,
+                 grad_mask: Optional[Pytree] = None):
         self.cfg = cfg
         self.fl = fl
+
+        # ``grad_mask`` freezes parameter subtrees at construction (like
+        # DP-SGD, baked so mask-off builds literally today's jaxpr): a
+        # params-shaped 0/1 pytree multiplied into every gradient before
+        # the update. Zeroed leaves never move (zero grads leave momentum
+        # at zero too) — the head-only personalization mode
+        # (``PersonalizeConfig.mode="head"``) trains just the classifier
+        # layer this way, through every engine path unchanged.
+        if grad_mask is not None:
+            _mask = jax.tree.map(
+                lambda mk: jnp.asarray(mk, jnp.float32), grad_mask)
+
+            def _grad(loss_fn):
+                raw = jax.grad(loss_fn)
+
+                def masked(params, *args):
+                    return jax.tree.map(lambda g, mk: g * mk,
+                                        raw(params, *args), _mask)
+                return masked
+        else:
+            def _grad(loss_fn):
+                return jax.grad(loss_fn)
+        self._grad = _grad
 
         def plain_loss(params, batch):
             return classifier_loss(params, batch, cfg)
@@ -334,15 +358,15 @@ class LocalTrainer:
             if dp_one is None:
                 @jax.jit
                 def step(params, m, batch, lr, *extras):
-                    grads = jax.grad(loss_fn)(params, batch,
-                                              *extras[:n_loss_extras])
+                    grads = _grad(loss_fn)(params, batch,
+                                           *extras[:n_loss_extras])
                     return update(params, m, grads, lr,
                                   *extras[n_loss_extras:])
             else:
                 @jax.jit
                 def step(params, m, batch, lr, key, *extras):
-                    grads = jax.grad(loss_fn)(params, batch,
-                                              *extras[:n_loss_extras])
+                    grads = _grad(loss_fn)(params, batch,
+                                           *extras[:n_loss_extras])
                     grads = dp_one(grads, key)
                     return update(params, m, grads, lr,
                                   *extras[n_loss_extras:])
@@ -401,7 +425,7 @@ class LocalTrainer:
             # (all static — the default builds today's jaxpr, bit-for-bit).
             n_loss_extras = len(extra_axes)
             dp = dp_many is not None
-            vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + extra_axes)
+            vgrad = jax.vmap(_grad(loss_fn), in_axes=(0, 0) + extra_axes)
 
             @jax.jit
             def many(params, batches, valid, lr, *rest):
@@ -470,7 +494,7 @@ class LocalTrainer:
                             has_dscale=False, has_dref=False):
             n_loss_extras = len(extra_axes)
             dp = dp_many is not None
-            vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + extra_axes)
+            vgrad = jax.vmap(_grad(loss_fn), in_axes=(0, 0) + extra_axes)
 
             def many_hops(params, images, labels, offsets, rows, plans,
                           valid, lr, *rest):
@@ -850,7 +874,7 @@ class LocalTrainer:
         loss_fn, update, n_loss = self._many_spec[variant]
         axes = tuple(0 if stacked else None
                      for stacked in self._EXTRA_STACKED[variant][:n_loss])
-        vgrad = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0) + axes)
+        vgrad = jax.vmap(self._grad(loss_fn), in_axes=(0, 0) + axes)
         dp_many = self._dp_many
         dp = dp_many is not None
         robust = rspec[0] != "weighted_mean"

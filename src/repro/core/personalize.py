@@ -1,0 +1,217 @@
+"""Post-global personalization: fine-tune every client from the final
+global model as a ``(K, ...)`` stacked-params arena (ROADMAP item 4).
+
+The stage runs AFTER the last global round, outside the round loop, and
+reuses the training stack end to end instead of growing a parallel one:
+
+* **lane machinery** — each block of clients fine-tunes through
+  ``LocalTrainer.train_many_fused`` (broadcast seed, no aggregation), so a
+  whole block of per-client fine-tunes is ONE vmapped compiled dispatch
+  gathering its batches from the device-resident cohort arena;
+* **client stores** — blocks stage through the experiment's
+  ``ClientStore`` (``FLConfig.store``), so fleet size K stays decoupled
+  from device memory exactly like training: under ``store="host"`` /
+  ``"stream"`` only the block's shards are staged, and the NEXT block's
+  arena prefetches on the store's background thread while the current
+  dispatch is in flight;
+* **arena plumbing** — the personalized fleet accumulates into a
+  ``core.state.host_stack`` numpy arena via ``unstage_rows`` and persists
+  through the existing checkpoint layout (``pack_client_rows`` →
+  ``personalized.msgpack``, the ``algo_state.msgpack`` per-client format).
+
+Per-client evaluation is one more vmapped dispatch per block: each client
+gets ``eval_per_client`` label-matched draws from the global test pool
+(sampled proportional to the client's own label histogram — the per-client
+test distribution a deployed personalized model actually faces under the
+paper's non-IID partitions), and the same draws score the global model so
+the personalization lift is measured like for like.
+
+Everything here draws from ``PersonalizeConfig.seed`` — the stage's own
+stream, consumed after training ends — so the experiment RNG stream is
+untouched and personalize-off runs stay bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.local import LocalTrainer
+from repro.core.state import host_stack, pack_client_rows, unstage_rows
+from repro.data.pipeline import plan_epoch_indices, stack_plan_indices
+from repro.data.store import make_store
+from repro.models.small import head_grad_mask, small_model_apply
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class PersonalizeReport:
+    """The stage's outputs: the host ``(K, ...)`` personalized arena plus
+    the like-for-like per-client accuracy of the fleet and of the global
+    model it started from."""
+    fleet: Pytree                       # host (K, ...) stacked params
+    per_client_accuracy: np.ndarray     # (K,) personalized models
+    global_accuracy: np.ndarray         # (K,) the global model, same draws
+    dispatches: int = 0                 # compiled train dispatches (1/block)
+    seconds: float = 0.0                # fenced stage wall time
+
+    @property
+    def personalized_accuracy(self) -> float:
+        return float(self.per_client_accuracy.mean())
+
+    @property
+    def global_client_accuracy(self) -> float:
+        return float(self.global_accuracy.mean())
+
+
+def per_client_test_sets(
+    clients, test, n: int, num_classes: int, rng: np.random.Generator,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Label-matched test draws: client k gets ``n`` samples drawn from the
+    global test pool with class probabilities proportional to its own
+    shard's label histogram (classes absent from the pool renormalize
+    away). Returns ``(K, n, ...)`` images and ``(K, n)`` labels."""
+    by_class = [np.flatnonzero(test.labels == c) for c in range(num_classes)]
+    avail = np.asarray([len(b) > 0 for b in by_class], np.float64)
+    images = np.empty((len(clients), n) + test.images.shape[1:],
+                      test.images.dtype)
+    labels = np.empty((len(clients), n), test.labels.dtype)
+    for k, client in enumerate(clients):
+        hist = np.bincount(client.labels, minlength=num_classes)
+        p = hist * avail
+        if p.sum() == 0:                # empty shard: fall back to uniform
+            p = avail
+        p = p / p.sum()
+        cls = rng.choice(num_classes, size=n, p=p)
+        idx = np.asarray([by_class[c][rng.integers(len(by_class[c]))]
+                          for c in cls])
+        images[k] = test.images[idx]
+        labels[k] = test.labels[idx]
+    return images, labels
+
+
+def _block_accuracy_fns(cfg: ModelConfig):
+    """Two jitted per-client eval dispatches over a block: one vmapping a
+    ``(V, ...)`` stacked fleet, one broadcasting a single (global) tree —
+    each returns the (V,) per-client accuracy in ONE compiled call."""
+    def acc(params, images, labels):
+        logits = small_model_apply(params, images, cfg)
+        return jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                        .astype(jnp.float32))
+
+    stacked = jax.jit(jax.vmap(acc, in_axes=(0, 0, 0)))
+    shared = jax.jit(jax.vmap(acc, in_axes=(None, 0, 0)))
+    return stacked, shared
+
+
+def _blocks(total: int, size: int) -> List[np.ndarray]:
+    return [np.arange(s, min(s + size, total))
+            for s in range(0, total, size)]
+
+
+def personalize_fleet(
+    model_cfg: ModelConfig,
+    fl: FLConfig,
+    clients,
+    w_glob: Pytree,
+    test,
+    *,
+    store=None,
+) -> PersonalizeReport:
+    """Fine-tune every client from ``w_glob`` and score the fleet.
+
+    ``store`` reuses the experiment engine's ``ClientStore`` when it has
+    one (the fused engine); otherwise a fresh store of the configured
+    residency is built and closed here. Each block is one train dispatch
+    plus two eval dispatches (personalized stack + global baseline)."""
+    pcfg = fl.personalize
+    if not pcfg.active:
+        raise ValueError("personalize_fleet called with an inactive "
+                         "PersonalizeConfig (epochs=0)")
+    k = len(clients)
+    block = pcfg.block or (k if fl.store == "device" else min(k, 64))
+    batch_size = pcfg.batch_size or fl.batch_size
+    mask = (head_grad_mask(w_glob, model_cfg) if pcfg.mode == "head"
+            else None)
+    trainer = LocalTrainer(model_cfg, fl, grad_mask=mask)
+    own_store = store is None
+    if own_store:
+        store = make_store(fl.store, clients)
+    rng_plan = np.random.default_rng((pcfg.seed, 1))
+    rng_eval = np.random.default_rng((pcfg.seed, 2))
+
+    t0 = time.perf_counter()
+    arena = host_stack(w_glob, k)
+    acc_p = np.zeros(k, np.float64)
+    acc_g = np.zeros(k, np.float64)
+    acc_stacked, acc_shared = _block_accuracy_fns(model_cfg)
+    blocks = _blocks(k, block)
+    try:
+        for bi, ids in enumerate(blocks):
+            # plans draw in fleet id order (the sequential visit order of
+            # this stage), one (S, B) index plan per client
+            plans = [plan_epoch_indices(clients[i], batch_size, pcfg.epochs,
+                                        rng_plan) for i in ids]
+            rows, idx, valid = stack_plan_indices(plans, ids)
+            plane = store.arena(ids)
+            # H=1 hop axis: a block of per-client fine-tunes is exactly a
+            # star cohort visit with no aggregation — the (V, ...) trained
+            # stack IS the result
+            stack = trainer.train_many_fused(
+                w_glob, plane, rows[None], idx[None], valid[None],
+                lr=pcfg.lr, broadcast=True)
+            # overlap: hand the NEXT block's cohort to the store's staging
+            # thread while this block's dispatch is still in flight
+            if bi + 1 < len(blocks):
+                store.prefetch(blocks[bi + 1])
+            imgs, labs = per_client_test_sets(
+                [clients[i] for i in ids], test, pcfg.eval_per_client,
+                model_cfg.num_classes, rng_eval)
+            imgs_d, labs_d = jnp.asarray(imgs), jnp.asarray(labs)
+            acc_p[ids] = np.asarray(acc_stacked(stack, imgs_d, labs_d))
+            acc_g[ids] = np.asarray(acc_shared(w_glob, imgs_d, labs_d))
+            # unstage_rows device_gets the trained rows — the block's sync
+            # point, after which the host arena owns them
+            arena = unstage_rows(arena, ids, stack)
+    finally:
+        if own_store:
+            store.close()
+    return PersonalizeReport(
+        fleet=arena, per_client_accuracy=acc_p, global_accuracy=acc_g,
+        dispatches=trainer.dispatches, seconds=time.perf_counter() - t0)
+
+
+def save_personalized(ckdir: str, fleet: Pytree, num_clients: int) -> None:
+    """Persist the personalized arena through the existing checkpoint
+    layout: the ``{client_id: tree}`` per-client msgpack format of
+    ``algo_state.msgpack``, written as ``personalized.msgpack``."""
+    from repro.checkpoint.io import save
+    from repro.core.executor import _pack_state
+
+    seen = np.ones(num_clients + 1, bool)       # host arena: every row live
+    rows = pack_client_rows(fleet, seen)
+    save(f"{ckdir}/personalized.msgpack", _pack_state(rows))
+
+
+def restore_personalized(ckdir: str, w_like: Pytree,
+                         num_clients: int) -> Optional[Pytree]:
+    """Rebuild the host ``(K, ...)`` personalized arena from
+    ``personalized.msgpack`` (None when absent)."""
+    import os
+
+    from repro.checkpoint.io import restore
+    from repro.core.executor import _unpack_state
+    from repro.core.state import unpack_client_rows
+
+    path = f"{ckdir}/personalized.msgpack"
+    if not os.path.exists(path):
+        return None
+    rows = _unpack_state(restore(path))
+    arena, _ = unpack_client_rows(rows, w_like, num_clients, device=False)
+    return arena

@@ -22,7 +22,7 @@ def main(dryrun_dir: str = "experiments/dryrun") -> None:
             continue
         cfg = adapt_config(get_config(rec["arch"]), SHAPES[rec["shape"]])
         chips = 512 if rec["mesh"] == "2x16x16" else 256
-        for name, step in rec["steps"].items():
+        for step in rec["steps"].values():
             roof = build_roofline(
                 arch=rec["arch"], shape=SHAPES[rec["shape"]],
                 mesh_name=rec["mesh"], chips=chips,

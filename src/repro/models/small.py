@@ -103,6 +103,27 @@ def init_small_model(rng: jax.Array, cfg: ModelConfig) -> Pytree:
     return init_params(rng, small_model_specs(cfg))
 
 
+def head_param_names(cfg: ModelConfig) -> frozenset:
+    """Names of the classifier-head leaves — the final linear layer that
+    maps features to class logits. The head-only personalization mode
+    (``PersonalizeConfig.mode="head"``) trains exactly these leaves and
+    freezes the rest, so personalized clients keep the global model's
+    features and differ only in their decision layer."""
+    if cfg.family == "mlp":
+        n = len(cfg.mlp_hidden)
+        return frozenset((f"w{n}", f"b{n}"))
+    return frozenset(("fc1_w", "fc1_b"))
+
+
+def head_grad_mask(params: Pytree, cfg: ModelConfig) -> Pytree:
+    """Params-shaped 0/1 float mask: 1 on the classifier-head leaves, 0
+    elsewhere (``LocalTrainer(grad_mask=...)`` multiplies it into every
+    gradient, freezing the body)."""
+    head = head_param_names(cfg)
+    return {k: jnp.full(v.shape, float(k in head), jnp.float32)
+            for k, v in params.items()}
+
+
 def small_model_features(
     params: Pytree, images: jax.Array, cfg: ModelConfig
 ) -> jax.Array:

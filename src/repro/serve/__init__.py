@@ -1,0 +1,6 @@
+"""Fleet serving: many clients' personalized models behind one dispatch
+per step (see ``repro.serve.fleet``)."""
+from repro.serve.fleet import (
+    FleetClassifier, FleetDecoder, FleetParams, fleet_prefill_and_decode,
+    loop_classify, loop_prefill_and_decode,
+)

@@ -1,0 +1,376 @@
+"""Fleet serving engine: MANY clients' models, ONE dispatch per step.
+
+The personalization stage (``core.personalize``) ends with a ``(K, ...)``
+stacked-params arena — one model row per client. Serving that fleet with a
+python loop over models is exactly the dispatch-bound regime the training
+engines were built to kill: a request batch spanning ``V`` distinct
+clients costs ``V`` compiled calls per token. This module collapses it the
+same way the fused engine collapsed FL rounds:
+
+* **routing** — each request carries an int32 *lane* (its client id); every
+  jitted step gathers that request's params row from the stacked fleet via
+  ``jnp.take`` INSIDE the jit (the ``DeviceDataPlane`` batch-gather idiom),
+  so prefill and decode run over the whole request batch across all its
+  models as ONE dispatch per step, regardless of how many distinct models
+  the batch touches;
+* **residency** — ``FleetParams`` keeps the arena device-resident for
+  small fleets, or host-resident with per-batch cohort staging for fleets
+  larger than device memory: only the batch's distinct clients' rows are
+  uploaded (lanes remap to cohort-local rows), and ``prefetch`` stages the
+  NEXT batch's cohort on a one-worker background thread while the current
+  batch decodes — the double-buffered staging protocol of
+  ``data.store._StagedStore``, applied to params instead of pixels.
+
+Two consumers: ``FleetDecoder``/``fleet_prefill_and_decode`` serve LM
+fleets (transformer decode with per-request KV caches), and
+``FleetClassifier`` serves classifier fleets (the paper's personalized
+MLP/CNN models — one forward dispatch per request batch). The per-model
+python loops (``loop_prefill_and_decode``, ``loop_classify``) are kept as
+the parity/benchmark baselines.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import functools
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.small import small_model_apply
+from repro.models.transformer import decode_step, init_cache
+
+Pytree = Any
+
+
+def _fence(*trees) -> float:
+    """block_until_ready + clock read (the PR-9 timer discipline: JAX
+    async dispatch makes unfenced ``perf_counter`` reads a lie)."""
+    jax.block_until_ready(trees)
+    return time.perf_counter()
+
+
+class FleetParams:
+    """A ``(K, ...)`` stacked-params fleet with pluggable residency.
+
+    ``device=True`` uploads the stack once; lane ids ARE stack rows and
+    ``rows(lanes)`` is free. ``device=False`` keeps the arena host-side
+    (numpy): ``rows(lanes)`` uploads only the batch's distinct clients'
+    rows as a ``(V, ...)`` cohort stack and returns the lanes remapped to
+    cohort-local rows — the in-jit gather is untouched by the
+    virtualization, exactly like ``DeviceDataPlane``'s fleet-sized offsets
+    table. ``prefetch(lanes)`` builds the next batch's cohort on a
+    one-worker thread (double buffer) so staging hides behind the current
+    batch's decode wall.
+    """
+
+    def __init__(self, stacked: Pytree, device: bool = True):
+        leaves = jax.tree.leaves(stacked)
+        if not leaves:
+            raise ValueError("FleetParams needs a non-empty params pytree")
+        self.num_clients = int(leaves[0].shape[0])
+        self.device = device
+        self.stage_seconds = 0.0
+        self.overlapped_stage_seconds = 0.0
+        if device:
+            self._stack = jax.tree.map(jnp.asarray, stacked)
+            self._arena = None
+        else:
+            self._stack = None
+            self._arena = jax.tree.map(np.asarray, stacked)
+        # at most one resident cohort + one in-flight prefetch
+        self._cohort: Optional[Tuple[tuple, Pytree]] = None
+        self._pending = None
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+
+    @classmethod
+    def from_trees(cls, trees, device: bool = True) -> "FleetParams":
+        """Stack a list of per-client param trees into a fleet."""
+        stacked = jax.tree.map(lambda *xs: np.stack(
+            [np.asarray(x) for x in xs]), *trees)
+        return cls(stacked, device=device)
+
+    def model(self, lane: int) -> Pytree:
+        """One client's unstacked tree (the per-model loop baselines)."""
+        src = self._stack if self.device else self._arena
+        return jax.tree.map(lambda x: jnp.asarray(x[lane]), src)
+
+    @staticmethod
+    def _ids(lanes) -> np.ndarray:
+        return np.unique(np.asarray(lanes, np.int64))
+
+    def _build(self, ids: np.ndarray) -> Tuple[Pytree, float]:
+        t0 = time.perf_counter()
+        stack = jax.tree.map(lambda x: jnp.asarray(x[ids]), self._arena)
+        jax.block_until_ready(stack)
+        return stack, time.perf_counter() - t0
+
+    def prefetch(self, lanes) -> None:
+        """Start staging the cohort for a FUTURE ``rows(lanes)`` call in
+        the background (no-op for device-resident fleets)."""
+        if self.device:
+            return
+        ids = self._ids(lanes)
+        key = tuple(ids.tolist())
+        if (self._cohort is not None and self._cohort[0] == key) or (
+                self._pending is not None and self._pending[0] == key):
+            return
+        if self._pending is not None:       # superseded prefetch: drain it
+            self._pending[1].result()
+            self._pending = None
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="repro-fleet-stage")
+        self._pending = (key, self._pool.submit(self._build, ids))
+
+    def rows(self, lanes) -> Tuple[Pytree, jax.Array]:
+        """The device stack serving this batch + the batch's lane vector
+        remapped into it: ``(stack, local_lanes)`` such that request ``b``'s
+        params are ``stack[local_lanes[b]]``."""
+        lanes = np.asarray(lanes, np.int64)
+        if self.device:
+            return self._stack, jnp.asarray(lanes, jnp.int32)
+        ids = self._ids(lanes)
+        key = tuple(ids.tolist())
+        if self._cohort is None or self._cohort[0] != key:
+            pending, self._pending = self._pending, None
+            if pending is not None and pending[0] == key:
+                stack, secs = pending[1].result()
+                self.stage_seconds += secs
+                self.overlapped_stage_seconds += secs
+            else:
+                if pending is not None:     # stale prefetch for another set
+                    pending[1].result()
+                self._cohort = None     # free the old cohort BEFORE staging
+                stack, secs = self._build(ids)
+                self.stage_seconds += secs
+            self._cohort = (key, stack)
+        local = np.searchsorted(ids, lanes).astype(np.int32)
+        return self._cohort[1], jnp.asarray(local)
+
+    def close(self) -> None:
+        if self._pending is not None:
+            self._pending[1].result()
+            self._pending = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+
+# ---------------------------------------------------------------------------
+# LM fleets: batched prefill + per-token decode, one dispatch per step
+
+
+class FleetDecoder:
+    """Jitted fleet decode steps for one ``ModelConfig``.
+
+    Each request runs ``decode_step`` under ``jax.vmap`` with its OWN
+    params row (gathered in-jit by lane) and its own KV cache slice; the
+    whole batch is one compiled call per token. ``prefill`` is ONE
+    compiled dispatch too: a ``lax.scan`` over prompt positions inside the
+    jit fills every request's cache in a single call (the gather hoists
+    out of the scan — params are loop-invariant). ``dispatches`` counts
+    compiled-call invocations, like ``LocalTrainer.dispatches``."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dispatches = 0
+
+        def one(params, tok, cache, pos):
+            # tok (1, 1); cache leaves carry inner batch 1
+            logits, cache = decode_step(params, tok, cache, pos, cfg)
+            return logits[0, 0], cache                      # (V,)
+
+        vstep = jax.vmap(one, in_axes=(0, 0, 0, None))
+
+        def gather(stack, lanes):
+            return jax.tree.map(lambda x: jnp.take(x, lanes, axis=0), stack)
+
+        def step(stack, lanes, tok, cache, pos):
+            # tok: (B,) — the previous step's sampled tokens
+            p = gather(stack, lanes)
+            return vstep(p, tok[:, None, None], cache, pos)
+
+        def prefill(stack, lanes, prompts, cache):
+            p = gather(stack, lanes)
+
+            def body(c, x):
+                tok, i = x                                  # (B,), ()
+                logits, c = vstep(p, tok[:, None, None], c, i)
+                return c, logits
+
+            s0 = prompts.shape[1]
+            cache, logits = jax.lax.scan(
+                body, cache, (prompts.T, jnp.arange(s0)))
+            return logits[-1], cache                        # (B, V)
+
+        self._step = jax.jit(step)
+        self._prefill = jax.jit(prefill)
+
+    def new_cache(self, batch: int, max_len: int,
+                  dtype=jnp.float32) -> Pytree:
+        """Per-request caches: the single-model cache with a leading
+        request axis (inner batch 1 — each request decodes under its own
+        model)."""
+        one = init_cache(self.cfg, 1, max_len, dtype=dtype)
+        return jax.tree.map(
+            lambda x: jnp.zeros((batch,) + x.shape, x.dtype), one)
+
+    def prefill(self, stack, lanes, prompts, cache):
+        self.dispatches += 1
+        return self._prefill(stack, lanes, prompts, cache)
+
+    def decode_step(self, stack, lanes, tok, cache, pos):
+        self.dispatches += 1
+        return self._step(stack, lanes, tok, cache, pos)
+
+
+def fleet_prefill_and_decode(
+    cfg: ModelConfig,
+    fleet: FleetParams,
+    lanes,                        # (B,) int client ids — request routing
+    prompts: jax.Array,           # (B, S0) int32
+    *,
+    max_len: int,
+    new_tokens: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+    decoder: Optional[FleetDecoder] = None,
+) -> Tuple[jax.Array, dict]:
+    """Batched generation across many clients' models: ONE compiled
+    prefill dispatch, then ONE compiled dispatch per decoded token for the
+    whole batch — request ``b`` runs under client ``lanes[b]``'s model
+    throughout. Returns ``(tokens (B, S0+N), stats)``; pass a shared
+    ``decoder`` to reuse compiled steps across batches."""
+    b, s0 = prompts.shape
+    decoder = FleetDecoder(cfg) if decoder is None else decoder
+    stack, local = fleet.rows(lanes)
+    cache = decoder.new_cache(b, max_len)
+    rng = jax.random.PRNGKey(seed)
+
+    t0 = _fence(stack, prompts)
+    d0 = decoder.dispatches
+    last_logits, cache = decoder.prefill(stack, local, prompts, cache)
+    t1 = _fence(last_logits)
+    prefill_dispatches = decoder.dispatches - d0
+
+    d0 = decoder.dispatches
+    new = []
+    for i in range(new_tokens):
+        if temperature > 0:
+            rng, sub = jax.random.split(rng)
+            nxt = jax.random.categorical(sub, last_logits / temperature)
+        else:
+            nxt = jnp.argmax(last_logits, axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        new.append(nxt)
+        last_logits, cache = decoder.decode_step(
+            stack, local, nxt, cache, jnp.asarray(s0 + i))
+    # linear-cost token assembly: collect then join ONCE (the O(n^2)
+    # per-token concatenate this replaces re-copied the whole prefix
+    # every step)
+    toks = jnp.concatenate([prompts] + [n[:, None] for n in new], axis=1)
+    t2 = _fence(toks, last_logits)
+    decode_s = t2 - t1
+    return toks, {
+        "prefill_s": t1 - t0,
+        "decode_s": decode_s,
+        "decode_tok_s": b * new_tokens / max(decode_s, 1e-9),
+        "requests_s": b / max(t2 - t0, 1e-9),
+        "prefill_dispatches": prefill_dispatches,
+        "decode_dispatches_per_step": (decoder.dispatches - d0)
+        / max(new_tokens, 1),
+        "distinct_models": int(len(np.unique(np.asarray(lanes)))),
+    }
+
+
+def loop_prefill_and_decode(
+    cfg: ModelConfig,
+    fleet: FleetParams,
+    lanes,
+    prompts: jax.Array,
+    *,
+    max_len: int,
+    new_tokens: int,
+) -> Tuple[jax.Array, dict]:
+    """The per-model python loop baseline (greedy only): group requests by
+    client, run ``launch.serve.prefill_and_decode`` once per distinct
+    model. This is the dispatch-bound regime the stacked path kills —
+    cost grows with the number of distinct models in the batch."""
+    from repro.launch.serve import prefill_and_decode
+
+    lanes = np.asarray(lanes)
+    prompts_np = np.asarray(prompts)
+    out = np.zeros((len(lanes), prompts_np.shape[1] + new_tokens), np.int32)
+    t0 = _fence()
+    models = 0
+    for lane in np.unique(lanes):
+        sel = np.flatnonzero(lanes == lane)
+        toks, _ = prefill_and_decode(
+            cfg, fleet.model(int(lane)), jnp.asarray(prompts_np[sel]),
+            max_len=max_len, new_tokens=new_tokens)
+        out[sel] = np.asarray(toks)
+        models += 1
+    t1 = _fence()
+    return jnp.asarray(out), {
+        "total_s": t1 - t0,
+        "requests_s": len(lanes) / max(t1 - t0, 1e-9),
+        "distinct_models": models,
+    }
+
+
+# ---------------------------------------------------------------------------
+# classifier fleets: the paper's personalized MLP/CNN models
+
+
+class FleetClassifier:
+    """One-dispatch personalized classification: gather each request's
+    params row by lane inside the jit, run every request under its own
+    model via ``vmap``, return the ``(B, num_classes)`` logits — one
+    compiled call regardless of how many distinct clients the batch
+    spans."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dispatches = 0
+
+        def one(params, image):
+            return small_model_apply(params, image[None], cfg)[0]
+
+        vapply = jax.vmap(one)
+
+        def fn(stack, lanes, images):
+            p = jax.tree.map(lambda x: jnp.take(x, lanes, axis=0), stack)
+            return vapply(p, images)
+
+        self._fn = jax.jit(fn)
+
+    def __call__(self, fleet: FleetParams, lanes, images) -> jax.Array:
+        stack, local = fleet.rows(lanes)
+        self.dispatches += 1
+        return self._fn(stack, local, jnp.asarray(images))
+
+
+@functools.lru_cache(maxsize=8)
+def _loop_apply(cfg: ModelConfig):
+    return jax.jit(lambda p, x: small_model_apply(p, x, cfg))
+
+
+def loop_classify(cfg: ModelConfig, fleet: FleetParams, lanes,
+                  images) -> jax.Array:
+    """Per-model python loop baseline: extract each distinct client's
+    model from the fleet arena and run one jitted forward per model (the
+    compiled apply is cached across calls — the loop pays per-model
+    extraction and dispatch, not retracing)."""
+    apply = _loop_apply(cfg)
+    lanes = np.asarray(lanes)
+    images = np.asarray(images)
+    out = np.zeros((len(lanes), cfg.num_classes), np.float32)
+    for lane in np.unique(lanes):
+        sel = np.flatnonzero(lanes == lane)
+        out[sel] = np.asarray(apply(fleet.model(int(lane)),
+                                    jnp.asarray(images[sel])))
+    return jnp.asarray(out)

@@ -46,7 +46,7 @@ def _uneven_clients(sizes=SIZES, seed=0):
 
 
 def _assert_trees_close(a, b, atol=1e-5, msg=""):
-    for (ka, la), (kb, lb) in zip(
+    for (ka, la), (_kb, lb) in zip(
             jax.tree_util.tree_leaves_with_path(a),
             jax.tree_util.tree_leaves_with_path(b)):
         np.testing.assert_allclose(

@@ -84,7 +84,7 @@ def test_resume_restores_algorithm_state(algo):
                                  checkpoint_dir=ckdir, resume=True)
 
     assert resumed.history[-1].round == 4
-    for (pa, la), (pb, lb) in zip(
+    for (pa, la), (_pb, lb) in zip(
             jax.tree_util.tree_leaves_with_path(full.final_model),
             jax.tree_util.tree_leaves_with_path(resumed.final_model)):
         np.testing.assert_array_equal(

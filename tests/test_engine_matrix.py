@@ -19,7 +19,9 @@ from engine_parity import (
     run_subprocess_matrix,
 )
 
-from repro.configs.base import AdversaryConfig, ScenarioConfig
+from repro.configs.base import (
+    AdversaryConfig, PersonalizeConfig, ScenarioConfig,
+)
 
 ENGINES = ("batched", "sharded", "fused")
 
@@ -58,6 +60,24 @@ def test_scenario_off_row_is_bitexact(algo, overrides, engine):
     for ch in COMM_CHANNELS:
         assert getattr(m_b, ch) == getattr(m_o, ch), (algo, engine, ch)
     assert m_b.sim_seconds == m_o.sim_seconds, (algo, engine)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("algo,overrides", CASES)
+def test_personalize_off_row_is_bitexact(algo, overrides, engine):
+    """The personalize-off pin (PR 10's bit-exactness acceptance): an
+    EXPLICIT inactive ``PersonalizeConfig()`` must be bit-identical to the
+    plain rows — the stage runs after the round loop on its own seed
+    streams, and the inactive default executes no code and draws nothing
+    from the experiment RNG stream."""
+    base = tuple(overrides.items())
+    off = base + (("personalize", PersonalizeConfig()),)
+    w_b, m_b, s_b, _, _ = run_round(algo, engine, base)
+    w_o, m_o, s_o, _, _ = run_round(algo, engine, off)
+    assert s_b == s_o, (algo, engine)
+    assert max_diff(w_b, w_o) == 0.0, (algo, engine)
+    for ch in COMM_CHANNELS:
+        assert getattr(m_b, ch) == getattr(m_o, ch), (algo, engine, ch)
 
 
 @pytest.mark.parametrize("engine", ENGINES)

@@ -1,0 +1,191 @@
+"""Personalization stage contracts (core.personalize).
+
+* config validation and the inactive default;
+* head-only mode freezes every body leaf bit-exactly (gradient masking);
+* one compiled train dispatch per client block, pinned;
+* label-matched per-client eval draws follow the client's histogram;
+* the stage surfaces through ``ExperimentResult`` and the checkpoint
+  round-trips through ``personalized.msgpack``;
+* host-staged stores produce the BIT-EXACT same fleet as device stores.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import FLConfig, PersonalizeConfig
+from repro.core.executor import run_experiment
+from repro.core.personalize import (
+    per_client_test_sets,
+    personalize_fleet,
+    restore_personalized,
+    save_personalized,
+)
+from repro.data.pipeline import make_clients
+from repro.data.synthetic import make_task
+from repro.models.small import head_param_names, init_small_model
+
+CFG = get_config("fedsr-mlp")
+K = 8
+
+
+def _fixtures(seed=0, train_per_class=16):
+    train, test = make_task("mnist_like", train_per_class=train_per_class,
+                            test_per_class=8, seed=seed)
+    rng = np.random.default_rng(seed)
+    clients = make_clients(train, scheme="dirichlet", num_devices=K,
+                           rng=rng, xi=0.5, alpha=0.3)
+    w = init_small_model(jax.random.PRNGKey(seed), CFG)
+    return train, test, clients, w
+
+
+def _fl(**pers):
+    return FLConfig(algorithm="fedavg", num_devices=K, num_edges=2,
+                    rounds=1, local_epochs=1, batch_size=8, engine="fused",
+                    partition="dirichlet", alpha=0.3,
+                    personalize=PersonalizeConfig(**pers))
+
+
+def test_config_validation():
+    assert not PersonalizeConfig().active           # default: off
+    assert PersonalizeConfig(epochs=1).active
+    with pytest.raises(ValueError):
+        PersonalizeConfig(epochs=-1)
+    with pytest.raises(ValueError):
+        PersonalizeConfig(lr=0.0)
+    with pytest.raises(ValueError):
+        PersonalizeConfig(mode="tail")
+    with pytest.raises(ValueError):
+        PersonalizeConfig(block=-1)
+    with pytest.raises(ValueError):
+        personalize_fleet(CFG, _fl(), [], {}, None)  # inactive config
+
+
+def test_head_mode_freezes_body_bitexact():
+    _, test, clients, w = _fixtures()
+    fl = _fl(epochs=2, lr=0.05, mode="head", eval_per_client=16)
+    report = personalize_fleet(CFG, fl, clients, w, test)
+    head = head_param_names(CFG)
+    for name, leaf in report.fleet.items():
+        base = np.asarray(w[name])
+        if name in head:
+            # every client's head must actually have trained
+            moved = np.abs(leaf - base[None]).reshape(K, -1).max(axis=1)
+            assert (moved > 0).all(), name
+        else:
+            # body rows are the global leaf, bit for bit
+            np.testing.assert_array_equal(
+                leaf, np.broadcast_to(base, leaf.shape), err_msg=name)
+
+
+def test_full_mode_trains_every_leaf():
+    _, test, clients, w = _fixtures()
+    fl = _fl(epochs=1, lr=0.05, eval_per_client=16)
+    report = personalize_fleet(CFG, fl, clients, w, test)
+    for name, leaf in report.fleet.items():
+        moved = np.abs(leaf - np.asarray(w[name])[None]).reshape(K, -1)
+        assert (moved.max(axis=1) > 0).all(), name
+
+
+def test_one_train_dispatch_per_block():
+    _, test, clients, w = _fixtures()
+    for block, n_blocks in ((K, 1), (3, 3)):     # ceil(8/3) = 3
+        fl = _fl(epochs=1, lr=0.05, block=block, eval_per_client=16)
+        report = personalize_fleet(CFG, fl, clients, w, test)
+        assert report.dispatches == n_blocks
+        assert report.per_client_accuracy.shape == (K,)
+        assert report.seconds > 0
+
+
+def test_blocked_fleet_matches_whole_fleet_bitexact():
+    _, test, clients, w = _fixtures()
+    whole = personalize_fleet(
+        CFG, _fl(epochs=1, lr=0.05, block=K, eval_per_client=16),
+        clients, w, test)
+    blocked = personalize_fleet(
+        CFG, _fl(epochs=1, lr=0.05, block=3, eval_per_client=16),
+        clients, w, test)
+    for name in whole.fleet:
+        np.testing.assert_array_equal(
+            whole.fleet[name], blocked.fleet[name], err_msg=name)
+    np.testing.assert_array_equal(
+        whole.per_client_accuracy, blocked.per_client_accuracy)
+
+
+def test_staged_store_matches_device_store_bitexact():
+    _, test, clients, w = _fixtures()
+    fleets = {}
+    for store in ("device", "host", "stream"):
+        fl = dataclasses.replace(
+            _fl(epochs=1, lr=0.05, block=3, eval_per_client=16), store=store)
+        fleets[store] = personalize_fleet(CFG, fl, clients, w, test).fleet
+    for store in ("host", "stream"):
+        for name in fleets["device"]:
+            np.testing.assert_array_equal(
+                fleets["device"][name], fleets[store][name],
+                err_msg=f"{store}:{name}")
+
+
+def test_per_client_test_sets_follow_client_histograms():
+    _, test, clients, _ = _fixtures(train_per_class=32)
+    rng = np.random.default_rng(0)
+    n = 256
+    images, labels = per_client_test_sets(
+        clients, test, n, CFG.num_classes, rng)
+    assert images.shape == (K, n) + test.images.shape[1:]
+    assert labels.shape == (K, n)
+    for k, client in enumerate(clients):
+        present = set(np.unique(client.labels).tolist())
+        drawn = set(np.unique(labels[k]).tolist())
+        assert drawn <= present        # only the client's own classes
+    # draws carry the actual test images for their labels
+    flat = test.images.reshape(len(test.images), -1)
+    probe = images[0, 0].reshape(-1)
+    match = np.flatnonzero((flat == probe).all(axis=1))
+    assert len(match) > 0
+    assert (test.labels[match] == labels[0, 0]).any()
+
+
+def test_experiment_surfaces_and_checkpoints_personalization(tmp_path):
+    train, test = make_task("mnist_like", train_per_class=16,
+                            test_per_class=8, seed=0)
+    fl = dataclasses.replace(
+        _fl(epochs=1, lr=0.05, eval_per_client=16), rounds=2)
+    ck = str(tmp_path / "ck")
+    res = run_experiment(task="mnist_like", model_cfg=CFG, fl=fl,
+                         train=train, test=test, checkpoint_dir=ck)
+    assert res.personalized_accuracy is not None
+    assert res.global_client_accuracy is not None
+    assert 0.0 <= res.personalized_accuracy <= 1.0
+    leaves = jax.tree.leaves(res.personalized_fleet)
+    assert leaves and leaves[0].shape[0] == K
+    # round-trip through personalized.msgpack
+    w_like = jax.tree.map(lambda x: x[0], res.personalized_fleet)
+    back = restore_personalized(ck, w_like, K)
+    for name in res.personalized_fleet:
+        np.testing.assert_array_equal(res.personalized_fleet[name],
+                                      back[name], err_msg=name)
+    assert restore_personalized(str(tmp_path / "nope"), w_like, K) is None
+
+
+def test_personalize_off_runs_report_nothing():
+    train, test = make_task("mnist_like", train_per_class=8,
+                            test_per_class=4, seed=0)
+    res = run_experiment(task="mnist_like", model_cfg=CFG, fl=_fl(),
+                         train=train, test=test)
+    assert res.personalized_accuracy is None
+    assert res.personalized_fleet is None
+
+
+def test_save_restore_roundtrip_standalone(tmp_path):
+    _, test, clients, w = _fixtures()
+    report = personalize_fleet(
+        CFG, _fl(epochs=1, lr=0.05, eval_per_client=16), clients, w, test)
+    save_personalized(str(tmp_path), report.fleet, K)
+    back = restore_personalized(str(tmp_path), w, K)
+    for name in report.fleet:
+        np.testing.assert_array_equal(report.fleet[name], back[name],
+                                      err_msg=name)
